@@ -1,0 +1,107 @@
+"""Benchmark entry point: one section per paper table/claim.
+
+  speedup    — SI S2 analytic speedup model, 3 use cases (Eqs. 1-13)
+  overhead   — §3.1 exchange-loop overhead vs committee inference
+  scaling    — §2 oracle/generator pool scaling
+  kernels    — Pallas-path microbenchmarks (XLA schedule, host timing)
+
+``python -m benchmarks.run`` runs everything; ``--only <name>`` filters.
+The roofline/dry-run tables (launch/roofline.py) are separate because they
+need the 512-device XLA_FLAGS subprocess.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def _section(title: str):
+    print(f"\n{'=' * 70}\n# {title}\n{'=' * 70}", flush=True)
+
+
+def bench_speedup(simulate: bool):
+    from benchmarks import speedup_usecases
+    _section("SI S2 speedup model (3 use cases)")
+    sys.argv = ["x"] + (["--simulate"] if simulate else [])
+    speedup_usecases.main()
+
+
+def bench_overhead():
+    from benchmarks import overhead
+    _section("Exchange-loop overhead vs committee inference (paper §3.1)")
+    overhead.main()
+
+
+def bench_scaling():
+    from benchmarks import scaling
+    _section("Oracle / generator pool scaling (paper §2)")
+    scaling.main()
+
+
+def bench_kernels():
+    _section("Kernel microbenchmarks (XLA schedule on host)")
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels import ops
+
+    rng = jax.random.PRNGKey(0)
+
+    def timeit(fn, *args, iters=5):
+        out = fn(*args)
+        (out[0] if isinstance(out, tuple) else out).block_until_ready()
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            out = fn(*args)
+            (out[0] if isinstance(out, tuple) else out).block_until_ready()
+        return (time.perf_counter() - t0) / iters
+
+    print("name,ms_per_call,notes")
+    # f32 on host: CPU has no native bf16 — these timings are schedule
+    # sanity only; real numbers come from the roofline (TPU target).
+    B, T, H, KV, D = 1, 2048, 16, 4, 128
+    ks = jax.random.split(rng, 3)
+    q = jax.random.normal(ks[0], (B, T, H, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, T, KV, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, T, KV, D), jnp.float32)
+    att = jax.jit(lambda q, k, v: ops.attention(q, k, v, causal=True))
+    print(f"attention_2k_gqa,{timeit(att, q, k, v) * 1e3:.2f},"
+          f"B{B} T{T} H{H}/{KV} D{D}")
+
+    Hn, N = 8, 64
+    r = jax.random.normal(ks[0], (B, T, Hn, N))
+    w = jax.random.uniform(ks[1], (B, T, Hn, N), minval=0.5, maxval=0.99)
+    u = jax.random.normal(ks[2], (Hn, N))
+    wkv = jax.jit(lambda r, w: ops.wkv6(r, r, r, w, u))
+    print(f"wkv6_2k,{timeit(wkv, r, w) * 1e3:.2f},chunked linear attention")
+
+    P, Ns = 64, 16
+    x = jax.random.normal(ks[0], (B, T, Hn, P))
+    a = jax.random.uniform(ks[1], (B, T, Hn), minval=0.5, maxval=0.999)
+    Bm = jax.random.normal(ks[2], (B, T, Hn, Ns))
+    ssd = jax.jit(lambda x, a, Bm: ops.ssd(x, a, Bm, Bm))
+    print(f"ssd_2k,{timeit(ssd, x, a, Bm) * 1e3:.2f},chunked SSD scan")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    choices=["speedup", "overhead", "scaling", "kernels"])
+    ap.add_argument("--simulate", action="store_true",
+                    help="run the measured PAL-runtime speedup simulation")
+    args = ap.parse_args()
+
+    t0 = time.time()
+    if args.only in (None, "speedup"):
+        bench_speedup(args.simulate)
+    if args.only in (None, "overhead"):
+        bench_overhead()
+    if args.only in (None, "scaling"):
+        bench_scaling()
+    if args.only in (None, "kernels"):
+        bench_kernels()
+    print(f"\n# total benchmark wall time: {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,125 @@
+"""Benchmark: oracle/generator pool scaling (paper §2, Fig. 2).
+
+Measures labeled-samples-per-second as the oracle pool grows (strong
+scaling of the labeling stage) and exchange iterations/s as the generator
+pool grows — the two pools the paper parallelizes.
+"""
+from __future__ import annotations
+
+import csv
+import sys
+import tempfile
+import time
+
+import numpy as np
+
+from repro.configs.pal_potential import PALRunConfig
+from repro.core import PAL, UserGene, UserModel, UserOracle
+
+T_ORACLE = 0.01
+
+
+class Gene(UserGene):
+    def __init__(self, rank, rd):
+        super().__init__(rank, rd)
+        self.rng = np.random.RandomState(rank)
+
+    def generate_new_data(self, d):
+        time.sleep(0.0005)   # yield: keep the exchange thread from starving
+        return False, self.rng.randn(4).astype(np.float32)  # oracle workers
+
+
+class Model(UserModel):
+    def __init__(self, rank, rd, dev, mode):
+        super().__init__(rank, rd, dev, mode)
+        self.w = np.eye(4)
+
+    def predict(self, ld):
+        return [np.asarray(x) @ self.w for x in ld]
+
+    def update(self, a):
+        pass
+
+    def get_weight(self):
+        return self.w.reshape(-1).astype(np.float32)
+
+    def get_weight_size(self):
+        return 16
+
+    def add_trainingset(self, d):
+        pass
+
+    def retrain(self, req):
+        time.sleep(0.01)
+        return False
+
+
+class Oracle(UserOracle):
+    def run_calc(self, inp):
+        time.sleep(T_ORACLE)
+        return inp, np.asarray(inp) * 2
+
+
+def oracle_scaling(pool_sizes=(1, 2, 4, 8), seconds=3.0):
+    rows = []
+    for p in pool_sizes:
+        cfg = PALRunConfig(result_dir=tempfile.mkdtemp(), gene_process=8,
+                           orcl_process=p, pred_process=1, ml_process=1,
+                           retrain_size=10 ** 9, std_threshold=-1.0,
+                           dynamic_oracle_list=False, oracle_timeout=1e6)
+        pal = PAL(cfg, make_generator=Gene, make_model=Model,
+                  make_oracle=Oracle)
+        pal.start()
+        time.sleep(0.5)                      # warmup
+        n0 = pal.train_buffer.total_labeled
+        t0 = time.perf_counter()
+        time.sleep(seconds)
+        rate = (pal.train_buffer.total_labeled - n0) / (
+            time.perf_counter() - t0)
+        pal.shutdown()
+        ideal = p / T_ORACLE
+        rows.append({"oracle_workers": p,
+                     "labels_per_s": round(rate, 1),
+                     "ideal_labels_per_s": round(ideal, 1),
+                     "efficiency": round(rate / ideal, 3)})
+    return rows
+
+
+def generator_scaling(pool_sizes=(1, 4, 16, 64), seconds=2.0):
+    rows = []
+    for g in pool_sizes:
+        cfg = PALRunConfig(result_dir=tempfile.mkdtemp(), gene_process=g,
+                           orcl_process=1, pred_process=1, ml_process=1,
+                           retrain_size=10 ** 9, std_threshold=1e9,
+                           dynamic_oracle_list=False, oracle_timeout=1e6)
+        pal = PAL(cfg, make_generator=Gene, make_model=Model,
+                  make_oracle=Oracle)
+        pal.start()
+        time.sleep(0.3)
+        n0 = pal.exchange.iteration
+        t0 = time.perf_counter()
+        time.sleep(seconds)
+        it_rate = (pal.exchange.iteration - n0) / (time.perf_counter() - t0)
+        pal.shutdown()
+        rows.append({"generators": g,
+                     "exchange_iters_per_s": round(it_rate, 1),
+                     "proposals_per_s": round(it_rate * g, 1)})
+    return rows
+
+
+def main():
+    rows = oracle_scaling()
+    wr = csv.DictWriter(sys.stdout, fieldnames=rows[0].keys())
+    wr.writeheader()
+    for r in rows:
+        wr.writerow(r)
+    print()
+    rows = generator_scaling()
+    wr = csv.DictWriter(sys.stdout, fieldnames=rows[0].keys())
+    wr.writeheader()
+    for r in rows:
+        wr.writerow(r)
+
+
+if __name__ == "__main__":
+    main()

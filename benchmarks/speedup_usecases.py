@@ -1,0 +1,184 @@
+"""Benchmark: the paper's SI S2 speedup model (Eqs. 1-13) — analytic table
+AND a measured simulation that runs the three use cases through the real PAL
+runtime with sleep-calibrated kernels, comparing measured speedup to the
+model's lower bound.
+
+Reproduces: SI S2.2 (Use Case 1: S -> 1+P/N = 2; Use Case 2: S -> 1;
+Use Case 3: S -> 3).
+"""
+from __future__ import annotations
+
+import argparse
+import csv
+import io
+import sys
+import tempfile
+import time
+from typing import Dict
+
+import numpy as np
+
+from repro.configs.pal_potential import PALRunConfig
+from repro.core import PAL, UserGene, UserModel, UserOracle
+from repro.core import speedup as sp
+
+
+def analytic_table() -> list:
+    rows = []
+    expected = sp.expected_speedups()
+    for name, w in sp.USE_CASES.items():
+        rows.append({
+            "use_case": name,
+            "t_oracle_s": w.t_oracle, "t_train_s": w.t_train,
+            "t_gen_s": w.t_gen, "N": w.n_samples, "P": w.n_workers,
+            "T_serial_s": round(sp.t_serial(w), 1),
+            "T_parallel_s": round(sp.t_parallel(w), 1),
+            "speedup": round(sp.speedup(w), 3),
+            "paper_expected": expected[name],
+            "bottleneck": sp.bottleneck(w),
+        })
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# measured simulation (scaled-down seconds, same ratios)
+# ---------------------------------------------------------------------------
+
+SCALE = 2500.0   # 1 paper-second = 0.4 ms simulated
+
+
+class SimGene(UserGene):
+    # SI S2 defines t_gen as ONE ROUND of generation producing the round's
+    # N candidates -> per-proposal cost is t_gen / N.
+    t_gen_per_sample = 0.0
+    limit = 10 ** 9
+
+    def __init__(self, rank, rd):
+        super().__init__(rank, rd)
+        self.counter = 0
+        self.rng = np.random.RandomState(rank)
+
+    def generate_new_data(self, data_to_gene):
+        self.counter += 1
+        time.sleep(self.t_gen_per_sample / SCALE)
+        if self.counter > self.limit:
+            return True, np.zeros(2, np.float32)
+        return False, self.rng.randn(2).astype(np.float32)
+
+
+class SimModel(UserModel):
+    t_train = 0.0
+
+    def __init__(self, rank, rd, dev, mode):
+        super().__init__(rank, rd, dev, mode)
+        self.w = np.random.RandomState(rank + (9 if mode == "train" else 0)
+                                       ).randn(2, 2)
+
+    def predict(self, ld):
+        return [np.asarray(x) @ self.w for x in ld]
+
+    def update(self, arr):
+        self.w = arr.reshape(2, 2)
+
+    def get_weight(self):
+        return self.w.reshape(-1).astype(np.float32)
+
+    def get_weight_size(self):
+        return 4
+
+    def add_trainingset(self, dps):
+        pass
+
+    def retrain(self, req):
+        deadline = time.time() + self.t_train / SCALE
+        while time.time() < deadline:
+            if req.test():
+                break
+            time.sleep(0.001)
+        return False
+
+
+class SimOracle(UserOracle):
+    t_oracle = 0.0
+
+    def run_calc(self, inp):
+        time.sleep(self.t_oracle / SCALE)
+        return inp, (np.asarray(inp) * 2).astype(np.float32)
+
+
+def measured_speedup(name: str, w: sp.WorkloadParams,
+                     al_rounds: int = 4) -> Dict[str, float]:
+    """Run serial then parallel versions of `al_rounds` AL iterations; each
+    iteration labels N samples, trains once, generates once."""
+    n, p = w.n_samples, w.n_workers
+
+    # ---- serial: (N/P)*t_oracle + t_train + t_gen per round, directly
+    t0 = time.perf_counter()
+    for _ in range(al_rounds):
+        for _ in range(int(np.ceil(n / p))):
+            time.sleep(w.t_oracle / SCALE)      # P workers in lockstep
+        time.sleep(w.t_train / SCALE)
+        time.sleep(w.t_gen / SCALE)
+    t_serial = time.perf_counter() - t0
+
+    # ---- parallel: PAL with everything overlapped
+    gene_cls = type("G", (SimGene,),
+                    {"t_gen_per_sample": w.t_gen / w.n_samples})
+    model_cls = type("M", (SimModel,), {"t_train": w.t_train})
+    orcl_cls = type("O", (SimOracle,), {"t_oracle": w.t_oracle})
+
+    cfg = PALRunConfig(
+        result_dir=tempfile.mkdtemp(), gene_process=1, orcl_process=p,
+        pred_process=1, ml_process=1, retrain_size=n,
+        std_threshold=-1.0,        # every sample goes to the oracle
+        weight_sync_every=1, dynamic_oracle_list=False,
+        exchange_min_interval=0.0,  # the sim's own sleeps pace the loop
+        oracle_timeout=10 ** 6)
+    pal = PAL(cfg, make_generator=gene_cls, make_model=model_cls,
+              make_oracle=orcl_cls)
+    pal.start()
+    # run until al_rounds * n samples are labeled
+    target = al_rounds * n
+    t0 = time.perf_counter()
+    while pal.train_buffer.total_labeled < target:
+        time.sleep(0.001)
+        if time.perf_counter() - t0 > 120:
+            break
+    t_parallel = time.perf_counter() - t0
+    pal.shutdown()
+
+    model_lb = sp.speedup(w)
+    return {
+        "use_case": name,
+        "t_serial_s": round(t_serial, 3),
+        "t_parallel_s": round(t_parallel, 3),
+        "measured_speedup": round(t_serial / t_parallel, 2),
+        "model_speedup_lower_bound": round(model_lb, 2),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--simulate", action="store_true")
+    args = ap.parse_args()
+
+    rows = analytic_table()
+    wr = csv.DictWriter(sys.stdout, fieldnames=rows[0].keys())
+    wr.writeheader()
+    for r in rows:
+        wr.writerow(r)
+
+    if args.simulate:
+        print("\n# measured (scaled-time simulation through the real "
+              "PAL runtime)")
+        out = []
+        for name, w in sp.USE_CASES.items():
+            out.append(measured_speedup(name, w))
+        wr = csv.DictWriter(sys.stdout, fieldnames=out[0].keys())
+        wr.writeheader()
+        for r in out:
+            wr.writerow(r)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,159 @@
+"""PAL quickstart — the paper's workflow in ~100 lines (photodynamics-style,
+§3.1): a committee of MLP potentials drives parallel MD-like generators;
+uncertain geometries go to an analytic 'DFT' oracle; trainers continuously
+refit; weights flow back to the prediction committee. Patience policy
+included (§2.2).
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import sys
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+sys.path.insert(0, "src")
+
+from repro.configs.pal_potential import PALRunConfig, PotentialConfig
+from repro.core import PAL, UserGene, UserModel, UserOracle
+from repro.core import committee as cmte
+from repro.models import potential as pot
+
+PCFG = PotentialConfig(n_atoms=6, committee_size=4, hidden=(64, 64), n_rbf=24)
+
+
+class MDGenerator(UserGene):
+    """One MD trajectory: Euler steps on committee-mean forces; restarts to
+    the last trusted geometry when the controller flags high uncertainty
+    past patience (it then receives data_to_gene=None)."""
+
+    def __init__(self, rank, result_dir):
+        super().__init__(rank, result_dir)
+        rng = np.random.RandomState(rank)
+        lattice = np.stack(np.meshgrid([0, 1.3], [0, 1.3], [0, 1.3]),
+                           -1).reshape(-1, 3)[:PCFG.n_atoms]
+        self.x0 = (lattice + rng.randn(PCFG.n_atoms, 3) * 0.05).astype(
+            np.float32)
+        self.x = self.x0.copy()
+        self.rng = rng
+        self.steps = 0
+        self.restarts = 0
+
+    def generate_new_data(self, data_to_gene):
+        self.steps += 1
+        if self.steps > 200_000:        # effectively timeout-bounded
+            return True, self.x.reshape(-1)
+        if data_to_gene is None and self.steps > 1:
+            self.x = self.x0.copy()              # patience exceeded: restart
+            self.restarts += 1
+        elif data_to_gene is not None:
+            forces = np.clip(data_to_gene.reshape(PCFG.n_atoms, 3), -20, 20)
+            self.x = self.x + 0.002 * forces \
+                + self.rng.randn(*self.x.shape).astype(np.float32) * 0.01
+        return False, self.x.reshape(-1).astype(np.float32)
+
+
+class CommitteePotential(UserModel):
+    """Prediction & training kernel: MLP potential committee member."""
+
+    def __init__(self, rank, result_dir, i_device, mode):
+        super().__init__(rank, result_dir, i_device, mode)
+        self.params = pot.init(PCFG, jax.random.PRNGKey(
+            rank + (1000 if mode == "train" else 0)))
+        self.x_train, self.y_train = [], []
+
+        def forces(p, flat):
+            _, f = pot.energy_forces(p, flat.reshape(PCFG.n_atoms, 3), PCFG)
+            return f.reshape(-1)
+
+        self._forces = jax.jit(jax.vmap(forces, in_axes=(None, 0)))
+
+        def loss(p, xs, ys):
+            pred = jax.vmap(lambda x: forces(p, x), in_axes=0)(xs)
+            return jnp.mean((pred - ys) ** 2)
+
+        self._grad = jax.jit(jax.value_and_grad(loss))
+
+    # --- prediction side -------------------------------------------------
+    def predict(self, list_data_to_pred):
+        x = jnp.asarray(np.stack(list_data_to_pred))
+        return list(np.asarray(self._forces(self.params, x)))
+
+    def update(self, weight_array):
+        self.params = cmte.update(self.params, weight_array)
+
+    def get_weight_size(self):
+        return cmte.get_weight_size(self.params)
+
+    # --- training side ----------------------------------------------------
+    def get_weight(self):
+        return cmte.get_weight(self.params)
+
+    def add_trainingset(self, datapoints):
+        for inp, lab in datapoints:
+            self.x_train.append(inp)
+            self.y_train.append(lab)
+
+    BATCH = 64   # fixed minibatch: one jit shape regardless of set growth
+
+    def retrain(self, req_data, max_steps=400):
+        rng = np.random.RandomState(len(self.x_train))
+        xs_all = np.stack(self.x_train)
+        ys_all = np.stack(self.y_train)
+        lr = 1e-3
+        for _ in range(max_steps):
+            idx = rng.randint(0, len(xs_all), size=self.BATCH)
+            xs = jnp.asarray(xs_all[idx])
+            ys = jnp.asarray(ys_all[idx])
+            l, g = self._grad(self.params, xs, ys)
+            self.params = jax.tree.map(lambda p, gg: p - lr * gg,
+                                       self.params, g)
+            if req_data.Test():       # new labeled data arrived -> stop
+                break
+        return False
+
+
+class LJOracle(UserOracle):
+    """Analytic Lennard-Jones cluster = the 'DFT' ground truth stand-in."""
+
+    def __init__(self, rank, result_dir):
+        super().__init__(rank, result_dir)
+        # jit once: unjitted op-by-op dispatch starves behind the busy
+        # exchange/training threads on the single host device
+        self._ef = jax.jit(pot.lj_energy_forces)
+
+    def run_calc(self, input_for_orcl):
+        coords = jnp.asarray(input_for_orcl.reshape(PCFG.n_atoms, 3))
+        _, f = self._ef(coords)
+        return input_for_orcl, np.asarray(f).reshape(-1).astype(np.float32)
+
+
+def main():
+    cfg = PALRunConfig(
+        result_dir=tempfile.mkdtemp(prefix="pal_quickstart_"),
+        gene_process=8, orcl_process=4, pred_process=4, ml_process=4,
+        retrain_size=16, std_threshold=0.25, patience=5,
+        weight_sync_every=1, checkpoint_every=10.0)
+    pal = PAL(cfg, make_generator=MDGenerator,
+              make_model=CommitteePotential, make_oracle=LJOracle)
+    print("running PAL (8 MD generators, 4-NN committee, 4 LJ oracles)...")
+    token = pal.run(timeout=45)
+    rep = pal.report()
+    print(f"stopped by: {token}")
+    print(f"exchange iterations : {rep['counters'].get('exchange.iterations')}")
+    print(f"labeled by oracle   : {rep['labeled_total']}")
+    print(f"retrain rounds      : {rep['counters'].get('train.retrains')}")
+    print(f"weight publishes    : {rep['weight_publishes']}")
+    print(f"weight refreshes    : "
+          f"{rep['counters'].get('prediction.weight_refreshes')}")
+    print(f"generator restarts  : "
+          f"{sum(g.restarts for g in pal.generators)}")
+    print(f"AL checkpoints      : {pal.checkpointer.saves}")
+    assert rep["labeled_total"] > 0 and rep["weight_publishes"] > 0
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from repro.checkpoint.pytree_ckpt import (  # noqa: F401
+    AsyncCheckpointer, load_checkpoint, save_checkpoint,
+)

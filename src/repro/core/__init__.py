@@ -1,0 +1,19 @@
+"""PAL — the paper's primary contribution: a parallel, asynchronous,
+modular active-learning workflow (five kernels + two sub-controllers).
+
+Public surface:
+  transport     — MPI-shaped non-blocking channels (isend/irecv/Test)
+  api           — UserModel / UserGene / UserOracle kernel interfaces (S4–S7)
+  buffers       — oracle input buffer, retrain_size training buffer, rolling
+  committee     — vmapped committee + the paper's 1-D weight packing
+  selection     — prediction_check / adjust_input_for_oracle / patience
+  weight_sync   — versioned training->prediction weight publication
+  controller    — Exchange + Manager sub-controllers
+  runtime       — PAL: threads, fault tolerance, elastic pools, checkpoints
+  speedup       — the SI S2 analytic speedup model
+"""
+from repro.core.api import UserGene, UserModel, UserOracle  # noqa: F401
+from repro.core.runtime import PAL  # noqa: F401
+from repro.core.speedup import WorkloadParams  # noqa: F401
+# NOTE: the speedup() function is NOT re-exported here -- it would shadow the
+# `repro.core.speedup` submodule attribute.  Use repro.core.speedup.speedup.

@@ -1,0 +1,138 @@
+"""Committee (query-by-committee) machinery — paper §2.1/§3.1.
+
+The paper runs one MPI rank per committee member; on TPU an ensemble of K
+models is ONE SPMD program: parameters are stacked on a leading committee
+axis and the forward is ``vmap``-ed, shardable over the mesh (DESIGN.md §2).
+
+Also provides the paper's 1-D weight packing (S4: ``get_weight`` /
+``get_weight_size`` / ``update``) — used verbatim by the weight-sync path so
+the wire format matches the paper even though in-process transfer could ship
+pytrees directly.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# 1-D weight packing (paper S4)
+# ---------------------------------------------------------------------------
+
+
+def get_weight_size(params: Any) -> int:
+    """Size of the packed 1-D array (paper: negotiated once at startup)."""
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params))
+
+
+def get_weight(params: Any) -> np.ndarray:
+    """Pack a pytree into one 1-D float32 array (paper's wire format)."""
+    leaves = jax.tree.leaves(params)
+    return np.concatenate(
+        [np.asarray(x, dtype=np.float32).reshape(-1) for x in leaves])
+
+
+def update(params_like: Any, weight_array: np.ndarray) -> Any:
+    """Unpack a 1-D array into the structure of ``params_like``."""
+    leaves, treedef = jax.tree.flatten(params_like)
+    out = []
+    off = 0
+    for leaf in leaves:
+        n = int(np.prod(leaf.shape))
+        seg = weight_array[off:off + n].reshape(leaf.shape)
+        out.append(jnp.asarray(seg, dtype=leaf.dtype))
+        off += n
+    if off != weight_array.size:
+        raise ValueError(f"weight array size mismatch: {weight_array.size} "
+                         f"packed vs {off} expected")
+    return jax.tree.unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# Committee evaluation
+# ---------------------------------------------------------------------------
+
+
+def stack_members(members) -> Any:
+    """[params, ...] -> stacked pytree with leading committee axis."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *members)
+
+
+def member(cparams: Any, i: int) -> Any:
+    return jax.tree.map(lambda a: a[i], cparams)
+
+
+def committee_size(cparams: Any) -> int:
+    return jax.tree.leaves(cparams)[0].shape[0]
+
+
+def make_committee_apply(apply_fn: Callable) -> Callable:
+    """apply_fn(params, x) -> y  ==>  capply(cparams, x) -> (K, ...) y."""
+    return jax.vmap(apply_fn, in_axes=(0, None))
+
+
+def mean_std(preds: jnp.ndarray, axis: int = 0) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Committee mean and std (ddof=1, matching the paper's utils)."""
+    mean = jnp.mean(preds, axis=axis)
+    k = preds.shape[axis]
+    std = jnp.std(preds, axis=axis, ddof=1) if k > 1 else jnp.zeros_like(mean)
+    return mean, std
+
+
+def disagreement(preds: jnp.ndarray) -> jnp.ndarray:
+    """Scalar per-sample uncertainty: max std over output components.
+
+    preds: (K, B, ...) -> (B,).  This is the quantity prediction_check
+    thresholds (paper utils: (std > threshold).any(axis=1))."""
+    _, std = mean_std(preds, axis=0)
+    flat = std.reshape(std.shape[0], -1)
+    return jnp.max(flat, axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# LM committee uncertainty (the datacenter-scale path, DESIGN.md §3)
+# ---------------------------------------------------------------------------
+
+
+def lm_token_nll(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """(B, T, V) x (B, T) -> (B, T) token NLL in fp32."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    ll = jnp.take_along_axis(lf, labels[..., None].clip(0), axis=-1)[..., 0]
+    return lse - ll
+
+
+def lm_committee_uncertainty(clogits: jnp.ndarray, labels: jnp.ndarray):
+    """clogits: (K, B, T, V).  Returns (mean_nll (B,), std_nll (B,)).
+
+    Sequence-level committee disagreement = std over members of the mean
+    token NLL — the LM analog of energy-prediction std."""
+    nll = jax.vmap(lm_token_nll, in_axes=(0, None))(clogits, labels)  # (K,B,T)
+    seq_nll = jnp.mean(nll, axis=-1)                                  # (K,B)
+    return mean_std(seq_nll, axis=0)
+
+
+class Committee:
+    """Convenience wrapper pairing stacked params with a vmapped apply."""
+
+    def __init__(self, apply_fn: Callable, cparams: Any, jit: bool = True):
+        capply = make_committee_apply(apply_fn)
+        self.apply = jax.jit(capply) if jit else capply
+        self.params = cparams
+
+    @property
+    def size(self) -> int:
+        return committee_size(self.params)
+
+    def predict(self, x) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+        """Returns (preds (K, ...), mean, std)."""
+        preds = self.apply(self.params, x)
+        mean, std = mean_std(preds, axis=0)
+        return preds, mean, std
+
+    def replace_member(self, i: int, params: Any):
+        self.params = jax.tree.map(
+            lambda c, p: c.at[i].set(p), self.params, params)

@@ -1,0 +1,315 @@
+"""The controller kernel — two sub-controllers, as in the paper (Fig. 2):
+
+* ``Exchange``: the high-frequency generator<->prediction loop.  Gathers
+  proposals from every generator, runs the committee, applies the *central*
+  uncertainty check (prediction_check), queues uncertain samples for the
+  oracle, scatters committee means (with restart flags realized as ``None``,
+  the paper's first-iteration semantics) back to generators.
+* ``Manager``: oracle dispatch (first-available, point-to-point), labeled
+  data collection into the training buffer, retrain_size-block release to
+  trainers, dynamic oracle-buffer re-prioritization, fault handling
+  (timeout->requeue, dead-worker requeue), and AL-state checkpoints.
+
+Both are plain objects with ``step()`` methods — the threaded runtime
+(core/runtime.py) drives them, and tests drive them synchronously.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core import selection as sel
+from repro.core.buffers import OracleInputBuffer, TrainingDataBuffer
+from repro.core.fault import Heartbeat, TaskLedger
+from repro.core.monitor import Monitor
+from repro.core.transport import Channel, StopToken
+from repro.core.weight_sync import WeightStore
+
+
+class PredictionPool:
+    """The prediction kernel: a pool of committee members.
+
+    Default realization calls each ``UserModel(mode='predict').predict`` —
+    the paper's per-process structure.  A vmapped single-program committee
+    (core/committee.Committee) drops in via ``predict_all_override``.
+    Weights refresh from the WeightStore at pull cadence (paper §2.1).
+    """
+
+    def __init__(self, models: Sequence[Any], store: Optional[WeightStore],
+                 monitor: Optional[Monitor] = None,
+                 predict_all_override: Optional[Callable] = None):
+        self.models = list(models)
+        self.store = store
+        self.monitor = monitor or Monitor()
+        self._versions = [-1] * len(self.models)
+        self._override = predict_all_override
+
+    def refresh_weights(self):
+        if self.store is None:
+            return 0
+        n = 0
+        for i, m in enumerate(self.models):
+            # prediction member i replicates training member i % ml_process
+            # (paper: prediction models are replicas of training models)
+            packed = self.store.pull_packed(i % self.store.n_members,
+                                            newer_than=self._versions[i])
+            if packed is not None:
+                arr, v = packed
+                m.update(arr)
+                self._versions[i] = v
+                n += 1
+        if n:
+            self.monitor.incr("prediction.weight_refreshes", n)
+        return n
+
+    def predict_all(self, list_data_to_pred: List[np.ndarray]) -> np.ndarray:
+        """-> (K, n_gen, out_dim) stacked committee predictions."""
+        with self.monitor.timer("exchange.predict"):
+            if self._override is not None:
+                return np.asarray(self._override(list_data_to_pred))
+            outs = [m.predict(list_data_to_pred) for m in self.models]
+        return np.asarray(outs)
+
+
+@dataclasses.dataclass
+class ExchangeConfig:
+    std_threshold: float = 0.05
+    patience: int = 5
+    weight_pull_every: int = 1       # exchange iterations between pulls
+    progress_save_interval: float = 60.0
+    flag_restart_with_none: bool = True
+    min_interval: float = 0.0        # iteration floor (few-core fairness)
+
+
+class Exchange:
+    """High-frequency generator<->prediction loop (one dedicated
+    sub-controller in the paper)."""
+
+    def __init__(
+        self,
+        generators: Sequence[Any],               # UserGene instances
+        prediction: PredictionPool,
+        oracle_buffer: OracleInputBuffer,
+        cfg: ExchangeConfig,
+        monitor: Optional[Monitor] = None,
+        prediction_check: Optional[Callable] = None,
+    ):
+        self.generators = list(generators)
+        self.prediction = prediction
+        self.oracle_buffer = oracle_buffer
+        self.cfg = cfg
+        self.monitor = monitor or Monitor()
+        self.prediction_check = prediction_check or (
+            lambda inputs, preds: sel.prediction_check(
+                inputs, preds, cfg.std_threshold))
+        n = len(self.generators)
+        self.data_to_gene: List[Optional[np.ndarray]] = [None] * n
+        self.patience = sel.PatienceTracker(n, cfg.patience)
+        self.iteration = 0
+        self._last_save = time.time()
+
+    def step(self) -> Optional[StopToken]:
+        t0 = time.perf_counter()
+        # 1. gather proposals from every generator (paper: MPI gather)
+        inputs: List[np.ndarray] = []
+        for i, g in enumerate(self.generators):
+            stop, x = g.generate_new_data(self.data_to_gene[i])
+            if stop:
+                return StopToken(f"generator{i}", "generator stop criterion")
+            inputs.append(np.asarray(x))
+        t_gen = time.perf_counter() - t0
+
+        # 2. committee inference (+ periodic weight refresh)
+        if self.iteration % max(1, self.cfg.weight_pull_every) == 0:
+            self.prediction.refresh_weights()
+        preds = self.prediction.predict_all(inputs)
+
+        # 3. central uncertainty check; queue to oracle; scatter back
+        t1 = time.perf_counter()
+        res = self.prediction_check(inputs, preds)
+        if res.inputs_to_oracle:
+            self.oracle_buffer.put(res.inputs_to_oracle)
+            self.monitor.incr("exchange.queued_to_oracle",
+                              len(res.inputs_to_oracle))
+        restart = self.patience.step(res.uncertain_mask)
+        out: List[Optional[np.ndarray]] = list(res.data_to_generators)
+        if self.cfg.flag_restart_with_none:
+            for i in np.where(restart)[0]:
+                out[int(i)] = None
+        self.data_to_gene = out
+        self.monitor.timer("exchange.comm").add(
+            t_gen + (time.perf_counter() - t1))
+        self.monitor.incr("exchange.iterations")
+        self.iteration += 1
+
+        # periodic progress save (paper: progress_save_interval)
+        if (time.time() - self._last_save) >= self.cfg.progress_save_interval:
+            for g in self.generators:
+                g.save_progress()
+            self._last_save = time.time()
+        if self.cfg.min_interval:
+            left = self.cfg.min_interval - (time.perf_counter() - t0)
+            if left > 0:
+                time.sleep(left)
+        return None
+
+
+@dataclasses.dataclass
+class ManagerConfig:
+    retrain_size: int = 20
+    dynamic_oracle_list: bool = True
+    oracle_timeout: float = 30.0
+    max_oracle_retries: int = 2
+    heartbeat_interval: float = 5.0
+
+
+class OracleEndpoint:
+    """Manager-side handle for one oracle worker: job + result channels."""
+
+    def __init__(self, rank: str):
+        self.rank = rank
+        self.jobs = Channel(f"jobs:{rank}")
+        self.results = Channel(f"results:{rank}")
+        self.busy_task: Optional[int] = None
+
+
+class Manager:
+    """Oracle/training traffic sub-controller."""
+
+    def __init__(
+        self,
+        oracle_buffer: OracleInputBuffer,
+        train_buffer: TrainingDataBuffer,
+        trainer_channels: Sequence[Channel],
+        cfg: ManagerConfig,
+        monitor: Optional[Monitor] = None,
+        adjust_fn: Optional[Callable] = None,   # dynamic_oracle_list hook
+        fresh_predict: Optional[Callable] = None,  # inputs -> (K,n,out)
+    ):
+        self.oracle_buffer = oracle_buffer
+        self.train_buffer = train_buffer
+        self.trainer_channels = list(trainer_channels)
+        self.cfg = cfg
+        self.monitor = monitor or Monitor()
+        self.ledger = TaskLedger(cfg.oracle_timeout, cfg.max_oracle_retries)
+        self.heartbeat = Heartbeat(cfg.heartbeat_interval)
+        self.endpoints: Dict[str, OracleEndpoint] = {}
+        self.adjust_fn = adjust_fn
+        self.fresh_predict = fresh_predict
+        self.releases = 0
+        self._retrain_completions_seen = 0
+
+    # ------------------------------------------------------------ elasticity
+    def register_oracle(self, rank: str) -> OracleEndpoint:
+        ep = OracleEndpoint(rank)
+        self.endpoints[rank] = ep
+        self.heartbeat.beat(rank)
+        return ep
+
+    def unregister_oracle(self, rank: str):
+        ep = self.endpoints.pop(rank, None)
+        if ep is None:
+            return
+        for t in self.ledger.requeue_worker(rank):
+            self.oracle_buffer.put([t.payload])
+        self.heartbeat.forget(rank)
+
+    # ---------------------------------------------------------------- step
+    def step(self, retrain_completions: int = 0) -> None:
+        self._collect_results()
+        self._handle_faults()
+        self._dispatch()
+        self._release_training_data()
+        if (self.cfg.dynamic_oracle_list
+                and retrain_completions > self._retrain_completions_seen):
+            self._retrain_completions_seen = retrain_completions
+            self._adjust_oracle_buffer()
+
+    def _collect_results(self):
+        for ep in list(self.endpoints.values()):
+            while ep.results.poll():
+                task_id, inp, label = ep.results.recv()
+                self.heartbeat.beat(ep.rank)
+                if ep.busy_task == task_id:
+                    ep.busy_task = None
+                t = self.ledger.complete(task_id)
+                if t is None:
+                    # late straggler duplicate — result already requeued and
+                    # recomputed elsewhere; drop it.
+                    self.monitor.incr("manager.duplicate_results")
+                    continue
+                self.train_buffer.add(inp, label)
+                self.monitor.incr("manager.labeled")
+
+    def _handle_faults(self):
+        for t in self.ledger.expired():
+            self.monitor.incr("manager.requeued_timeout")
+            ep = self.endpoints.get(t.worker)
+            if ep is not None and ep.busy_task == t.task_id:
+                ep.busy_task = None
+            self._redispatch(t.payload, t.retries + 1)
+        for rank in self.heartbeat.dead_workers():
+            self.monitor.incr("manager.dead_workers")
+            ep = self.endpoints.get(rank)
+            if ep is not None:
+                ep.busy_task = None
+            for t in self.ledger.requeue_worker(rank):
+                self._redispatch(t.payload, t.retries + 1)
+
+    def _redispatch(self, payload, retries: int):
+        ep = self._free_endpoint()
+        if ep is None:
+            self.oracle_buffer.put([payload])
+            return
+        tid = self.ledger.dispatch(payload, ep.rank, retries)
+        ep.busy_task = tid
+        ep.jobs.isend((tid, payload))
+
+    def _free_endpoint(self) -> Optional[OracleEndpoint]:
+        # list() copy: workers register/unregister concurrently
+        for ep in list(self.endpoints.values()):
+            if ep.busy_task is None and not self.heartbeat.is_dead(ep.rank):
+                return ep
+        return None
+
+    def _dispatch(self):
+        """Paper §2.5: buffered data sent to the first available oracle."""
+        while True:
+            ep = self._free_endpoint()
+            if ep is None:
+                return
+            payload = self.oracle_buffer.pop()
+            if payload is None:
+                return
+            tid = self.ledger.dispatch(payload, ep.rank)
+            ep.busy_task = tid
+            ep.jobs.isend((tid, payload))
+            self.monitor.incr("manager.dispatched")
+
+    def _release_training_data(self):
+        """Broadcast retrain_size blocks to every trainer (paper §2.5)."""
+        while self.train_buffer.ready():
+            block = self.train_buffer.release()
+            for ch in self.trainer_channels:
+                ch.isend(block)
+            self.releases += 1
+            self.monitor.incr("manager.releases")
+
+    def _adjust_oracle_buffer(self):
+        """dynamic_oracle_list: re-score waiting inputs with the freshest
+        committee and drop/reorder (paper SI Utilities)."""
+        if self.fresh_predict is None:
+            return
+        items = self.oracle_buffer.snapshot()
+        if not items:
+            return
+        preds = self.fresh_predict(items)
+        if self.adjust_fn is not None:
+            new_items = self.adjust_fn(items, preds)
+        else:
+            new_items = sel.adjust_input_for_oracle(items, preds, 0.0)
+        self.oracle_buffer.restore(new_items)
+        self.monitor.incr("manager.buffer_adjusts")

@@ -1,0 +1,289 @@
+"""PAL runtime: wires the five kernels into a running, fault-tolerant,
+checkpointable system (paper Fig. 2 + DESIGN.md §2).
+
+In-process realization: each kernel pool runs on threads (JAX releases the
+GIL inside compiled code, so committee inference / retraining / oracle calls
+genuinely overlap); the transport layer is MPI-shaped so the controller
+logic matches the paper's process-based structure.  The ``task_per_node`` /
+``gpu_*`` placement knobs of the paper map to ``placement`` here (recorded,
+applied as device hints where meaningful on this host).
+
+Beyond the paper: whole-state checkpoint/restart, oracle heartbeats with
+timeout->requeue, elastic pool resize, and monitoring (see core/fault.py,
+core/al_checkpoint.py, core/monitor.py).
+"""
+from __future__ import annotations
+
+import logging
+import threading
+import time
+import traceback
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+log = logging.getLogger(__name__)
+
+import numpy as np
+
+from repro.configs.pal_potential import PALRunConfig
+from repro.core.al_checkpoint import ALCheckpointer
+from repro.core.buffers import OracleInputBuffer, TrainingDataBuffer
+from repro.core.controller import (
+    Exchange, ExchangeConfig, Manager, ManagerConfig, PredictionPool,
+)
+from repro.core.fault import ElasticPool
+from repro.core.monitor import Monitor
+from repro.core.transport import Channel, StopToken
+from repro.core.weight_sync import WeightStore, WeightSyncPolicy
+
+
+class PAL:
+    """The parallel active-learning workflow.
+
+    Parameters mirror the paper's AL_SETTING (SI S3): user supplies
+    generator / model / oracle factories plus optional utils functions.
+    """
+
+    def __init__(
+        self,
+        run_cfg: PALRunConfig,
+        *,
+        make_generator: Callable[[int, str], Any],        # rank, result_dir
+        make_model: Callable[[int, str, int, str], Any],  # rank, dir, dev, mode
+        make_oracle: Callable[[int, str], Any],
+        prediction_check: Optional[Callable] = None,
+        adjust_input_for_oracle: Optional[Callable] = None,
+        predict_all_override: Optional[Callable] = None,
+        resume: bool = False,
+    ):
+        self.cfg = run_cfg
+        self.monitor = Monitor()
+        rd = run_cfg.result_dir
+
+        # --- kernel instances (paper: one object per MPI process) ----------
+        self.generators = [make_generator(i, rd)
+                           for i in range(run_cfg.gene_process)]
+        self.predictors = [make_model(i, rd, i, "predict")
+                           for i in range(run_cfg.pred_process)]
+        self.trainers = [make_model(i, rd, i, "train")
+                         for i in range(run_cfg.ml_process)]
+        self._make_oracle = make_oracle
+        self._oracle_instances: Dict[str, Any] = {}
+
+        # --- controller state ----------------------------------------------
+        self.store = WeightStore(run_cfg.ml_process)
+        self.oracle_buffer = OracleInputBuffer()
+        self.train_buffer = TrainingDataBuffer(run_cfg.retrain_size)
+        self.trainer_channels = [Channel(f"manager->trainer{i}")
+                                 for i in range(run_cfg.ml_process)]
+
+        self.prediction_pool = PredictionPool(
+            self.predictors, self.store, self.monitor,
+            predict_all_override=predict_all_override)
+        self.exchange = Exchange(
+            self.generators, self.prediction_pool, self.oracle_buffer,
+            ExchangeConfig(
+                std_threshold=run_cfg.std_threshold,
+                patience=run_cfg.patience,
+                weight_pull_every=run_cfg.weight_sync_every,
+                progress_save_interval=run_cfg.progress_save_interval,
+                min_interval=run_cfg.exchange_min_interval,
+            ),
+            self.monitor, prediction_check=prediction_check,
+        )
+
+        def fresh_predict(items):
+            return self.prediction_pool.predict_all(
+                [np.asarray(x) for x in items])
+
+        self.manager = Manager(
+            self.oracle_buffer, self.train_buffer, self.trainer_channels,
+            ManagerConfig(
+                retrain_size=run_cfg.retrain_size,
+                dynamic_oracle_list=run_cfg.dynamic_oracle_list,
+                oracle_timeout=run_cfg.oracle_timeout,
+                max_oracle_retries=run_cfg.max_oracle_retries,
+            ),
+            self.monitor,
+            adjust_fn=adjust_input_for_oracle,
+            fresh_predict=fresh_predict,
+        )
+
+        # --- runtime machinery ----------------------------------------------
+        self.stop_event = threading.Event()
+        self.stop_token: Optional[StopToken] = None
+        self._threads: List[threading.Thread] = []
+        self._retrain_completions = 0
+        self._sync_policies = [WeightSyncPolicy(run_cfg.weight_sync_every)
+                               for _ in range(run_cfg.ml_process)]
+        self.checkpointer = ALCheckpointer(rd, run_cfg.checkpoint_every)
+        self.oracle_pool = ElasticPool("oracle", self._oracle_worker)
+        if resume:
+            self._restore()
+
+    # ------------------------------------------------------------------ stop
+    def _signal_stop(self, token: StopToken):
+        if not self.stop_event.is_set():
+            self.stop_token = token
+            self.stop_event.set()
+
+    def _guard(self, name: str, fn: Callable, *args):
+        """Run a loop body; an uncaught exception is a system fault — record
+        it, surface it, and stop the workflow instead of dying silently."""
+        try:
+            fn(*args)
+        except BaseException as e:  # noqa: BLE001
+            tb = traceback.format_exc()
+            log.error("kernel thread %s crashed: %s\n%s", name, e, tb)
+            self.monitor.incr("runtime.thread_crashes")
+            self._signal_stop(StopToken(name, f"crashed: {e!r}"))
+
+    # ------------------------------------------------------------ oracle pool
+    def _oracle_worker(self, rank: str, stop: threading.Event):
+        self._guard(rank, self._oracle_worker_inner, rank, stop)
+
+    def _oracle_worker_inner(self, rank: str, stop: threading.Event):
+        oracle = self._make_oracle(len(self._oracle_instances),
+                                   self.cfg.result_dir)
+        self._oracle_instances[rank] = oracle
+        ep = self.manager.register_oracle(rank)
+        try:
+            while not (stop.is_set() or self.stop_event.is_set()
+                       or self.oracle_pool.stop_all.is_set()):
+                self.manager.heartbeat.beat(rank)
+                try:
+                    tid, payload = ep.jobs.recv(timeout=0.1)
+                except TimeoutError:
+                    continue
+                with self.monitor.timer("oracle.run_calc"):
+                    inp, label = oracle.run_calc(np.asarray(payload))
+                ep.results.isend((tid, inp, label))
+        finally:
+            oracle.stop_run()
+
+    def add_oracles(self, n: int) -> List[str]:
+        """Elastic scale-up of the oracle pool."""
+        return self.oracle_pool.add(n)
+
+    def remove_oracle(self, rank: str):
+        """Elastic scale-down; in-flight work is requeued."""
+        self.oracle_pool.remove(rank)
+        self.manager.unregister_oracle(rank)
+
+    # ------------------------------------------------------------- trainers
+    def _trainer_loop(self, idx: int, stop: threading.Event):
+        trainer = self.trainers[idx]
+        chan = self.trainer_channels[idx]
+        pending = chan.irecv()
+        while not (stop.is_set() or self.stop_event.is_set()):
+            if not pending.test():
+                time.sleep(0.005)
+                continue
+            datapoints = pending.value
+            trainer.add_trainingset(datapoints)
+            # absorb any further blocks that arrived while training
+            while chan.poll():
+                trainer.add_trainingset(chan.recv())
+            pending = chan.irecv()
+            with self.monitor.timer("train.retrain"):
+                stop_run = trainer.retrain(pending)
+            self._retrain_completions += 1
+            self.monitor.incr("train.retrains")
+            if self._sync_policies[idx].should_publish():
+                self.store.publish_packed(idx, trainer.get_weight())
+            trainer.save_progress()
+            if stop_run:
+                self._signal_stop(StopToken(f"trainer{idx}",
+                                            "trainer stop criterion"))
+
+    # ------------------------------------------------------------- threads
+    def _exchange_loop(self, stop: threading.Event):
+        while not (stop.is_set() or self.stop_event.is_set()):
+            token = self.exchange.step()
+            if token is not None:
+                self._signal_stop(token)
+
+    def _manager_loop(self, stop: threading.Event):
+        while not (stop.is_set() or self.stop_event.is_set()):
+            self.manager.step(self._retrain_completions)
+            if self.checkpointer.due():
+                self.checkpoint()
+            time.sleep(0.002)
+
+    # ------------------------------------------------------------------ run
+    def start(self):
+        self.oracle_pool.add(self.cfg.orcl_process)
+        for i in range(self.cfg.ml_process):
+            th = threading.Thread(
+                target=self._guard,
+                args=(f"trainer{i}", self._trainer_loop, i, self.stop_event),
+                name=f"trainer{i}", daemon=True)
+            th.start()
+            self._threads.append(th)
+        for name, fn in [("exchange", self._exchange_loop),
+                         ("manager", self._manager_loop)]:
+            th = threading.Thread(target=self._guard,
+                                  args=(name, fn, self.stop_event),
+                                  name=name, daemon=True)
+            th.start()
+            self._threads.append(th)
+
+    def run(self, timeout: Optional[float] = None) -> Optional[StopToken]:
+        """Start and block until a kernel signals stop (or timeout)."""
+        self.start()
+        self.stop_event.wait(timeout)
+        if not self.stop_event.is_set():
+            self._signal_stop(StopToken("runtime", "timeout"))
+        self.shutdown()
+        return self.stop_token
+
+    def shutdown(self):
+        self.stop_event.set()
+        self.oracle_pool.shutdown()
+        for th in self._threads:
+            th.join(timeout=10.0)
+        # paper: every process's stop_run is called before quitting
+        for g in self.generators:
+            g.stop_run()
+        for p in self.predictors:
+            p.stop_run()
+        for t in self.trainers:
+            t.stop_run()
+
+    # ----------------------------------------------------------- checkpoint
+    def checkpoint(self) -> str:
+        state = {
+            "weights": {i: w for i, w in
+                        [(i, self.store.pull_packed(i)) for i in
+                         range(self.cfg.ml_process)] if w is not None},
+            "oracle_buffer": self.oracle_buffer.snapshot(),
+            "train_buffer": self.train_buffer.snapshot(),
+            "patience": self.exchange.patience.state_dict(),
+            "iteration": self.exchange.iteration,
+            "labeled_total": self.train_buffer.total_labeled,
+        }
+        return self.checkpointer.save(self.exchange.iteration, state)
+
+    def _restore(self):
+        state = self.checkpointer.latest()
+        if state is None:
+            return
+        for i, packed in state.get("weights", {}).items():
+            arr, _ = packed
+            self.store.publish_packed(int(i), arr)
+        self.oracle_buffer.restore(state.get("oracle_buffer", []))
+        self.train_buffer.restore(state.get("train_buffer", []))
+        if "patience" in state:
+            self.exchange.patience.load_state_dict(state["patience"])
+        self.exchange.iteration = int(state.get("iteration", 0))
+        self.monitor.incr("runtime.restores")
+
+    # ------------------------------------------------------------- reports
+    def report(self) -> Dict[str, Any]:
+        r = self.monitor.report()
+        r["oracle_pool_size"] = self.oracle_pool.size()
+        r["oracle_buffer"] = len(self.oracle_buffer)
+        r["train_buffer"] = len(self.train_buffer)
+        r["labeled_total"] = self.train_buffer.total_labeled
+        r["weight_publishes"] = self.store.publishes
+        r["stop"] = repr(self.stop_token)
+        return r

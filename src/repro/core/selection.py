@@ -1,0 +1,139 @@
+"""Centralized uncertainty-driven selection (paper §2.5 + SI Utilities).
+
+``prediction_check`` is the controller-side function deciding (a) which
+generator proposals go to the oracle and (b) what each generator receives
+back.  ``adjust_input_for_oracle`` re-prioritizes the oracle buffer with the
+freshest committee (``dynamic_oracle_list``).  ``PatienceTracker`` implements
+the generator-side "allow trajectories to propagate into regions of high
+uncertainty for a given number of steps" policy (§2.2) — decision logic is
+the generator's, UQ stays central, exactly as the paper splits it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class SelectionResult:
+    """Outcome of one prediction_check round."""
+
+    inputs_to_oracle: List[np.ndarray]
+    data_to_generators: List[Any]            # one per generator, rank-sorted
+    uncertain_mask: np.ndarray               # (n_gen,) bool
+    std: np.ndarray                          # (n_gen,) scalar disagreement
+
+
+def prediction_check(
+    list_data_to_pred: Sequence[np.ndarray],    # gathered generator inputs
+    committee_preds: np.ndarray,                # (K, n_gen, out_dim)
+    threshold: float,
+    flag_value: Optional[float] = None,
+) -> SelectionResult:
+    """Faithful port of the paper's utils.prediction_check.
+
+    Committee std over members; samples whose std exceeds `threshold` in any
+    output component are queued for the oracle.  Generators receive the
+    committee mean; for uncertain samples the paper's example sends a flag
+    (0) instead — we return the mean plus a mask so generators can apply
+    their own patience policy (flag_value reproduces the paper's behavior
+    when set).
+    """
+    preds = np.asarray(committee_preds, dtype=np.float64)
+    k = preds.shape[0]
+    std = preds.std(axis=0, ddof=1) if k > 1 else np.zeros_like(preds[0])
+    uncertain = (std > threshold).any(axis=tuple(range(1, std.ndim)))
+    scalar_std = std.reshape(std.shape[0], -1).max(axis=-1)
+
+    inputs_to_oracle = [np.asarray(list_data_to_pred[i])
+                        for i in np.where(uncertain)[0]]
+    mean = preds.mean(axis=0)
+    if flag_value is not None:
+        mean = mean.copy()
+        mean[uncertain] = flag_value
+    data_to_generators = list(mean)
+    return SelectionResult(inputs_to_oracle, data_to_generators, uncertain,
+                           scalar_std)
+
+
+def adjust_input_for_oracle(
+    to_orcl_buffer: List[np.ndarray],
+    committee_preds: np.ndarray,                # (K, n_buf, out_dim)
+    threshold: float,
+) -> List[np.ndarray]:
+    """Faithful port of utils.adjust_input_for_oracle: sort the waiting
+    oracle inputs by fresh-committee std (descending) and drop entries whose
+    uncertainty no longer exceeds the threshold."""
+    if not to_orcl_buffer:
+        return []
+    preds = np.asarray(committee_preds, dtype=np.float64)
+    k = preds.shape[0]
+    std = preds.std(axis=0, ddof=1) if k > 1 else np.zeros_like(preds[0])
+    score = std.reshape(std.shape[0], -1).mean(axis=-1)
+    order = np.argsort(score)[::-1]
+    keep = [int(i) for i in order
+            if (std[i] > threshold).any()]
+    return [to_orcl_buffer[i] for i in keep]
+
+
+class PatienceTracker:
+    """Generator-side reaction policy to central uncertainty flags (§2.2).
+
+    A trajectory may continue through up to ``patience`` consecutive
+    uncertain steps; beyond that the generator should restart (reset to a
+    trusted state).  One counter per generator rank."""
+
+    def __init__(self, n_generators: int, patience: int):
+        self.patience = patience
+        self.counts = np.zeros(n_generators, dtype=int)
+        self.restarts = np.zeros(n_generators, dtype=int)
+
+    def step(self, uncertain_mask: np.ndarray) -> np.ndarray:
+        """Returns a bool mask of generators that must restart now."""
+        self.counts = np.where(uncertain_mask, self.counts + 1, 0)
+        restart = self.counts > self.patience
+        self.restarts += restart
+        self.counts[restart] = 0
+        return restart
+
+    def state_dict(self):
+        return {"counts": self.counts.copy(), "restarts": self.restarts.copy()}
+
+    def load_state_dict(self, s):
+        self.counts = np.asarray(s["counts"]).copy()
+        self.restarts = np.asarray(s["restarts"]).copy()
+
+
+# ---------------------------------------------------------------------------
+# Alternative acquisition scores (beyond the paper's std-threshold, for the
+# LM path and ablations)
+# ---------------------------------------------------------------------------
+
+
+def top_fraction(scores: np.ndarray, fraction: float) -> np.ndarray:
+    """Indices of the top `fraction` most-uncertain samples."""
+    n = max(int(round(len(scores) * fraction)), 0)
+    if n == 0:
+        return np.empty(0, dtype=int)
+    return np.argsort(scores)[::-1][:n]
+
+
+def diversity_filter(inputs: Sequence[np.ndarray], selected: np.ndarray,
+                     min_dist: float) -> np.ndarray:
+    """Greedy de-duplication: drop selected samples closer than min_dist to
+    an already-kept one (paper §3.1: 'avoiding similar and thus redundant
+    TDDFT calculations')."""
+    kept: List[int] = []
+    for i in selected:
+        x = np.asarray(inputs[int(i)]).reshape(-1)
+        ok = True
+        for j in kept:
+            yj = np.asarray(inputs[j]).reshape(-1)
+            if np.linalg.norm(x - yj) < min_dist:
+                ok = False
+                break
+        if ok:
+            kept.append(int(i))
+    return np.asarray(kept, dtype=int)

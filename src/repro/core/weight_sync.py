@@ -1,0 +1,110 @@
+"""Versioned weight publication: training kernel -> prediction kernel
+(paper §2.1/§2.4: "trained model weights are periodically copied directly to
+the prediction kernel").
+
+The paper packs weights as 1-D arrays over MPI; here a ``WeightStore`` holds
+the latest packed weights per committee member with a monotonically
+increasing version, and the prediction side pulls at its own cadence — the
+same *periodic, versioned, non-blocking* semantics without a rendezvous.
+On a real multi-pod deployment the publish is a ``jax.device_put`` onto the
+prediction mesh's NamedSharding (documented path, DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.core import committee as cmte
+
+
+class WeightStore:
+    """Thread-safe latest-wins store of packed member weights."""
+
+    def __init__(self, n_members: int):
+        self.n_members = n_members
+        self._weights: Dict[int, np.ndarray] = {}
+        self._versions: Dict[int, int] = {i: 0 for i in range(n_members)}
+        self._lock = threading.Lock()
+        self._global_version = 0
+        self.publishes = 0
+        self.last_publish_time: Optional[float] = None
+
+    # -- training side ------------------------------------------------------
+    def publish(self, member: int, params: Any) -> int:
+        """Pack and store member weights; returns the new global version."""
+        packed = cmte.get_weight(params)
+        with self._lock:
+            self._weights[member] = packed
+            self._global_version += 1
+            self._versions[member] = self._global_version
+            self.publishes += 1
+            self.last_publish_time = time.time()
+            return self._global_version
+
+    def publish_packed(self, member: int, packed: np.ndarray) -> int:
+        """Store already-packed 1-D weights (paper's get_weight output)."""
+        with self._lock:
+            self._weights[member] = np.asarray(packed)
+            self._global_version += 1
+            self._versions[member] = self._global_version
+            self.publishes += 1
+            self.last_publish_time = time.time()
+            return self._global_version
+
+    # -- prediction side ----------------------------------------------------
+    def pull_packed(self, member: int, newer_than: int = -1
+                    ) -> Optional[Tuple[np.ndarray, int]]:
+        """Raw packed weights if a newer version exists, else None."""
+        with self._lock:
+            v = self._versions[member]
+            if v <= newer_than or member not in self._weights:
+                return None
+            return self._weights[member], v
+
+    def version(self, member: Optional[int] = None) -> int:
+        with self._lock:
+            if member is None:
+                return self._global_version
+            return self._versions[member]
+
+    def pull(self, member: int, params_like: Any,
+             newer_than: int = -1) -> Optional[Tuple[Any, int]]:
+        """Unpack the stored weights into ``params_like`` structure if a
+        version newer than ``newer_than`` exists; else None."""
+        with self._lock:
+            v = self._versions[member]
+            if v <= newer_than or member not in self._weights:
+                return None
+            packed = self._weights[member]
+        return cmte.update(params_like, packed), v
+
+    def pull_all(self, cparams_like: Any, newer_than: int = -1):
+        """Refresh every member of a stacked committee tree.  Returns
+        (new_cparams or None, version)."""
+        import jax
+
+        with self._lock:
+            v = self._global_version
+            if v <= newer_than or len(self._weights) < self.n_members:
+                return None, v
+            packed = dict(self._weights)
+        members = [
+            cmte.update(cmte.member(cparams_like, i), packed[i])
+            for i in range(self.n_members)
+        ]
+        return cmte.stack_members(members), v
+
+
+class WeightSyncPolicy:
+    """When should training publish? (paper: every N epochs / retrains)."""
+
+    def __init__(self, every_n_rounds: int = 1):
+        self.every = max(1, every_n_rounds)
+        self._rounds = 0
+
+    def should_publish(self) -> bool:
+        self._rounds += 1
+        return self._rounds % self.every == 0

@@ -1,0 +1,3 @@
+from repro.data.synthetic import SyntheticTokenStream, synthetic_batch  # noqa: F401
+from repro.data.prefetch import Prefetcher  # noqa: F401
+from repro.data.replay import ALReplayBuffer  # noqa: F401

@@ -1,0 +1,57 @@
+"""AL replay buffer for the LM path: oracle-labeled sequences accumulate and
+are sampled into fixed-shape training batches (pads/crops to seq_len).
+
+This is the datacenter-scale analog of the paper's training-data buffer —
+the PAL Manager releases retrain_size blocks into it, and the trainer draws
+uniform (or recency-weighted) minibatches.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+
+class ALReplayBuffer:
+    def __init__(self, capacity: int, seq_len: int, recency_bias: float = 0.0):
+        self.capacity = capacity
+        self.seq_len = seq_len
+        self.recency_bias = recency_bias
+        self._tokens: List[np.ndarray] = []
+        self._lock = threading.Lock()
+        self.total_added = 0
+        self.evicted = 0
+
+    def add(self, sequences: List[np.ndarray]):
+        with self._lock:
+            self._tokens.extend(np.asarray(s, np.int32) for s in sequences)
+            self.total_added += len(sequences)
+            if len(self._tokens) > self.capacity:
+                k = len(self._tokens) - self.capacity
+                self._tokens = self._tokens[k:]
+                self.evicted += k
+
+    def __len__(self):
+        with self._lock:
+            return len(self._tokens)
+
+    def sample(self, batch: int, rng: np.random.RandomState
+               ) -> Optional[Dict[str, np.ndarray]]:
+        with self._lock:
+            n = len(self._tokens)
+            if n == 0:
+                return None
+            if self.recency_bias > 0:
+                w = np.exp(self.recency_bias
+                           * (np.arange(n) - n + 1) / max(n, 1))
+                p = w / w.sum()
+            else:
+                p = None
+            idx = rng.choice(n, size=batch, replace=n < batch, p=p)
+            seqs = [self._tokens[i] for i in idx]
+        out = np.zeros((batch, self.seq_len + 1), np.int32)
+        for i, s in enumerate(seqs):
+            L = min(len(s), self.seq_len + 1)
+            out[i, :L] = s[:L]
+        return {"tokens": out[:, :-1], "labels": out[:, 1:]}

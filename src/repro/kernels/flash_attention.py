@@ -1,0 +1,168 @@
+"""Pallas TPU flash attention: block-wise online softmax with VMEM scratch.
+
+Target: TPU v5e MXU.  Tiles: (block_q x head_dim) q blocks against
+(block_k x head_dim) kv blocks; fp32 (m, l, acc) accumulators live in VMEM
+scratch across the sequential kv grid axis.  Causal + sliding-window masking
+and GQA (q-head blocks index their shared kv head) are handled in-kernel;
+decode masking uses a (B,) kv_len input.  Validated on CPU with
+``interpret=True`` against ``ref.attention_ref`` (tests/test_kernels.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(
+    # scalar-ish inputs (SMEM-friendly tiny arrays)
+    qoff_ref,            # (1, 1) int32  — q position offset (decode index)
+    kvl_ref,             # (B, 1) int32  — valid kv length per batch (or S)
+    # tensor inputs
+    q_ref,               # (1, bq, 1, D)
+    k_ref,               # (1, bk, 1, D)
+    v_ref,               # (1, bk, 1, D)
+    # outputs
+    o_ref,               # (1, bq, 1, D)
+    # scratch
+    acc_ref,             # (bq, D) f32
+    m_ref,               # (bq, 1) f32
+    l_ref,               # (bq, 1) f32
+    *,
+    causal: bool,
+    window: Optional[int],
+    block_q: int,
+    block_k: int,
+    num_k_blocks: int,
+    scale: float,
+    mask_kv_len: bool,
+):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    qoff = qoff_ref[0, 0]
+    qpos = qoff + qi * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 0)
+    kpos = ki * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 1)
+
+    # block-level skip: no kv position in this block can be visible
+    run = jnp.bool_(True)
+    if causal:
+        run = jnp.logical_and(run, ki * block_k <= qoff + qi * block_q
+                              + block_q - 1)
+    if window is not None:
+        run = jnp.logical_and(
+            run, (ki + 1) * block_k - 1 > qoff + qi * block_q - window)
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0, :, 0, :].astype(jnp.float32)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale      # (bq, bk)
+
+        mask = jnp.ones((block_q, block_k), jnp.bool_)
+        if causal:
+            mask = jnp.logical_and(mask, kpos <= qpos)
+        if window is not None:
+            mask = jnp.logical_and(mask, kpos > qpos - window)
+        if mask_kv_len:
+            kvl = kvl_ref[0, 0]
+            mask = jnp.logical_and(mask, kpos < kvl)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]                                  # (bq, 1)
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)                               # (bq, bk)
+        p = jnp.where(mask, p, 0.0)
+        alpha = jnp.exp(m_prev - m_new)                      # (bq, 1)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ki == num_k_blocks - 1)
+    def _finish():
+        l = l_ref[...]
+        safe = jnp.where(l == 0.0, 1.0, l)                   # fully-masked rows
+        o_ref[0, :, 0, :] = (acc_ref[...] / safe).astype(o_ref.dtype)
+
+
+def flash_attention(
+    q: jnp.ndarray,          # (B, T, H, D)
+    k: jnp.ndarray,          # (B, S, KV, D)
+    v: jnp.ndarray,          # (B, S, KV, D)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_offset=0,
+    kv_len: Optional[jnp.ndarray] = None,   # (B,) valid lengths
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    B, T, H, D = q.shape
+    _, S, KV, _ = k.shape
+    G = H // KV
+    block_q = min(block_q, T)
+    block_k = min(block_k, S)
+    if T % block_q or S % block_k:
+        raise ValueError(f"shape not tileable: T={T} bq={block_q} "
+                         f"S={S} bk={block_k}")
+    nq, nk = T // block_q, S // block_k
+
+    qoff = jnp.asarray(q_offset, jnp.int32).reshape(1, 1)
+    if kv_len is None:
+        kvl = jnp.full((B, 1), S, jnp.int32)
+        mask_kv_len = False
+    else:
+        kvl = kv_len.astype(jnp.int32).reshape(B, 1)
+        mask_kv_len = True
+
+    kernel = functools.partial(
+        _kernel, causal=causal, window=window, block_q=block_q,
+        block_k=block_k, num_k_blocks=nk, scale=1.0 / (D ** 0.5),
+        mask_kv_len=mask_kv_len,
+    )
+
+    grid = (B, H, nq, nk)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b, h, qi, ki: (0, 0)),
+            pl.BlockSpec((1, 1), lambda b, h, qi, ki: (b, 0)),
+            pl.BlockSpec((1, block_q, 1, D), lambda b, h, qi, ki: (b, qi, h, 0)),
+            pl.BlockSpec((1, block_k, 1, D),
+                         lambda b, h, qi, ki: (b, ki, h // G, 0)),
+            pl.BlockSpec((1, block_k, 1, D),
+                         lambda b, h, qi, ki: (b, ki, h // G, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, 1, D),
+                               lambda b, h, qi, ki: (b, qi, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, T, H, D), v.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, D), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qoff, kvl, q, k, v)
+    return out

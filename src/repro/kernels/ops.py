@@ -1,0 +1,93 @@
+"""Public ops with implementation switch: impl in {'xla', 'pallas', 'pallas_interpret'}.
+
+'xla'             — chunked-but-exact jnp schedules (ref.py), used by the
+                    512-device dry-run and CPU training.
+'pallas'          — TPU Pallas kernels (target hardware).
+'pallas_interpret'— same kernels, interpret=True (CPU validation in tests).
+
+Models only ever call these entry points, so the whole zoo switches backend
+with one config knob.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.kernels import ref
+
+_DEFAULT_IMPL = "xla"
+
+
+def attention(
+    q, k, v, *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_offset=0,
+    kv_len=None,
+    impl: str = _DEFAULT_IMPL,
+    q_chunk: int = 1024,
+    kv_seq_shard: bool = False,
+    rules=None,
+):
+    """Multi-head attention, GQA-aware. q: (B,T,H,D); k,v: (B,S,KV,D).
+
+    kv_seq_shard: hint that the cache is sharded on its sequence axis
+    (long_500k decode) — keeps the constraint inside the layer so XLA
+    produces a flash-decode-style distributed softmax reduction instead of
+    an all-gather of the cache.
+    """
+    B, T, H, D = q.shape
+    if kv_seq_shard and rules is not None:
+        from repro.configs import base as _ax
+        from repro.sharding.rules import shard_constraint as _sc
+
+        k = _sc(k, rules, (_ax.BATCH, _ax.CACHE_SEQ, _ax.KV_HEADS, _ax.HEAD_DIM))
+        v = _sc(v, rules, (_ax.BATCH, _ax.CACHE_SEQ, _ax.KV_HEADS, _ax.HEAD_DIM))
+    if impl in ("pallas", "pallas_interpret"):
+        from repro.kernels import flash_attention as fa
+
+        return fa.flash_attention(
+            q, k, v, causal=causal, window=window, q_offset=q_offset,
+            kv_len=kv_len, interpret=(impl == "pallas_interpret"),
+        )
+    # XLA path: direct for small T / decode, unrolled-chunked otherwise.
+    if T <= q_chunk or kv_len is not None:
+        return ref.attention_ref(
+            q, k, v, causal=causal, window=window, q_offset=q_offset, kv_len=kv_len
+        )
+    return ref.attention_chunked_ref(
+        q, k, v, causal=causal, window=window, q_offset=q_offset, chunk=q_chunk
+    )
+
+
+def wkv6(r, k, v, w, u, state=None, *, impl: str = _DEFAULT_IMPL, chunk: int = 64):
+    """RWKV6 WKV. r/k/v/w: (B,T,H,N); u: (H,N). Returns (y, state)."""
+    if impl in ("pallas", "pallas_interpret"):
+        from repro.kernels import wkv6 as _wkv6
+
+        return _wkv6.wkv6(
+            r, k, v, w, u, state, chunk=chunk,
+            interpret=(impl == "pallas_interpret"),
+        )
+    return ref.wkv6_chunked_ref(r, k, v, w, u, state, chunk=chunk)
+
+
+def wkv6_decode(r, k, v, w, u, state):
+    return ref.wkv6_decode_ref(r, k, v, w, u, state)
+
+
+def ssd(x, a, Bm, Cm, state=None, *, impl: str = _DEFAULT_IMPL, chunk: int = 64):
+    """Mamba-2/SSD chunked scan. Returns (y, state)."""
+    if impl in ("pallas", "pallas_interpret"):
+        from repro.kernels import ssd_scan
+
+        return ssd_scan.ssd(
+            x, a, Bm, Cm, state, chunk=chunk,
+            interpret=(impl == "pallas_interpret"),
+        )
+    return ref.ssd_chunked_ref(x, a, Bm, Cm, state, chunk=chunk)
+
+
+def ssd_decode(x, a, Bm, Cm, state):
+    return ref.ssd_decode_ref(x, a, Bm, Cm, state)

@@ -1,0 +1,283 @@
+"""Pure-jnp reference oracles for every Pallas kernel.
+
+These are the *semantics* of the three perf-critical ops; the Pallas kernels
+(flash_attention.py / wkv6.py / ssd_scan.py) are asserted allclose against
+them across shape/dtype sweeps in tests/.  The XLA model path (ops.py,
+impl='xla') uses chunked-but-exact variants of the same math so the dry-run
+costs reflect a production schedule rather than naive O(S^2) materialization.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+
+def _mask(q_len: int, kv_len: int, q_offset, causal: bool,
+          window: Optional[int]) -> jnp.ndarray:
+    """(q_len, kv_len) boolean mask. q position i sits at q_offset + i."""
+    qpos = q_offset + jnp.arange(q_len)[:, None]
+    kpos = jnp.arange(kv_len)[None, :]
+    m = jnp.ones((q_len, kv_len), dtype=bool)
+    if causal:
+        m &= kpos <= qpos
+    if window is not None:
+        m &= kpos > qpos - window
+    return m
+
+
+def attention_ref(
+    q: jnp.ndarray,          # (B, T, H, D)
+    k: jnp.ndarray,          # (B, S, KV, D)
+    v: jnp.ndarray,          # (B, S, KV, D)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_offset=0,
+    kv_len=None,             # optional (B,) valid cache lengths (decode)
+) -> jnp.ndarray:
+    """Naive full-materialization attention; fp32 softmax; GQA-aware."""
+    B, T, H, D = q.shape
+    _, S, KV, _ = k.shape
+    G = H // KV
+    q = q.reshape(B, T, KV, G, D).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scores = jnp.einsum("btkgd,bskd->bkgts", q, kf) / jnp.sqrt(D).astype(jnp.float32)
+    m = _mask(T, S, q_offset, causal, window)[None, None, None]
+    if kv_len is not None:
+        valid = jnp.arange(S)[None, :] < kv_len[:, None]
+        m = m & valid[:, None, None, None, :]
+    scores = jnp.where(m, scores, -jnp.inf)
+    p = jax.nn.softmax(scores, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)  # fully-masked rows
+    out = jnp.einsum("bkgts,bskd->btkgd", p, vf)
+    return out.reshape(B, T, H, D).astype(q.dtype if q.dtype != jnp.float32 else v.dtype)
+
+
+def attention_chunked_ref(
+    q, k, v, *, causal=True, window=None, q_offset=0, chunk: int = 1024,
+) -> jnp.ndarray:
+    """Flash-style (online softmax) attention, fully unrolled over q chunks.
+
+    Exact same math as attention_ref; bounded memory.  Unrolled (python loop)
+    so XLA cost analysis sees every chunk (DESIGN.md §8).
+    """
+    B, T, H, D = q.shape
+    _, S, KV, _ = k.shape
+    G = H // KV
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scale = 1.0 / jnp.sqrt(D).astype(jnp.float32)
+    outs = []
+    for start in range(0, T, chunk):
+        qc = q[:, start:start + chunk].astype(jnp.float32)
+        L = qc.shape[1]
+        qc = qc.reshape(B, L, KV, G, D)
+        # bound kv range touched by this q chunk (causal => no future keys)
+        if causal and isinstance(q_offset, int):
+            kv_hi = min(S, q_offset + start + L)
+        else:
+            kv_hi = S
+        kv_lo = 0
+        if window is not None and isinstance(q_offset, int):
+            kv_lo = max(0, q_offset + start - window + 1)
+        kc = kf[:, kv_lo:kv_hi]
+        vc = vf[:, kv_lo:kv_hi]
+        scores = jnp.einsum("blkgd,bskd->bkgls", qc, kc) * scale
+        qpos = q_offset + start + jnp.arange(L)[:, None]
+        kpos = kv_lo + jnp.arange(kv_hi - kv_lo)[None, :]
+        m = jnp.ones((L, kv_hi - kv_lo), dtype=bool)
+        if causal:
+            m &= kpos <= qpos
+        if window is not None:
+            m &= kpos > qpos - window
+        scores = jnp.where(m[None, None, None], scores, -jnp.inf)
+        p = jax.nn.softmax(scores, axis=-1)
+        p = jnp.where(jnp.isnan(p), 0.0, p)
+        # §Perf iter: probabilities are bounded [0,1] — the AV matmul reads
+        # them in bf16 (halves the dominant score-chain HBM traffic; softmax
+        # itself stays fp32 for stability)
+        oc = jnp.einsum("bkgls,bskd->blkgd", p.astype(v.dtype), vc)
+        outs.append(oc.reshape(B, L, H, D))
+    return jnp.concatenate(outs, axis=1).astype(v.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 (Finch) WKV — vector decay per key channel
+# ---------------------------------------------------------------------------
+
+
+def wkv6_ref(
+    r: jnp.ndarray,          # (B, T, H, N)
+    k: jnp.ndarray,          # (B, T, H, N)
+    v: jnp.ndarray,          # (B, T, H, N)
+    w: jnp.ndarray,          # (B, T, H, N) decay in (0,1), per key channel
+    u: jnp.ndarray,          # (H, N) bonus
+    state: Optional[jnp.ndarray] = None,  # (B, H, N, N) incoming state
+):
+    """Sequential-scan reference.
+
+    y_t = r_t @ (S_{t-1} + diag(u) k_t v_t^T);  S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    Returns (y: (B,T,H,N), state_out: (B,H,N,N)).
+    """
+    B, T, H, N = r.shape
+    rf, kf, vf, wf = (x.astype(jnp.float32) for x in (r, k, v, w))
+    uf = u.astype(jnp.float32)
+    if state is None:
+        state = jnp.zeros((B, H, N, N), jnp.float32)
+
+    def step(S, inputs):
+        rt, kt, vt, wt = inputs          # (B,H,N) each
+        kv = kt[..., :, None] * vt[..., None, :]          # (B,H,N,N)
+        y = jnp.einsum("bhn,bhnm->bhm", rt, S + uf[None, :, :, None] * kv)
+        S = wt[..., :, None] * S + kv
+        return S, y
+
+    xs = tuple(jnp.moveaxis(x, 1, 0) for x in (rf, kf, vf, wf))
+    state_out, ys = jax.lax.scan(step, state.astype(jnp.float32), xs)
+    y = jnp.moveaxis(ys, 0, 1)
+    return y.astype(v.dtype), state_out
+
+
+def wkv6_chunked_ref(r, k, v, w, u, state=None, chunk: int = 64):
+    """Chunked (linear-attention form) WKV6 — the TPU-native schedule.
+
+    Intra-chunk decay ratios are computed in log space (exact, stable);
+    inter-chunk contributions and state updates are matmuls (DESIGN.md §6).
+    """
+    B, T, H, N = r.shape
+    assert T % chunk == 0, (T, chunk)
+    C = chunk
+    rf, kf, vf = (x.astype(jnp.float32) for x in (r, k, v))
+    lw = jnp.log(w.astype(jnp.float32).clip(1e-12))      # (B,T,H,N) <= 0
+    uf = u.astype(jnp.float32)
+    if state is None:
+        state = jnp.zeros((B, H, N, N), jnp.float32)
+
+    nC = T // C
+    resh = lambda x: x.reshape(B, nC, C, H, N).transpose(1, 0, 3, 2, 4)  # (nC,B,H,C,N)
+    rc, kc, vc, lwc = resh(rf), resh(kf), resh(vf), resh(lw)
+
+    def chunk_step(S, inputs):
+        rt, kt, vt, lwt = inputs                          # (B,H,C,N)
+        incl = jnp.cumsum(lwt, axis=2)                    # log prod_{1..t}
+        excl = incl - lwt                                 # log prod_{1..t-1}
+        total = incl[:, :, -1:, :]                        # log prod over chunk
+        # inter-chunk: y_t += (r_t * exp(excl_t)) @ S
+        q_dec = rt * jnp.exp(excl)
+        y = jnp.einsum("bhcn,bhnm->bhcm", q_dec, S)
+        # intra-chunk: A[t,j] = sum_n r[t]k[j] exp(excl_t - incl_j), j<t
+        dec = jnp.exp(
+            jnp.clip(excl[:, :, :, None, :] - incl[:, :, None, :, :], -60.0, 0.0)
+        )                                                  # (B,H,C,C,N)
+        A = jnp.einsum("bhtn,bhjn,bhtjn->bhtj", rt, kt, dec)
+        mask = jnp.tril(jnp.ones((C, C), bool), k=-1)
+        A = jnp.where(mask[None, None], A, 0.0)
+        # diagonal bonus u
+        diag = jnp.einsum("bhtn,bhtn->bht", rt * uf[None, :, None, :], kt)
+        y = y + jnp.einsum("bhtj,bhjm->bhtm", A, vt) + diag[..., None] * vt
+        # state update: S' = diag(prod w) S + sum_j (prod_{j+1..C} w * k_j) v_j^T
+        k_dec = kt * jnp.exp(jnp.clip(total - incl, -60.0, 0.0))
+        S = jnp.exp(total[:, :, 0, :])[..., None] * S + jnp.einsum(
+            "bhjn,bhjm->bhnm", k_dec, vt
+        )
+        return S, y
+
+    state_out, ys = jax.lax.scan(chunk_step, state, (rc, kc, vc, lwc))
+    y = ys.transpose(1, 0, 3, 2, 4).reshape(B, T, H, N)
+    return y.astype(v.dtype), state_out
+
+
+def wkv6_decode_ref(r, k, v, w, u, state):
+    """Single-token recurrent step. r,k,v,w: (B,H,N); state: (B,H,N,N)."""
+    rf, kf, vf, wf = (x.astype(jnp.float32) for x in (r, k, v, w))
+    uf = u.astype(jnp.float32)
+    kv = kf[..., :, None] * vf[..., None, :]
+    y = jnp.einsum("bhn,bhnm->bhm", rf, state + uf[None, :, :, None] * kv)
+    state = wf[..., :, None] * state + kv
+    return y.astype(v.dtype), state
+
+
+# ---------------------------------------------------------------------------
+# SSD scan (Mamba-2 form) — scalar decay per head
+# ---------------------------------------------------------------------------
+
+
+def ssd_ref(
+    x: jnp.ndarray,          # (B, T, H, P) values (already dt-scaled)
+    a: jnp.ndarray,          # (B, T, H) decay in (0,1]
+    Bm: jnp.ndarray,         # (B, T, H, N) input matrix ("k")
+    Cm: jnp.ndarray,         # (B, T, H, N) output matrix ("q")
+    state: Optional[jnp.ndarray] = None,  # (B, H, N, P)
+):
+    """Sequential reference: S_t = a_t S_{t-1} + B_t^T x_t ; y_t = C_t S_t."""
+    B, T, H, P = x.shape
+    N = Bm.shape[-1]
+    xf, af, bf, cf = (z.astype(jnp.float32) for z in (x, a, Bm, Cm))
+    if state is None:
+        state = jnp.zeros((B, H, N, P), jnp.float32)
+
+    def step(S, inputs):
+        xt, at, bt, ct = inputs
+        S = at[..., None, None] * S + bt[..., :, None] * xt[..., None, :]
+        y = jnp.einsum("bhn,bhnp->bhp", ct, S)
+        return S, y
+
+    xs = tuple(jnp.moveaxis(z, 1, 0) for z in (xf, af, bf, cf))
+    state_out, ys = jax.lax.scan(step, state, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), state_out
+
+
+def ssd_chunked_ref(x, a, Bm, Cm, state=None, chunk: int = 64):
+    """Chunked SSD (Mamba-2): intra-chunk (C x C) masked matmuls + carried
+    (N x P) state.  Decay ratios are bounded <= 1 -> numerically benign."""
+    B, T, H, P = x.shape
+    N = Bm.shape[-1]
+    C = chunk
+    assert T % C == 0
+    xf, bf, cf = (z.astype(jnp.float32) for z in (x, Bm, Cm))
+    la = jnp.log(a.astype(jnp.float32).clip(1e-12))       # (B,T,H)
+    if state is None:
+        state = jnp.zeros((B, H, N, P), jnp.float32)
+    nC = T // C
+    reshv = lambda z: z.reshape(B, nC, C, H, -1).transpose(1, 0, 3, 2, 4)
+    xc, bc, cc = reshv(xf), reshv(bf), reshv(cf)          # (nC,B,H,C,*)
+    lac = la.reshape(B, nC, C, H).transpose(1, 0, 3, 2)   # (nC,B,H,C)
+
+    def chunk_step(S, inputs):
+        xt, bt, ct, lat = inputs
+        incl = jnp.cumsum(lat, axis=-1)                    # (B,H,C) log prod_{1..t}
+        total = incl[..., -1:]
+        # inter: y_t = exp(incl_t) * C_t @ S   (state S is pre-chunk)
+        y = jnp.exp(incl)[..., None] * jnp.einsum("bhcn,bhnp->bhcp", ct, S)
+        # intra: A[t,j] = (C_t . B_j) * exp(incl_t - incl_j) for j <= t
+        ratio = jnp.exp(jnp.clip(incl[..., :, None] - incl[..., None, :], -60.0, 0.0))
+        A = jnp.einsum("bhtn,bhjn->bhtj", ct, bt) * ratio
+        mask = jnp.tril(jnp.ones((C, C), bool))
+        A = jnp.where(mask[None, None], A, 0.0)
+        y = y + jnp.einsum("bhtj,bhjp->bhtp", A, xt)
+        # state update
+        b_dec = bt * jnp.exp(jnp.clip(total - incl, -60.0, 0.0))[..., None]
+        S = jnp.exp(total[..., 0])[..., None, None] * S + jnp.einsum(
+            "bhjn,bhjp->bhnp", b_dec, xt
+        )
+        return S, y
+
+    state_out, ys = jax.lax.scan(chunk_step, state, (xc, bc, cc, lac))
+    y = ys.transpose(1, 0, 3, 2, 4).reshape(B, T, H, P)
+    return y.astype(x.dtype), state_out
+
+
+def ssd_decode_ref(x, a, Bm, Cm, state):
+    """Single-token step. x:(B,H,P), a:(B,H), Bm/Cm:(B,H,N), state:(B,H,N,P)."""
+    xf, af, bf, cf = (z.astype(jnp.float32) for z in (x, a, Bm, Cm))
+    state = af[..., None, None] * state + bf[..., :, None] * xf[..., None, :]
+    y = jnp.einsum("bhn,bhnp->bhp", cf, state)
+    return y.astype(x.dtype), state

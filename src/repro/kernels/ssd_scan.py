@@ -1,0 +1,102 @@
+"""Pallas TPU kernel for the SSD (Mamba-2 form) chunked scan (DESIGN.md §6).
+
+Scalar decay per head per step.  Grid (B, H, T/C), sequential chunk axis;
+carried (N x P) fp32 state in VMEM scratch.  Intra-chunk work: a (C x C)
+masked decay-weighted attention matmul (C_t·B_j) plus two (C x N)/(N x P)
+matmuls — all MXU-friendly.  Validated with interpret=True against
+ref.ssd_ref / ssd_chunked_ref.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, a_ref, b_ref, c_ref, s0_ref,
+            y_ref, sout_ref, state_ref, *, chunk: int, n_chunks: int):
+    C = chunk
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = s0_ref[0, 0].astype(jnp.float32)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)          # (C, P)
+    a = a_ref[0, :, 0].astype(jnp.float32)             # (C,)
+    Bm = b_ref[0, :, 0, :].astype(jnp.float32)         # (C, N)
+    Cm = c_ref[0, :, 0, :].astype(jnp.float32)         # (C, N)
+
+    la = jnp.log(jnp.clip(a, 1e-12, 1.0))              # (C,) <= 0
+    incl = jnp.cumsum(la)                              # (C,)
+    total = incl[-1]
+
+    S = state_ref[...]                                 # (N, P)
+    # inter-chunk: y_t = exp(incl_t) * C_t @ S
+    y = jnp.exp(incl)[:, None] * jax.lax.dot_general(
+        Cm, S, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    # intra-chunk: A[t,j] = (C_t . B_j) exp(incl_t - incl_j), j <= t
+    ratio = jnp.exp(jnp.clip(incl[:, None] - incl[None, :], -60.0, 0.0))
+    A = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * ratio
+    ti = jax.lax.broadcasted_iota(jnp.int32, (C, C), 0)
+    tj = jax.lax.broadcasted_iota(jnp.int32, (C, C), 1)
+    A = jnp.where(tj <= ti, A, 0.0)
+    y = y + jax.lax.dot_general(A, x, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+
+    b_dec = Bm * jnp.exp(jnp.clip(total - incl, -60.0, 0.0))[:, None]
+    upd = jax.lax.dot_general(b_dec, x, (((0,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)  # (N, P)
+    state_ref[...] = jnp.exp(total) * S + upd
+
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+
+    @pl.when(ci == n_chunks - 1)
+    def _finish():
+        sout_ref[0, 0] = state_ref[...]
+
+
+def ssd(
+    x: jnp.ndarray,          # (B, T, H, P) dt-scaled inputs
+    a: jnp.ndarray,          # (B, T, H) decay in (0,1]
+    Bm: jnp.ndarray,         # (B, T, H, N)
+    Cm: jnp.ndarray,         # (B, T, H, N)
+    state: Optional[jnp.ndarray] = None,  # (B, H, N, P) fp32
+    *,
+    chunk: int = 64,
+    interpret: bool = False,
+):
+    B, T, H, P = x.shape
+    N = Bm.shape[-1]
+    chunk = min(chunk, T)
+    if T % chunk:
+        raise ValueError(f"T={T} not divisible by chunk={chunk}")
+    nC = T // chunk
+    if state is None:
+        state = jnp.zeros((B, H, N, P), jnp.float32)
+
+    kernel = functools.partial(_kernel, chunk=chunk, n_chunks=nC)
+    xspec = pl.BlockSpec((1, chunk, 1, P), lambda b, h, ci: (b, ci, h, 0))
+    nspec = pl.BlockSpec((1, chunk, 1, N), lambda b, h, ci: (b, ci, h, 0))
+    aspec = pl.BlockSpec((1, chunk, 1), lambda b, h, ci: (b, ci, h))
+    state_spec = pl.BlockSpec((1, 1, N, P), lambda b, h, ci: (b, h, 0, 0))
+
+    y, state_out = pl.pallas_call(
+        kernel,
+        grid=(B, H, nC),
+        in_specs=[xspec, aspec, nspec, nspec, state_spec],
+        out_specs=[xspec, state_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, T, H, P), x.dtype),
+            jax.ShapeDtypeStruct((B, H, N, P), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
+        interpret=interpret,
+    )(x, a, Bm, Cm, state)
+    return y, state_out

@@ -1,0 +1,111 @@
+"""Pallas TPU kernel for the RWKV6 (Finch) WKV recurrence — chunked
+linear-attention form (DESIGN.md §6).
+
+Grid (B, H, T/C): the chunk axis is sequential; the carried per-(b,h) state
+(N x N, fp32) lives in VMEM scratch across chunk steps.  Intra-chunk work is
+(C x C) and (C x N)x(N x N) matmuls on the MXU; decay ratios are formed in
+log space as *differences* (exp of a clipped non-positive exponent) — the
+factorized exp(excl)·exp(-incl) form overflows under strong decay.
+
+Validated with interpret=True against ref.wkv6_ref / wkv6_chunked_ref.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref,
+            y_ref, sout_ref, state_ref, *, chunk: int, n_chunks: int):
+    C = chunk
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = s0_ref[0, 0].astype(jnp.float32)
+
+    r = r_ref[0, :, 0, :].astype(jnp.float32)          # (C, N)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    w = w_ref[0, :, 0, :].astype(jnp.float32)
+    u = u_ref[0, :].astype(jnp.float32)                # (N,)
+
+    lw = jnp.log(jnp.clip(w, 1e-12, 1.0))              # (C, N) <= 0
+    incl = jnp.cumsum(lw, axis=0)                      # log prod_{1..t}
+    excl = incl - lw                                   # log prod_{1..t-1}
+    total = incl[-1:, :]                               # (1, N)
+
+    S = state_ref[...]                                 # (N, N) fp32
+    q_dec = r * jnp.exp(excl)
+    y = jax.lax.dot_general(q_dec, S, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (C, N)
+
+    # intra-chunk: A[t,j] = sum_n r[t,n] k[j,n] exp(excl_t - incl_j), j < t
+    dec = jnp.exp(jnp.clip(excl[:, None, :] - incl[None, :, :], -60.0, 0.0))
+    A = jnp.sum(r[:, None, :] * k[None, :, :] * dec, axis=2)     # (C, C)
+    ti = jax.lax.broadcasted_iota(jnp.int32, (C, C), 0)
+    tj = jax.lax.broadcasted_iota(jnp.int32, (C, C), 1)
+    A = jnp.where(tj < ti, A, 0.0)
+
+    diag = jnp.sum(r * u[None, :] * k, axis=1)         # (C,)
+    y = y + jax.lax.dot_general(A, v, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    y = y + diag[:, None] * v
+
+    k_dec = k * jnp.exp(jnp.clip(total - incl, -60.0, 0.0))
+    kv = jax.lax.dot_general(k_dec, v, (((0,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (N, N)
+    state_ref[...] = jnp.exp(total[0])[:, None] * S + kv
+
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+
+    @pl.when(ci == n_chunks - 1)
+    def _finish():
+        sout_ref[0, 0] = state_ref[...]
+
+
+def wkv6(
+    r: jnp.ndarray,          # (B, T, H, N)
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    w: jnp.ndarray,          # decay in (0,1), per key channel
+    u: jnp.ndarray,          # (H, N)
+    state: Optional[jnp.ndarray] = None,  # (B, H, N, N) fp32
+    *,
+    chunk: int = 64,
+    interpret: bool = False,
+):
+    B, T, H, N = r.shape
+    chunk = min(chunk, T)
+    if T % chunk:
+        raise ValueError(f"T={T} not divisible by chunk={chunk}")
+    nC = T // chunk
+    if state is None:
+        state = jnp.zeros((B, H, N, N), jnp.float32)
+
+    kernel = functools.partial(_kernel, chunk=chunk, n_chunks=nC)
+    seq_spec = pl.BlockSpec((1, chunk, 1, N), lambda b, h, ci: (b, ci, h, 0))
+    state_spec = pl.BlockSpec((1, 1, N, N), lambda b, h, ci: (b, h, 0, 0))
+
+    y, state_out = pl.pallas_call(
+        kernel,
+        grid=(B, H, nC),
+        in_specs=[
+            seq_spec, seq_spec, seq_spec, seq_spec,
+            pl.BlockSpec((1, N), lambda b, h, ci: (h, 0)),
+            state_spec,
+        ],
+        out_specs=[seq_spec, state_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, T, H, N), v.dtype),
+            jax.ShapeDtypeStruct((B, H, N, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((N, N), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u, state)
+    return y, state_out

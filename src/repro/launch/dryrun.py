@@ -1,0 +1,414 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+# NOTE: the XLA_FLAGS assignment above MUST precede any jax import (device
+# count locks on first backend init), so this module docstring comes after.
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes, with memory / cost / collective analysis.
+
+This is how the distribution config is proven coherent without hardware
+(deliverable (e)): a sharding mismatch, an unsupported collective, or an
+absurd memory plan surfaces HERE as a failed compile or a pathological
+analysis, not on a 512-chip reservation.
+
+  train_4k                  -> lowers train_step (params+opt donated)
+  prefill_32k               -> lowers prefill (batch -> logits + cache)
+  decode_32k / long_500k    -> lowers serve_step (1 token vs seq_len cache,
+                               cache donated; long_500k seq-shards the cache)
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3.2-1b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--out results/dryrun]
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import base as ax
+from repro.configs import get_arch, get_shape, list_archs
+from repro.configs.base import ArchSpec, ModelConfig, ShapeConfig
+from repro.launch.mesh import make_production_mesh
+from repro.models import common as cm
+from repro.models import model_zoo
+from repro.sharding.rules import MeshRules
+from repro.training import make_train_state, make_train_step
+
+# ---------------------------------------------------------------------------
+# Sharding resolution
+# ---------------------------------------------------------------------------
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+
+def make_rules(spec: ArchSpec, shape: ShapeConfig, mesh,
+               extra: Optional[Dict] = None) -> MeshRules:
+    merged = dict(spec.rules)
+    if shape.kind != "train":
+        merged.update(spec.serve_rules)
+    merged.update(shape.rule_overrides)
+    if extra:
+        merged.update(extra)
+    return MeshRules(mesh, merged)
+
+
+def spec_shardings(rules: MeshRules, specs) -> Any:
+    """ParamSpec tree -> NamedSharding tree (divisibility-checked)."""
+    return jax.tree.map(
+        lambda s: rules.sharding(s.axes, s.shape, name=str(s.shape)),
+        specs, is_leaf=cm.is_spec)
+
+
+def abstract_tree(specs) -> Any:
+    return jax.tree.map(lambda s: s.abstract(), specs, is_leaf=cm.is_spec)
+
+
+def abstract_tree_bf16(specs) -> Any:
+    """Serving-path params: inference weights ship in bf16 (fp32 master
+    stays on the training side)."""
+    def cast(s):
+        a = s.abstract()
+        if a.dtype == jnp.float32:
+            return jax.ShapeDtypeStruct(a.shape, jnp.bfloat16)
+        return a
+    return jax.tree.map(cast, specs, is_leaf=cm.is_spec)
+
+
+def batch_shardings(rules: MeshRules, batch_sds: Dict[str, Any]) -> Dict:
+    out = {}
+    for k, v in batch_sds.items():
+        axes = (ax.BATCH,) + (None,) * (len(v.shape) - 1)
+        out[k] = rules.sharding(axes, v.shape, name=k)
+    return out
+
+
+def state_shardings(rules: MeshRules, model, train_cfg) -> Tuple[Any, Any]:
+    """(abstract TrainState, TrainState of NamedShardings)."""
+    from repro.optim.adamw import QTensor
+    from repro.training.train_step import TrainState
+    from repro.optim.adamw import AdamWState
+
+    specs = model.param_specs()
+    p_sds = abstract_tree(specs)
+    p_sh = spec_shardings(rules, specs)
+    state_sds = jax.eval_shape(
+        lambda p: make_train_state(p, train_cfg), p_sds)
+    repl = rules.sharding((), ())
+
+    if not train_cfg.quantized_opt_state:
+        state_sh = TrainState(step=repl, params=p_sh,
+                              opt=AdamWState(step=repl, mu=p_sh, nu=p_sh))
+        return state_sds, state_sh
+
+    def q_shard(spec: cm.ParamSpec):
+        from repro.optim.adamw import quantize
+        qt = jax.eval_shape(
+            lambda: quantize(jnp.zeros(spec.shape, jnp.float32)))
+        q_sh = rules.sharding(spec.axes, qt.q.shape, name="q" + str(spec.shape))
+        # scale keeps the param's rank (blocked dim shrunk in place), so it
+        # reuses the same logical axes; divisibility fallback handles the
+        # shrunk dim when it no longer divides.
+        s_axes = spec.axes if len(spec.shape) else ()
+        s_sh = rules.sharding(s_axes, qt.scale.shape,
+                              name="qs" + str(spec.shape))
+        return QTensor(q=q_sh, scale=s_sh, block=qt.block, axis=qt.axis)
+
+    m_sh = jax.tree.map(q_shard, specs, is_leaf=cm.is_spec)
+    state_sh = TrainState(step=repl, params=p_sh,
+                          opt=AdamWState(step=repl, mu=m_sh, nu=m_sh))
+    return state_sds, state_sh
+
+
+# ---------------------------------------------------------------------------
+# HLO analysis
+# ---------------------------------------------------------------------------
+
+_COLL_RE = re.compile(
+    r"(\ball-gather|\ball-reduce|\breduce-scatter|\ball-to-all|"
+    r"\bcollective-permute)(?:-start)?\(")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+_TYPE_RE = re.compile(r"(\([^)]*\)|\S+)\s")
+
+
+def _line_result_bytes(line: str) -> int:
+    """Bytes of the result shape(s) on an HLO op line (per partition).
+
+    Handles tuple result types — `(f32[..], f32[..]) all-reduce(...)` from
+    XLA's collective combiner; naively splitting at the first '(' counted
+    those as ZERO bytes (undercounting the collective term)."""
+    lhs = line.split(" = ", 1)
+    if len(lhs) != 2:
+        return 0
+    m = _TYPE_RE.match(lhs[1])
+    if not m:
+        return 0
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(m.group(1)):
+        nb = _DTYPE_BYTES.get(dt)
+        if nb is None:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * nb
+    return total
+
+
+def parse_collectives(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Static per-device collective bytes by op kind (scan bodies count once
+    — see roofline probe correction)."""
+    out: Dict[str, Dict[str, float]] = {}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = _COLL_RE.search(line)
+        if not m or " = " not in line:
+            continue
+        kind = m.group(1)
+        b = _line_result_bytes(line)
+        rec = out.setdefault(kind, {"count": 0, "bytes": 0})
+        rec["count"] += 1
+        rec["bytes"] += b
+    return out
+
+
+def sharded_bytes_per_device(sds_tree, sharding_tree, mesh) -> int:
+    """Exact per-device resident bytes of a sharded pytree."""
+    n_dev = mesh.devices.size
+    leaves_s = jax.tree.leaves(sds_tree)
+    leaves_sh = jax.tree.leaves(
+        sharding_tree, is_leaf=lambda x: hasattr(x, "spec"))
+    total = 0
+    for sds, sh in zip(leaves_s, leaves_sh):
+        nbytes = int(np.prod(sds.shape)) * jnp.dtype(sds.dtype).itemsize
+        used = 1
+        for entry in sh.spec:
+            if entry is None:
+                continue
+            axes = entry if isinstance(entry, tuple) else (entry,)
+            for a in axes:
+                used *= mesh.shape[a]
+        total += nbytes // max(used, 1)
+    return total
+
+
+def analyze_compiled(compiled, mesh) -> Dict[str, Any]:
+    out: Dict[str, Any] = {}
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        out["cost"] = {k: float(v) for k, v in ca.items()
+                       if isinstance(v, (int, float)) and
+                       ("flops" in k or "bytes" in k or "utilization" not in k)}
+        out["flops"] = float(ca.get("flops", 0.0))
+        out["bytes_accessed"] = float(ca.get("bytes accessed", 0.0))
+    except Exception as e:  # noqa: BLE001
+        out["cost_error"] = repr(e)
+    try:
+        ma = compiled.memory_analysis()
+        out["memory"] = {
+            k: int(getattr(ma, k))
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes",
+                      "alias_size_in_bytes")
+            if hasattr(ma, k)
+        }
+    except Exception as e:  # noqa: BLE001
+        out["memory_error"] = repr(e)
+    try:
+        hlo = compiled.as_text()
+        out["collectives"] = parse_collectives(hlo)
+        out["hlo_bytes"] = len(hlo)
+        out["hlo_collective_bytes_per_device"] = float(
+            sum(v["bytes"] for v in out["collectives"].values()))
+    except Exception as e:  # noqa: BLE001
+        out["hlo_error"] = repr(e)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Cell lowering
+# ---------------------------------------------------------------------------
+
+
+def lower_cell(
+    arch_name: str,
+    shape_name: str,
+    *,
+    multi_pod: bool = False,
+    mesh=None,
+    rule_extra: Optional[Dict] = None,
+    train_overrides: Optional[Dict] = None,
+    model_overrides: Optional[Dict] = None,
+    compile_it: bool = True,
+) -> Dict[str, Any]:
+    """Lower (and compile) one (arch x shape x mesh) cell; returns a report
+    dict.  Raises on lowering/compile failure only if the failure is a bug
+    (callers catch for the sweep report)."""
+    spec = get_arch(arch_name)
+    shape = get_shape(spec, shape_name)
+    if shape_name in spec.skip_shapes:
+        return {"arch": arch_name, "shape": shape_name,
+                "skipped": spec.skip_shapes[shape_name]}
+    mesh = mesh or make_production_mesh(multi_pod=multi_pod)
+    cfg = spec.model
+    if model_overrides:
+        cfg = cfg.replace(**model_overrides)
+    train_cfg = spec.train
+    if train_overrides:
+        import dataclasses as _dc
+        train_cfg = _dc.replace(train_cfg, **train_overrides)
+
+    rules = make_rules(spec, shape, mesh, rule_extra)
+    model = model_zoo.build_model(cfg, rules=rules, max_seq=shape.seq_len)
+    report: Dict[str, Any] = {
+        "arch": arch_name, "shape": shape_name,
+        "mesh": dict(mesh.shape), "kind": shape.kind,
+        "n_params": cm.count_params(model.param_specs()),
+    }
+
+    t0 = time.perf_counter()
+    with mesh:
+        if shape.kind == "train":
+            state_sds, state_sh = state_shardings(rules, model, train_cfg)
+            batch_sds = model_zoo.input_specs(cfg, shape)
+            batch_sh = batch_shardings(rules, batch_sds)
+            loss_fn = model_zoo.make_loss_fn(model)
+            step = make_train_step(loss_fn, train_cfg)
+            jitted = jax.jit(step, in_shardings=(state_sh, batch_sh),
+                             donate_argnums=(0,))
+            lowered = jitted.lower(state_sds, batch_sds)
+            resident = sharded_bytes_per_device(state_sds, state_sh, mesh)
+        elif shape.kind == "prefill":
+            specs = model.param_specs()
+            p_sds, p_sh = abstract_tree_bf16(specs), spec_shardings(rules, specs)
+            batch_sds = model_zoo.input_specs(cfg, shape)
+            batch_sh = batch_shardings(rules, batch_sds)
+            cache_specs = model.cache_specs(shape.global_batch, shape.seq_len)
+            c_sds = abstract_tree(cache_specs)
+            c_sh = spec_shardings(rules, cache_specs)
+            fn = model_zoo.make_prefill_fn(model)
+            jitted = jax.jit(fn, in_shardings=(p_sh, batch_sh, c_sh),
+                             donate_argnums=(2,))
+            lowered = jitted.lower(p_sds, batch_sds, c_sds)
+            resident = (sharded_bytes_per_device(p_sds, p_sh, mesh)
+                        + sharded_bytes_per_device(c_sds, c_sh, mesh))
+        else:  # decode
+            specs = model.param_specs()
+            p_sds, p_sh = abstract_tree_bf16(specs), spec_shardings(rules, specs)
+            dec = model_zoo.decode_input_specs(cfg, shape, model)
+            cache_specs = model.cache_specs(shape.global_batch, shape.seq_len)
+            c_sh = spec_shardings(rules, cache_specs)
+            tok_sh = rules.sharding((ax.BATCH, None), dec["tokens"].shape)
+            idx_sh = rules.sharding((), ())
+            # keep the constraint inside the layer whenever the cache is
+            # sequence-sharded (flash-decode-style distributed softmax)
+            kv_seq_shard = bool(rules._mesh_axes_for(ax.CACHE_SEQ))
+            fn = model_zoo.make_decode_fn(model, kv_seq_shard=kv_seq_shard)
+            jitted = jax.jit(fn, in_shardings=(p_sh, tok_sh, c_sh, idx_sh),
+                             donate_argnums=(2,))
+            lowered = jitted.lower(p_sds, dec["tokens"], dec["cache"],
+                                   dec["index"])
+            resident = (sharded_bytes_per_device(p_sds, p_sh, mesh)
+                        + sharded_bytes_per_device(dec["cache"], c_sh, mesh))
+        report["lower_seconds"] = round(time.perf_counter() - t0, 2)
+        report["resident_bytes_per_device"] = int(resident)
+        report["resident_gib_per_device"] = round(resident / 2**30, 3)
+        report["fallbacks"] = [
+            f"{f.tensor} dim{f.dim} {f.logical}->{f.wanted}: {f.reason}"
+            for f in rules.fallbacks]
+
+        if compile_it:
+            t1 = time.perf_counter()
+            compiled = lowered.compile()
+            report["compile_seconds"] = round(time.perf_counter() - t1, 2)
+            report.update(analyze_compiled(compiled, mesh))
+            report["compiled"] = True
+    return report
+
+
+# ---------------------------------------------------------------------------
+# CLI sweep
+# ---------------------------------------------------------------------------
+
+
+def run_sweep(archs, shapes, multi_pod: bool, out_dir: str,
+              stop_on_error: bool = False) -> Dict[str, Any]:
+    os.makedirs(out_dir, exist_ok=True)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_tag = "multipod" if multi_pod else "singlepod"
+    results = []
+    for a in archs:
+        spec = get_arch(a)
+        for s in shapes:
+            if not any(sh.name == s for sh in spec.shapes):
+                continue
+            tag = f"{a}_{s}_{mesh_tag}"
+            print(f"=== {tag} ===", flush=True)
+            try:
+                rep = lower_cell(a, s, multi_pod=multi_pod, mesh=mesh)
+            except Exception as e:  # noqa: BLE001
+                rep = {"arch": a, "shape": s, "error": repr(e),
+                       "traceback": traceback.format_exc()}
+                print(f"FAILED: {e!r}", flush=True)
+                if stop_on_error:
+                    raise
+            results.append(rep)
+            with open(os.path.join(out_dir, tag + ".json"), "w") as fh:
+                json.dump(rep, fh, indent=1, default=str)
+            if "skipped" in rep:
+                print(f"skipped: {rep['skipped']}", flush=True)
+            elif "error" not in rep:
+                print(f"ok: {rep.get('resident_gib_per_device', '?')} GiB/dev, "
+                      f"flops={rep.get('flops', 0):.3e}, "
+                      f"lower={rep.get('lower_seconds')}s "
+                      f"compile={rep.get('compile_seconds')}s", flush=True)
+    summary = {
+        "mesh": mesh_tag,
+        "n_cells": len(results),
+        "ok": sum(1 for r in results if r.get("compiled")),
+        "skipped": sum(1 for r in results if "skipped" in r),
+        "failed": sum(1 for r in results if "error" in r),
+    }
+    with open(os.path.join(out_dir, f"summary_{mesh_tag}.json"), "w") as fh:
+        json.dump({"summary": summary, "results": results}, fh, indent=1,
+                  default=str)
+    print(json.dumps(summary))
+    return summary
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default=None)
+    p.add_argument("--shape", default=None)
+    p.add_argument("--all", action="store_true")
+    p.add_argument("--multi-pod", action="store_true")
+    p.add_argument("--out", default="results/dryrun")
+    p.add_argument("--stop-on-error", action="store_true")
+    args = p.parse_args()
+
+    shapes = [args.shape] if args.shape else \
+        ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+    archs = [args.arch] if args.arch else list_archs()
+    if not (args.all or args.arch):
+        p.error("pass --arch or --all")
+    run_sweep(archs, shapes, args.multi_pod, args.out, args.stop_on_error)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module constant — importing this module never touches jax
+device state (the dry-run sets XLA_FLAGS before any jax import; smoke tests
+see the real single device).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (16, 16) ('data', 'model') = 256 chips.
+    Multi-pod:  (2, 16, 16) ('pod', 'data', 'model') = 512 chips.
+    `pod` acts as an outer data-parallel axis (batch sharded over
+    ('pod', 'data')); params/optimizer replicate across pods.
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Degenerate 1x1 mesh on the real host device (smoke tests)."""
+    return jax.make_mesh((1, 1), ("data", "model"))

@@ -1,0 +1,297 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+"""Three-term roofline analysis from the compiled dry-run (deliverable (g)).
+
+    compute term    = HLO_FLOPs    / (chips x 197e12 FLOP/s bf16)
+    memory term     = HLO_bytes    / (chips x 819e9  B/s HBM)
+    collective term = coll_bytes   / (chips x 5e10   B/s/link ICI)
+
+XLA:CPU's cost_analysis counts a scan body ONCE (verified: L=1/4/16 report
+identical flops), so per-(arch x shape x mesh) we run two UNROLLED probe
+compiles at reduced depth, fit total(L) = nonlayer + L*per_layer, and
+extrapolate to full depth — cross-checked against analytic MODEL_FLOPS
+(6*N_active*D for training; 2*N_active per decoded token) so remat/recompute
+waste is visible as the useful-flops ratio.
+
+Per-device vs global: the partitioned module reports per-device numbers;
+dividing global quantities by `chips` (prompt convention) is identical.
+
+Usage:
+  python -m repro.launch.roofline --arch rwkv6-7b --shape train_4k
+  python -m repro.launch.roofline --all --out results/roofline
+"""
+import argparse
+import json
+import traceback
+from typing import Any, Dict, Optional
+
+from repro.configs import get_arch, get_shape, list_archs
+from repro.configs.base import ModelConfig, ShapeConfig
+
+# TPU v5e hardware constants (per chip)
+PEAK_FLOPS = 197e12        # bf16 FLOP/s
+HBM_BW = 819e9             # B/s
+LINK_BW = 5e10             # B/s per ICI link (~50 GB/s)
+HBM_BYTES = 16 * 2**30     # 16 GiB
+
+
+# ---------------------------------------------------------------------------
+# Analytic MODEL_FLOPS
+# ---------------------------------------------------------------------------
+
+
+def _active_params(cfg: ModelConfig) -> float:
+    """Non-embedding params active per token (MoE: top_k of routed)."""
+    from repro.models import model_zoo
+    from repro.models import common as cm
+
+    model = model_zoo.build_model(cfg, max_seq=128)
+    specs = model.param_specs()
+    import numpy as np
+    import jax
+
+    total_active = 0.0
+    def walk(tree, path):
+        nonlocal total_active
+        if cm.is_spec(tree):
+            n = float(np.prod(tree.shape))
+            p = "/".join(path)
+            if "embedding" in p or "dec_pos" in p:
+                return                      # embedding gather ~ free
+            if ("/moe/" in p or p.startswith("moe/")) and (
+                    "/wi" in p or "/wg" in p or "/wo" in p) and \
+                    "shared" not in p:
+                n *= cfg.moe_top_k / max(cfg.moe_num_experts, 1)
+            total_active += n
+            return
+        if isinstance(tree, dict):
+            for k, v in tree.items():
+                walk(v, path + [k])
+
+    walk(specs, [])
+    if cfg.tie_embeddings:
+        total_active += cfg.padded_vocab * cfg.d_model  # logits matmul
+    return total_active
+
+
+def _attn_flops_fwd(cfg: ModelConfig, B: int, S: int, decode: bool) -> float:
+    """Score+value matmul flops (fwd), summed over attention layers.
+
+    decode=True means ONE new token against an S-token cache/state: token
+    count is 1, not S (state-recurrence archs advance the state once).
+    """
+    hd = cfg.resolved_head_dim
+    H = cfg.num_heads
+    n_tok = 1 if decode else S
+    if cfg.family == "rwkv6":
+        # chunked linear attention: ~4*H*N^2 per token
+        N = cfg.rwkv_head_dim
+        return 4.0 * B * n_tok * cfg.rwkv_num_heads * N * N * cfg.num_layers
+    n_attn = sum(1 for i in range(cfg.num_layers) if cfg.is_attention_layer(i))
+    ssd_fl = 0.0
+    if cfg.family == "hybrid":
+        n_mamba = cfg.num_layers - n_attn
+        N, P = cfg.mamba_d_state, cfg.mamba_head_dim
+        Hm = cfg.mamba_num_heads
+        ssd_fl = 4.0 * B * n_tok * Hm * N * P * n_mamba
+    if decode:
+        per = 4.0 * B * S * H * hd                  # 1 token reads S cache
+    else:
+        kv_span = min(cfg.sliding_window or S, S)
+        per = 4.0 * B * S * kv_span * H * hd * (0.5 if kv_span == S else 1.0)
+    fl = per * n_attn + ssd_fl
+    if cfg.family == "encdec":
+        cross = 4.0 * B * n_tok * cfg.encoder_seq * H * hd * cfg.num_layers
+        fl += cross
+        if not decode:  # the encoder runs once per train/prefill step only
+            fl += 4.0 * B * cfg.encoder_seq ** 2 * H * hd * cfg.encoder_layers
+    return fl
+
+
+def analytic_model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """Global useful flops for one step of this cell."""
+    B = shape.global_batch
+    if shape.kind == "train":
+        tokens = B * shape.seq_len
+        return (6.0 * _active_params(cfg) * tokens
+                + 3.0 * _attn_flops_fwd(cfg, B, shape.seq_len, False))
+    if shape.kind == "prefill":
+        tokens = B * shape.seq_len
+        return (2.0 * _active_params(cfg) * tokens
+                + _attn_flops_fwd(cfg, B, shape.seq_len, False))
+    # decode: one token against a seq_len cache
+    return (2.0 * _active_params(cfg) * B
+            + _attn_flops_fwd(cfg, B, shape.seq_len, True))
+
+
+# ---------------------------------------------------------------------------
+# Probe-corrected HLO totals
+# ---------------------------------------------------------------------------
+
+
+def _depth_override(cfg: ModelConfig, d: int) -> Dict[str, Any]:
+    ov: Dict[str, Any] = {"scan_layers": False}
+    if cfg.family == "hybrid":
+        ov["num_layers"] = d * 8
+    else:
+        ov["num_layers"] = d
+    if cfg.family == "encdec":
+        ov["encoder_layers"] = d
+    return ov
+
+
+def _layers_of(cfg: ModelConfig, d: Optional[int] = None) -> float:
+    """Depth in 'probe units' (hybrid: groups; encdec: enc+dec pairs)."""
+    if d is not None:
+        return float(d)
+    if cfg.family == "hybrid":
+        return cfg.num_layers / 8.0
+    return float(cfg.num_layers)
+
+
+def _extract(rep: Dict[str, Any]) -> Dict[str, float]:
+    return {
+        "flops": float(rep.get("flops", 0.0)),
+        "bytes": float(rep.get("bytes_accessed", 0.0)),
+        "coll": float(rep.get("hlo_collective_bytes_per_device", 0.0)),
+    }
+
+
+def roofline_cell(
+    arch: str, shape_name: str, *, multi_pod: bool = False,
+    depths=(1, 2), mesh=None, rule_extra=None, train_overrides=None,
+    model_overrides=None, full_report: Optional[Dict[str, Any]] = None,
+) -> Dict[str, Any]:
+    from repro.launch import dryrun
+
+    spec = get_arch(arch)
+    if shape_name in spec.skip_shapes:
+        return {"arch": arch, "shape": shape_name,
+                "skipped": spec.skip_shapes[shape_name]}
+    shape = get_shape(spec, shape_name)
+    cfg = spec.model
+    if model_overrides:
+        cfg = cfg.replace(**model_overrides)
+    mesh = mesh or dryrun.make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+
+    # 1. full-depth scanned compile (memory + schedule evidence)
+    if full_report is None:
+        full_report = dryrun.lower_cell(
+            arch, shape_name, mesh=mesh, rule_extra=rule_extra,
+            train_overrides=train_overrides, model_overrides=model_overrides)
+
+    # 2. unrolled probes
+    probes: Dict[int, Dict[str, float]] = {}
+    for d in depths:
+        ov = dict(model_overrides or {})
+        ov.update(_depth_override(cfg, d))
+        rep = dryrun.lower_cell(
+            arch, shape_name, mesh=mesh, rule_extra=rule_extra,
+            train_overrides=train_overrides, model_overrides=ov)
+        probes[d] = _extract(rep)
+
+    d1, d2 = sorted(depths)[:2]
+    L = _layers_of(cfg)
+    out: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name, "mesh_chips": chips,
+        "kind": shape.kind,
+        "full": _extract(full_report),
+        "resident_gib_per_device": full_report.get("resident_gib_per_device"),
+        "memory_analysis": full_report.get("memory"),
+        "collective_detail": full_report.get("collectives"),
+        "fallbacks": full_report.get("fallbacks"),
+        "probes": {str(k): v for k, v in probes.items()},
+    }
+    terms: Dict[str, float] = {}
+    for key in ("flops", "bytes", "coll"):
+        per_layer = (probes[d2][key] - probes[d1][key]) / (d2 - d1)
+        nonlayer = probes[d1][key] - d1 * per_layer
+        terms[key] = max(nonlayer + L * per_layer, 0.0)
+        out[f"per_layer_{key}"] = per_layer
+        out[f"nonlayer_{key}"] = nonlayer
+    out["hlo_flops_per_device"] = terms["flops"]
+    out["hlo_bytes_per_device"] = terms["bytes"]
+    out["coll_bytes_per_device"] = terms["coll"]
+
+    compute_s = terms["flops"] / PEAK_FLOPS
+    memory_s = terms["bytes"] / HBM_BW
+    coll_s = terms["coll"] / LINK_BW
+    out["compute_term_s"] = compute_s
+    out["memory_term_s"] = memory_s
+    out["collective_term_s"] = coll_s
+    dom = max(
+        (("compute", compute_s), ("memory", memory_s),
+         ("collective", coll_s)), key=lambda kv: kv[1])
+    out["bottleneck"] = dom[0]
+    out["step_time_lower_bound_s"] = dom[1]
+
+    mf = analytic_model_flops(cfg, shape)
+    out["model_flops_global"] = mf
+    hlo_global = terms["flops"] * chips
+    out["useful_flops_ratio"] = (mf / hlo_global) if hlo_global else 0.0
+    # roofline fraction: useful model flops per second at the bound, over peak
+    if dom[1] > 0:
+        out["roofline_fraction"] = (mf / dom[1]) / (chips * PEAK_FLOPS)
+    out["fits_hbm"] = bool(
+        (full_report.get("resident_gib_per_device") or 0) * 2**30
+        + (full_report.get("memory", {}) or {}).get("temp_size_in_bytes", 0)
+        < HBM_BYTES)
+    return out
+
+
+def fmt_row(r: Dict[str, Any]) -> str:
+    if "skipped" in r:
+        return f"{r['arch']:22s} {r['shape']:12s} SKIP"
+    return (f"{r['arch']:22s} {r['shape']:12s} "
+            f"C={r['compute_term_s']:9.3e} M={r['memory_term_s']:9.3e} "
+            f"X={r['collective_term_s']:9.3e} -> {r['bottleneck']:10s} "
+            f"useful={r['useful_flops_ratio']:.2f} "
+            f"roof={r.get('roofline_fraction', 0):.3f} "
+            f"res={r.get('resident_gib_per_device')}GiB")
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default=None)
+    p.add_argument("--shape", default=None)
+    p.add_argument("--all", action="store_true")
+    p.add_argument("--multi-pod", action="store_true")
+    p.add_argument("--out", default="results/roofline")
+    args = p.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    shapes = [args.shape] if args.shape else \
+        ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+    archs = [args.arch] if args.arch else list_archs()
+    if not (args.all or args.arch):
+        p.error("pass --arch or --all")
+
+    from repro.launch.dryrun import make_production_mesh
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    rows = []
+    for a in archs:
+        spec = get_arch(a)
+        for s in shapes:
+            if not any(sh.name == s for sh in spec.shapes):
+                continue
+            try:
+                r = roofline_cell(a, s, multi_pod=args.multi_pod, mesh=mesh)
+            except Exception as e:  # noqa: BLE001
+                r = {"arch": a, "shape": s, "error": repr(e),
+                     "traceback": traceback.format_exc()}
+            rows.append(r)
+            tag = f"{a}_{s}"
+            with open(os.path.join(args.out, tag + ".json"), "w") as fh:
+                json.dump(r, fh, indent=1, default=str)
+            print(fmt_row(r) if "error" not in r
+                  else f"{a} {s} ERROR {r['error']}", flush=True)
+    with open(os.path.join(args.out, "table.json"), "w") as fh:
+        json.dump(rows, fh, indent=1, default=str)
+
+
+if __name__ == "__main__":
+    main()

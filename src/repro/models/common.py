@@ -1,0 +1,162 @@
+"""Shared model machinery: ParamSpec trees, init, norms, RoPE, embeddings.
+
+Models are functional: a module is a pair (param_specs, apply).  ParamSpec
+carries shape, logical sharding axes, and an init distribution, so the same
+tree drives real init (smoke tests / CPU training), abstract init (dry-run),
+and sharding resolution.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import base as ax
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]       # logical axis per dim
+    init: str = "normal"                  # normal | zeros | ones | uniform
+    scale: float = 1.0                    # stddev multiplier (normal) / bound
+    dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+    def abstract(self) -> jax.ShapeDtypeStruct:
+        return jax.ShapeDtypeStruct(self.shape, self.dtype)
+
+    def materialize(self, key) -> jnp.ndarray:
+        if self.init == "zeros":
+            return jnp.zeros(self.shape, self.dtype)
+        if self.init == "ones":
+            return jnp.ones(self.shape, self.dtype)
+        if self.init == "uniform":
+            return jax.random.uniform(
+                key, self.shape, self.dtype, -self.scale, self.scale
+            )
+        # fan-in scaled normal
+        fan_in = self.shape[-2] if len(self.shape) >= 2 else self.shape[-1]
+        std = self.scale / math.sqrt(max(fan_in, 1))
+        return (jax.random.normal(key, self.shape) * std).astype(self.dtype)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def init_params(specs, rng) -> Dict:
+    """Materialize a ParamSpec tree with per-leaf folded keys (deterministic
+    regardless of tree iteration order)."""
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=is_spec)
+    keys = jax.random.split(rng, len(leaves))
+    vals = [s.materialize(k) for s, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def abstract_params(specs):
+    return jax.tree.map(lambda s: s.abstract(), specs, is_leaf=is_spec)
+
+
+def param_axes(specs):
+    return jax.tree.map(lambda s: s.axes, specs, is_leaf=is_spec)
+
+
+def count_params(specs) -> int:
+    return sum(
+        int(np.prod(s.shape)) for s in jax.tree.leaves(specs, is_leaf=is_spec)
+    )
+
+
+def stacked(spec: ParamSpec, n: int) -> ParamSpec:
+    """Prepend a scan ('layers') axis."""
+    return dataclasses.replace(
+        spec, shape=(n,) + spec.shape, axes=(ax.LAYERS,) + spec.axes
+    )
+
+
+def stack_tree(specs, n: int):
+    return jax.tree.map(lambda s: stacked(s, n), specs, is_leaf=is_spec)
+
+
+# ---------------------------------------------------------------------------
+# Numerics
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x, weight, eps: float = 1e-6):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return ((xf * jax.lax.rsqrt(var + eps)) * weight.astype(jnp.float32)).astype(dt)
+
+
+def layer_norm(x, weight, bias, eps: float = 1e-5):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * weight.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def group_norm(x, weight, bias, groups: int, eps: float = 1e-5):
+    """Per-head group norm over the last dim (rwkv6 output norm)."""
+    dt = x.dtype
+    *lead, D = x.shape
+    xf = x.astype(jnp.float32).reshape(*lead, groups, D // groups)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = ((xf - mu) * jax.lax.rsqrt(var + eps)).reshape(*lead, D)
+    return (y * weight.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def rope(x, positions, theta: float):
+    """Rotary embedding. x: (..., T, H, D) with positions (..., T) or (T,)."""
+    D = x.shape[-1]
+    half = D // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., T, half)
+    cos = jnp.cos(angles)[..., None, :]   # broadcast over heads
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(n: int, d: int) -> jnp.ndarray:
+    """Whisper-style sinusoidal table (n, d)."""
+    half = d // 2
+    log_timescale = math.log(10000.0) / max(half - 1, 1)
+    inv = np.exp(-log_timescale * np.arange(half))
+    pos = np.arange(n)[:, None] * inv[None, :]
+    return jnp.asarray(
+        np.concatenate([np.sin(pos), np.cos(pos)], axis=1), jnp.float32
+    )
+
+
+def activation(name: str):
+    if name == "silu":
+        return jax.nn.silu
+    if name == "gelu":
+        return jax.nn.gelu
+    if name == "relu_sq":
+        return lambda x: jnp.square(jax.nn.relu(x))
+    raise ValueError(name)
+
+
+def take_embedding(table, tokens):
+    """Gather rows; fp32 table -> activation dtype downstream."""
+    return jnp.take(table, tokens, axis=0)
+
+
+def softcap(logits, cap: float):
+    if not cap:
+        return logits
+    return cap * jnp.tanh(logits / cap)

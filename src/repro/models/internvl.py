@@ -1,0 +1,70 @@
+"""InternVL2-2B backbone — InternLM2-style dense LM with a STUB ViT frontend
+[arXiv:2404.16821].
+
+Per the assignment, the InternViT is a stub: ``input_specs()`` supplies
+(B, 256, 2048) precomputed patch embeddings used as a sequence prefix; text
+tokens fill the remaining positions.  The backbone is llama-like GQA (kv=8).
+Loss is computed on text positions only (the prefix is sliced off).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+import jax.numpy as jnp
+
+from repro.configs import base as ax
+from repro.models import transformer as tfm
+from repro.models.common import ParamSpec
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass
+class InternVLM(tfm.DenseLM):
+    def param_specs(self) -> Params:
+        s = tfm.param_specs(self.cfg)
+        D = self.cfg.d_model
+        # learned projector from (stub) ViT patch space into the LM embedding
+        s["mm_proj"] = ParamSpec((D, D), (ax.EMBED, ax.EMBED))
+        return s
+
+    def _prefix_embed(self, params, batch):
+        cfg = self.cfg
+        tok_x = tfm.embed(params, batch["tokens"], cfg, self.rules)
+        patch = batch["patch_embeds"].astype(cfg.dtype)
+        patch = jnp.einsum("bpd,de->bpe", patch,
+                           params["mm_proj"].astype(cfg.dtype))
+        return jnp.concatenate([patch, tok_x], axis=1)
+
+    def forward(self, params: Params, batch: Dict[str, jnp.ndarray]):
+        """Returns logits for TEXT positions only: (B, T_text, V)."""
+        cfg = self.cfg
+        x = self._prefix_embed(params, batch)
+        n_patch = batch["patch_embeds"].shape[1]
+        positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+        x = tfm.scan_stack(
+            self._layer_fn(positions), params["layers"], x,
+            remat=cfg.remat, scan=cfg.scan_layers, length=cfg.num_layers)
+        x = x[:, n_patch:, :]
+        return tfm.unembed(params, x, cfg, self.rules)
+
+    def prefill(self, params, tokens, cache, patch_embeds=None):
+        if patch_embeds is None:
+            return super().prefill(params, tokens, cache)
+        x = self._prefix_embed(params, {"tokens": tokens,
+                                        "patch_embeds": patch_embeds})
+        cfg = self.cfg
+        positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+
+        def fn(pl, cl, h):
+            y, nc = tfm.dense_layer(
+                pl, h, cfg, positions=positions, cache=(cl["k"], cl["v"]),
+                impl=self.impl, rules=self.rules)
+            return y, {"k": nc[0], "v": nc[1]}
+
+        x, cache = tfm.scan_stack_cache(fn, params["layers"], cache, x,
+                                        scan=cfg.scan_layers,
+                                        length=cfg.num_layers)
+        logits = tfm.unembed(params, x[:, -1:, :], cfg, self.rules)
+        return logits[:, 0, :], cache

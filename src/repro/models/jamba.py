@@ -1,0 +1,199 @@
+"""Jamba-1.5-large — hybrid Mamba+attention 1:7 interleave with MoE
+[arXiv:2403.19887].
+
+72 layers = 9 period-8 groups.  Within a group (offsets 0..7): offset 4 is a
+GQA attention layer, the other 7 are Mamba mixers (SSD form, models/mamba.py);
+FFN is MoE (16e top-2) on odd offsets and dense on even offsets.  The model
+scans over the 9 groups (uniform super-layer structure -> O(1)-in-depth HLO).
+
+`long_500k` RUNS: mamba state is O(1); the 9 attention layers' KV cache is
+sharded on the cache-sequence axis over `data` (rule override in the spec).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import base as ax
+from repro.configs.base import ModelConfig
+from repro.models import common as cm
+from repro.models import mamba as mb
+from repro.models import moe as moe_mod
+from repro.models import transformer as tfm
+from repro.models.common import ParamSpec
+
+Params = Dict[str, Any]
+
+PERIOD = 8
+
+
+def _offsets(cfg: ModelConfig):
+    attn_o = cfg.attn_layer_offset          # 4
+    mamba_os = [o for o in range(PERIOD) if o != attn_o]
+    moe_os = [o for o in range(PERIOD)
+              if o % cfg.moe_layer_period == cfg.moe_layer_offset]
+    dense_os = [o for o in range(PERIOD) if o not in moe_os]
+    return attn_o, mamba_os, moe_os, dense_os
+
+
+def group_specs(cfg: ModelConfig) -> Params:
+    _, mamba_os, moe_os, dense_os = _offsets(cfg)
+    return {
+        "attn": tfm.attn_specs(cfg),
+        "mamba": cm.stack_tree(mb.mamba_specs(cfg), len(mamba_os)),
+        "moe": cm.stack_tree(moe_mod.moe_ffn_specs(cfg), len(moe_os)),
+        "dense": cm.stack_tree(tfm.mlp_specs(cfg), len(dense_os)),
+    }
+
+
+def param_specs(cfg: ModelConfig) -> Params:
+    assert cfg.num_layers % PERIOD == 0
+    groups = cfg.num_layers // PERIOD
+    return {
+        "layers": cm.stack_tree(group_specs(cfg), groups),
+        **tfm.embed_specs(cfg),
+    }
+
+
+def _sub(tree, i):
+    return jax.tree.map(lambda a: a[i], tree)
+
+
+def group_forward(
+    gp: Params, x: jnp.ndarray, cfg: ModelConfig, *,
+    positions, cache: Optional[Params] = None, index=None,
+    impl="xla", rules=None, kv_seq_shard=False, with_aux=False,
+):
+    """One period-8 super-layer.  cache: {"k","v","conv","ssd"} (stacked 7 for
+    mamba states).  Returns (x, new_cache, aux)."""
+    attn_o, mamba_os, moe_os, dense_os = _offsets(cfg)
+    aux = jnp.float32(0.0)
+    new_cache: Dict[str, Any] = {}
+    new_mamba_states = []
+    m_i = 0
+    for o in range(PERIOD):
+        if o == attn_o:
+            c = (cache["k"], cache["v"]) if cache is not None else None
+            a, nc = tfm.attention_block(
+                gp["attn"], x, cfg, positions=positions, cache=c, index=index,
+                impl=impl, rules=rules, kv_seq_shard=kv_seq_shard)
+            x = x + a
+            if nc is not None:
+                new_cache["k"], new_cache["v"] = nc
+        else:
+            st = None
+            if cache is not None:
+                st = {"conv": cache["conv"][m_i], "ssd": cache["ssd"][m_i]}
+            a, ns = mb.mamba_mixer(_sub(gp["mamba"], m_i), x, cfg, states=st,
+                                   impl=impl, rules=rules)
+            x = x + a
+            if ns is not None:
+                new_mamba_states.append(ns)
+            m_i += 1
+        if o in moe_os:
+            e_i = moe_os.index(o)
+            if with_aux:
+                m, a_l = moe_mod.moe_ffn(_sub(gp["moe"], e_i), x, cfg, rules,
+                                         return_aux=True)
+                aux = aux + a_l
+            else:
+                m = moe_mod.moe_ffn(_sub(gp["moe"], e_i), x, cfg, rules)
+            x = x + m
+        else:
+            d_i = dense_os.index(o)
+            x = x + tfm.mlp_block(_sub(gp["dense"], d_i), x, cfg, rules)
+    if cache is not None:
+        new_cache["conv"] = jnp.stack([s["conv"] for s in new_mamba_states])
+        new_cache["ssd"] = jnp.stack([s["ssd"] for s in new_mamba_states])
+    return x, (new_cache if cache is not None else None), aux
+
+
+@dataclasses.dataclass
+class JambaLM(tfm.DenseLM):
+    def param_specs(self) -> Params:
+        return param_specs(self.cfg)
+
+    @property
+    def num_groups(self) -> int:
+        return self.cfg.num_layers // PERIOD
+
+    def forward(self, params: Params, batch: Dict[str, jnp.ndarray],
+                return_aux: bool = False):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        x = tfm.embed(params, tokens, cfg, self.rules)
+        positions = jnp.arange(tokens.shape[1], dtype=jnp.int32)
+        impl, rules = self.impl, self.rules
+
+        def fn(gp, carry):
+            x, aux = carry
+            y, _, a = group_forward(gp, x, cfg, positions=positions, impl=impl,
+                                    rules=rules, with_aux=True)
+            return (y, aux + a)
+
+        f = tfm._remat(fn, cfg.remat)
+        if cfg.scan_layers:
+            def body(carry, gp):
+                return f(gp, carry), None
+            (x, aux), _ = jax.lax.scan(body, (x, jnp.float32(0.0)),
+                                       params["layers"])
+        else:
+            carry = (x, jnp.float32(0.0))
+            for i in range(self.num_groups):
+                carry = f(_sub(params["layers"], i), carry)
+            x, aux = carry
+        logits = tfm.unembed(params, x, cfg, self.rules)
+        if return_aux:
+            n_moe = self.num_groups * len(_offsets(cfg)[2])
+            return logits, cfg.moe_router_aux_coef * aux / n_moe
+        return logits
+
+    # ------------------------------------------------------------- serving
+    def cache_specs(self, batch: int, max_seq: int) -> Params:
+        cfg = self.cfg
+        G = self.num_groups
+        n_mamba = PERIOD - 1
+        kv_axes = (ax.LAYERS, ax.BATCH, ax.CACHE_SEQ, ax.KV_HEADS, ax.HEAD_DIM)
+        kv_shape = (G, batch, max_seq, cfg.num_kv_heads, cfg.resolved_head_dim)
+        ms = mb.mamba_state_specs(cfg, batch)
+        stack2 = lambda s: dataclasses.replace(
+            s, shape=(G, n_mamba) + s.shape,
+            axes=(ax.LAYERS, None) + s.axes)
+        return {
+            "k": ParamSpec(kv_shape, kv_axes, init="zeros", dtype=jnp.dtype(cfg.dtype)),
+            "v": ParamSpec(kv_shape, kv_axes, init="zeros", dtype=jnp.dtype(cfg.dtype)),
+            "conv": stack2(ms["conv"]),
+            "ssd": stack2(ms["ssd"]),
+        }
+
+    def _serve(self, params, tokens, cache, index, kv_seq_shard):
+        cfg = self.cfg
+        x = tfm.embed(params, tokens, cfg, self.rules)
+        if index is None:
+            positions = jnp.arange(tokens.shape[1], dtype=jnp.int32)
+        else:
+            positions = index + jnp.arange(tokens.shape[1], dtype=jnp.int32)
+
+        def fn(gp, cl, h):
+            y, nc, _ = group_forward(
+                gp, h, cfg, positions=positions, cache=cl, index=index,
+                impl=self.impl, rules=self.rules, kv_seq_shard=kv_seq_shard)
+            return y, nc
+
+        x, cache = tfm.scan_stack_cache(fn, params["layers"], cache, x,
+                                        scan=cfg.scan_layers,
+                                        length=self.num_groups)
+        return x, cache
+
+    def prefill(self, params, tokens, cache):
+        x, cache = self._serve(params, tokens, cache, None, False)
+        logits = tfm.unembed(params, x[:, -1:, :], self.cfg, self.rules)
+        return logits[:, 0, :], cache
+
+    def decode_step(self, params, tokens, cache, index, *, kv_seq_shard=False):
+        x, cache = self._serve(params, tokens, cache, index, kv_seq_shard)
+        logits = tfm.unembed(params, x, self.cfg, self.rules)
+        return logits[:, -1, :], cache

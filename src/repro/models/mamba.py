@@ -1,0 +1,134 @@
+"""Mamba mixer in the SSD-chunked TPU form (DESIGN.md §6).
+
+Jamba uses Mamba-1; the CUDA-idiomatic selective scan (per-channel decay held
+in SM shared memory) is deliberately adapted to the Mamba-2/SSD scalar-decay-
+per-head formulation so the intra-chunk work is MXU matmuls (kernels/ops.ssd).
+Structure kept from Mamba-1: in_proj -> (x, z), causal depthwise conv, silu,
+data-dependent (dt, B, C), SSM, D-skip, silu(z) gating, out_proj.
+
+Decode state: conv tail (B, d_conv-1, d_inner) + SSD state (B, H, N, P).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import base as ax
+from repro.configs.base import ModelConfig
+from repro.kernels import ops
+from repro.models import common as cm
+from repro.models.common import ParamSpec
+from repro.sharding.rules import shard_constraint
+
+Params = Dict[str, Any]
+
+
+def mamba_specs(cfg: ModelConfig) -> Params:
+    D = cfg.d_model
+    Di = cfg.mamba_d_inner
+    N = cfg.mamba_d_state
+    Kc = cfg.mamba_d_conv
+    H = cfg.mamba_num_heads
+    return {
+        "ln": ParamSpec((D,), (ax.EMBED,), init="ones"),
+        "in_proj": ParamSpec((D, 2 * Di), (ax.EMBED, ax.MLP)),
+        "conv_w": ParamSpec((Kc, Di), (ax.CONV, ax.MLP), scale=0.5),
+        "conv_b": ParamSpec((Di,), (ax.MLP,), init="zeros"),
+        "w_dt": ParamSpec((Di, H), (ax.MLP, ax.HEADS), scale=0.1),
+        "dt_bias": ParamSpec((H,), (ax.HEADS,), init="uniform", scale=1.0),
+        "A_log": ParamSpec((H,), (ax.HEADS,), init="uniform", scale=1.0),
+        "w_B": ParamSpec((Di, N), (ax.MLP, ax.STATE), scale=0.5),
+        "w_C": ParamSpec((Di, N), (ax.MLP, ax.STATE), scale=0.5),
+        "D_skip": ParamSpec((H,), (ax.HEADS,), init="ones"),
+        "norm_w": ParamSpec((Di,), (ax.MLP,), init="ones"),
+        "out_proj": ParamSpec((Di, D), (ax.MLP, ax.EMBED)),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 tail: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv.  x: (B,T,Di); w: (K,Di).  Returns (y, new_tail).
+
+    `tail` is the last K-1 inputs of the previous segment (decode carry).
+    Realized as K shifted adds — K is 4, cheaper and more fusible than a
+    grouped-conv call at feature_group_count=Di on TPU.
+    """
+    B, T, Di = x.shape
+    K = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((B, K - 1, Di), x.dtype)
+    ext = jnp.concatenate([tail.astype(x.dtype), x], axis=1)  # (B, T+K-1, Di)
+    y = jnp.zeros_like(x)
+    for i in range(K):
+        y = y + ext[:, i:i + T, :] * w[i].astype(x.dtype)
+    new_tail = ext[:, -(K - 1):, :]
+    return y + b.astype(x.dtype), new_tail
+
+
+def mamba_mixer(
+    p: Params, x: jnp.ndarray, cfg: ModelConfig, *,
+    states: Optional[Dict[str, jnp.ndarray]] = None,
+    impl: str = "xla", rules=None, chunk: int = 64,
+) -> Tuple[jnp.ndarray, Optional[Dict[str, jnp.ndarray]]]:
+    """x: (B,T,D) -> (out, new_states).  states: {"conv": ..., "ssd": ...}."""
+    B, T, D = x.shape
+    Di, N = cfg.mamba_d_inner, cfg.mamba_d_state
+    H, P = cfg.mamba_num_heads, cfg.mamba_head_dim
+
+    h = cm.rms_norm(x, p["ln"], cfg.norm_eps)
+    xz = jnp.einsum("btd,de->bte", h, p["in_proj"].astype(h.dtype))
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xin = shard_constraint(xin, rules, (ax.BATCH, ax.SEQ, ax.MLP))
+
+    conv_tail = states["conv"] if states else None
+    xc, new_conv = _causal_conv(xin, p["conv_w"], p["conv_b"], conv_tail)
+    xc = jax.nn.silu(xc)
+
+    dt = jax.nn.softplus(
+        jnp.einsum("bte,eh->bth", xc, p["w_dt"].astype(xc.dtype))
+        .astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))           # (H,) negative
+    a = jnp.exp(dt * A[None, None, :])                     # (B,T,H) in (0,1)
+
+    Bm = jnp.einsum("bte,en->btn", xc, p["w_B"].astype(xc.dtype))
+    Cm = jnp.einsum("bte,en->btn", xc, p["w_C"].astype(xc.dtype))
+    Bm4 = jnp.broadcast_to(Bm[:, :, None, :], (B, T, H, N))
+    Cm4 = jnp.broadcast_to(Cm[:, :, None, :], (B, T, H, N))
+
+    xh = xc.reshape(B, T, H, P)
+    vals = xh * dt.astype(xh.dtype)[..., None]             # dt-discretized input
+
+    ssd_state = states["ssd"] if states else None
+    if T == 1 and ssd_state is not None:
+        y4, new_ssd = ops.ssd_decode(
+            vals[:, 0], a[:, 0], Bm4[:, 0], Cm4[:, 0], ssd_state)
+        y4 = y4[:, None]
+    else:
+        y4, new_ssd = ops.ssd(vals, a.astype(vals.dtype), Bm4, Cm4, ssd_state,
+                              impl=impl, chunk=min(chunk, T))
+    y4 = y4 + p["D_skip"].astype(y4.dtype)[None, None, :, None] * xh
+    y = y4.reshape(B, T, Di)
+    y = y * jax.nn.silu(z)
+    y = cm.rms_norm(y, p["norm_w"], cfg.norm_eps)
+    out = jnp.einsum("bte,ed->btd", y, p["out_proj"].astype(y.dtype))
+    out = shard_constraint(out, rules, (ax.BATCH, ax.SEQ, ax.EMBED))
+
+    new_states = None
+    if states is not None:
+        new_states = {"conv": new_conv.astype(states["conv"].dtype),
+                      "ssd": new_ssd}
+    return out, new_states
+
+
+def mamba_state_specs(cfg: ModelConfig, batch: int) -> Params:
+    Di, N = cfg.mamba_d_inner, cfg.mamba_d_state
+    H, P = cfg.mamba_num_heads, cfg.mamba_head_dim
+    Kc = cfg.mamba_d_conv
+    return {
+        "conv": ParamSpec((batch, Kc - 1, Di), (ax.BATCH, None, ax.MLP),
+                          init="zeros", dtype=jnp.dtype(cfg.dtype)),
+        "ssd": ParamSpec((batch, H, N, P), (ax.BATCH, ax.HEADS, ax.STATE, None),
+                         init="zeros", dtype=jnp.float32),
+    }

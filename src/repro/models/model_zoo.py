@@ -1,0 +1,151 @@
+"""Model zoo: uniform build/loss/serve API over the ten assigned
+architectures.
+
+``build_model(cfg)`` dispatches on ``cfg.family`` and returns an LM object
+exposing: param_specs / init / forward / loss-compatible logits /
+cache_specs / prefill / decode_step.  ``input_specs(spec, shape)`` yields the
+ShapeDtypeStruct stand-ins the dry-run lowers against (weak-type-correct, no
+allocation); ``make_loss_fn`` builds the training loss including MoE aux.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchSpec, ModelConfig, ShapeConfig
+from repro.models import common as cm
+from repro.models import internvl as internvl_mod
+from repro.models import jamba as jamba_mod
+from repro.models import moe as moe_mod
+from repro.models import rwkv6 as rwkv6_mod
+from repro.models import transformer as tfm
+from repro.models import whisper as whisper_mod
+
+
+def build_model(cfg: ModelConfig, *, impl: str = "xla", rules=None,
+                max_seq: int = 4096):
+    if cfg.family == "dense":
+        return tfm.DenseLM(cfg, impl=impl, rules=rules)
+    if cfg.family == "moe":
+        return moe_mod.MoELM(cfg, impl=impl, rules=rules)
+    if cfg.family == "rwkv6":
+        return rwkv6_mod.RWKV6LM(cfg, impl=impl, rules=rules)
+    if cfg.family == "hybrid":
+        return jamba_mod.JambaLM(cfg, impl=impl, rules=rules)
+    if cfg.family == "encdec":
+        return whisper_mod.WhisperLM(cfg, impl=impl, rules=rules,
+                                     max_seq=max_seq)
+    if cfg.family == "vlm":
+        return internvl_mod.InternVLM(cfg, impl=impl, rules=rules)
+    raise ValueError(f"unknown family {cfg.family!r}")
+
+
+# ---------------------------------------------------------------------------
+# Dry-run input specs (ShapeDtypeStruct stand-ins; no allocation)
+# ---------------------------------------------------------------------------
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Training / prefill batch stand-ins for one (arch x shape) cell."""
+    B, S = shape.global_batch, shape.seq_len
+    tok = jnp.int32
+    if cfg.family == "encdec":
+        return {
+            "tokens": _sds((B, S), tok),
+            "labels": _sds((B, S), tok),
+            "enc_embeds": _sds((B, cfg.encoder_seq, cfg.d_model), jnp.bfloat16),
+        }
+    if cfg.family == "vlm":
+        t_text = S - cfg.vision_tokens
+        return {
+            "tokens": _sds((B, t_text), tok),
+            "labels": _sds((B, t_text), tok),
+            "patch_embeds": _sds((B, cfg.vision_tokens, cfg.d_model),
+                                 jnp.bfloat16),
+        }
+    return {"tokens": _sds((B, S), tok), "labels": _sds((B, S), tok)}
+
+
+def decode_input_specs(cfg: ModelConfig, shape: ShapeConfig,
+                       model) -> Dict[str, Any]:
+    """serve_step stand-ins: one new token against a seq_len cache."""
+    B, S = shape.global_batch, shape.seq_len
+    cache_specs = model.cache_specs(B, S)
+    cache = jax.tree.map(lambda s: s.abstract(), cache_specs,
+                         is_leaf=cm.is_spec)
+    return {
+        "tokens": _sds((B, 1), jnp.int32),
+        "cache": cache,
+        "index": _sds((), jnp.int32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Loss builders
+# ---------------------------------------------------------------------------
+
+
+def make_loss_fn(model, z_loss_coef: float = 0.0):
+    cfg = model.cfg
+    has_aux = cfg.family in ("moe", "hybrid") and cfg.moe_num_experts > 0
+
+    def loss_fn(params, batch):
+        if has_aux:
+            logits, aux = model.forward(params, batch, return_aux=True)
+        else:
+            logits, aux = model.forward(params, batch), 0.0
+        loss, metrics = tfm.lm_loss(logits, batch["labels"],
+                                    z_loss_coef=z_loss_coef)
+        loss = loss + aux
+        if has_aux:
+            metrics["moe_aux"] = aux
+        metrics["loss"] = loss
+        return loss, metrics
+
+    return loss_fn
+
+
+# ---------------------------------------------------------------------------
+# Serve-step builders (what the decode/long dry-run cells lower)
+# ---------------------------------------------------------------------------
+
+
+def make_prefill_fn(model):
+    cfg = model.cfg
+
+    def prefill_fn(params, batch, cache):
+        if cfg.family == "encdec":
+            return model.prefill(params, batch["tokens"], cache,
+                                 enc_embeds=batch["enc_embeds"])
+        if cfg.family == "vlm":
+            return model.prefill(params, batch["tokens"], cache,
+                                 patch_embeds=batch["patch_embeds"])
+        return model.prefill(params, batch["tokens"], cache)
+
+    return prefill_fn
+
+
+def make_decode_fn(model, kv_seq_shard: bool = False):
+    def decode_fn(params, tokens, cache, index):
+        return model.decode_step(params, tokens, cache, index,
+                                 kv_seq_shard=kv_seq_shard)
+
+    return decode_fn
+
+
+def count_params(cfg: ModelConfig, max_seq: int = 4096) -> int:
+    model = build_model(cfg, max_seq=max_seq)
+    return cm.count_params(model.param_specs())
+
+
+def active_param_ratio(cfg: ModelConfig) -> float:
+    """Fraction of MoE expert params active per token (for MODEL_FLOPS)."""
+    if not cfg.moe_num_experts:
+        return 1.0
+    return cfg.moe_top_k / cfg.moe_num_experts

@@ -1,0 +1,252 @@
+"""Mixture-of-Experts LM (qwen2-moe-a2.7b, qwen3-moe-235b-a22b).
+
+TPU-native dispatch (DESIGN.md §6): GShard/Switch-style *capacity-factor*
+routing realized as dense one-hot einsums over fixed shapes — no dynamic
+gather/scatter in the compiled path.  Tokens are grouped (``moe_group_size``)
+so dispatch tensors are (groups, group, experts, capacity) with bounded
+memory; experts run as a single batched einsum that shards over the mesh
+(EP when `experts` maps to a mesh axis, per-expert TP otherwise).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import base as ax
+from repro.configs.base import ModelConfig
+from repro.models import common as cm
+from repro.models import transformer as tfm
+from repro.models.common import ParamSpec
+from repro.sharding.rules import shard_constraint
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Specs
+# ---------------------------------------------------------------------------
+
+
+def moe_ffn_specs(cfg: ModelConfig) -> Params:
+    D, E, F = cfg.d_model, cfg.moe_num_experts, cfg.d_ff
+    s: Params = {
+        "ln": ParamSpec((D,), (ax.EMBED,), init="ones"),
+        "router": ParamSpec((D, E), (ax.EMBED, ax.EXPERTS), scale=0.1),
+        "wi": ParamSpec((E, D, F), (ax.EXPERTS, ax.EMBED, ax.EXPERT_MLP)),
+        "wg": ParamSpec((E, D, F), (ax.EXPERTS, ax.EMBED, ax.EXPERT_MLP)),
+        "wo": ParamSpec((E, F, D), (ax.EXPERTS, ax.EXPERT_MLP, ax.EMBED)),
+    }
+    if cfg.moe_num_shared_experts:
+        Fs = cfg.moe_shared_d_ff or cfg.moe_num_shared_experts * cfg.d_ff
+        s["shared"] = {
+            "wi": ParamSpec((D, Fs), (ax.EMBED, ax.MLP)),
+            "wg": ParamSpec((D, Fs), (ax.EMBED, ax.MLP)),
+            "wo": ParamSpec((Fs, D), (ax.MLP, ax.EMBED)),
+            "gate": ParamSpec((D, 1), (ax.EMBED, None), scale=0.1),
+        }
+    return s
+
+
+def layer_specs(cfg: ModelConfig) -> Params:
+    return {"attn": tfm.attn_specs(cfg), "moe": moe_ffn_specs(cfg)}
+
+
+def param_specs(cfg: ModelConfig) -> Params:
+    return {
+        "layers": cm.stack_tree(layer_specs(cfg), cfg.num_layers),
+        **tfm.embed_specs(cfg),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Routing + expert compute
+# ---------------------------------------------------------------------------
+
+
+def _top_k_one_hot(gates: jnp.ndarray, k: int):
+    """gates: (..., E) -> (weights (..., k), one-hot (..., k, E))."""
+    vals, idx = jax.lax.top_k(gates, k)
+    oh = jax.nn.one_hot(idx, gates.shape[-1], dtype=gates.dtype)
+    return vals, oh
+
+
+def moe_ffn(p: Params, x: jnp.ndarray, cfg: ModelConfig, rules=None,
+            return_aux: bool = False):
+    """Capacity-factor MoE FFN.  x: (B, T, D) -> (B, T, D)[, aux_loss].
+
+    Grouped dispatch: flatten (B*T) -> (G, S) groups of moe_group_size; per
+    group build a (S, E, C) dispatch/combine tensor via cumulative positions
+    inside each expert (deterministic shapes, MXU-friendly einsums).
+    """
+    B, T, D = x.shape
+    E, K = cfg.moe_num_experts, cfg.moe_top_k
+    h = cm.rms_norm(x, p["ln"], cfg.norm_eps)
+    flat = h.reshape(B * T, D)
+    S = min(cfg.moe_group_size, B * T)
+    while (B * T) % S != 0:   # largest divisor of B*T <= moe_group_size
+        S -= 1
+    G = (B * T) // S
+    xs = flat.reshape(G, S, D)
+
+    gates = jnp.einsum("gsd,de->gse", xs.astype(jnp.float32),
+                       p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(gates, axis=-1)
+    top_vals, top_oh = _top_k_one_hot(probs, K)           # (G,S,K), (G,S,K,E)
+    top_vals = top_vals / jnp.maximum(top_vals.sum(-1, keepdims=True), 1e-9)
+
+    # Reduce over k BEFORE the capacity one-hot (a token reaches an expert at
+    # most once), keeping peak dispatch tensors at (G,S,E,C) — the K-expanded
+    # (G,S,K,E,C) form is a memory blowup at 1M tokens.
+    sel = top_oh.sum(axis=2)                               # (G,S,E) in {0,1}
+    w_se = (top_vals[..., None] * top_oh).sum(axis=2)      # (G,S,E)
+
+    # capacity per expert per group
+    C = max(int(S * K * cfg.moe_capacity_factor / E), 1)
+    C = min(C, S)
+    pos = jnp.cumsum(sel, axis=1) - sel                    # (G,S,E) queue pos
+    in_cap = (sel > 0) & (pos < C)
+    pos_oh = jax.nn.one_hot(pos.astype(jnp.int32), C, dtype=xs.dtype)
+    disp = jnp.where(in_cap[..., None], pos_oh, 0.0)       # (G,S,E,C)
+    comb = disp * w_se[..., None].astype(xs.dtype)
+    # Notes from the perf loop (EXPERIMENTS.md §Perf):
+    # * G (token groups) is a batch dimension — constraining it replicated
+    #   forces XLA to all-gather and compute EVERY group on EVERY device
+    #   (measured 16x expert-compute waste; iter 1).
+    # * expert-major (E leading) operand order lets the expert matmuls run
+    #   as batched dots without transposing the (E,*,D) activations
+    #   (iter 3: transpose/copy traffic down).
+    expert_in = jnp.einsum("gsec,gsd->egcd", disp, xs)     # (E,G,C,D)
+    expert_in = shard_constraint(
+        expert_in, rules, (ax.EXPERTS, ax.BATCH, None, ax.EMBED))
+
+    act = cm.activation(cfg.act)
+    wi = p["wi"].astype(expert_in.dtype)
+    wg = p["wg"].astype(expert_in.dtype)
+    wo = p["wo"].astype(expert_in.dtype)
+    gph = jnp.einsum("egcd,edf->egcf", expert_in, wg)
+    uph = jnp.einsum("egcd,edf->egcf", expert_in, wi)
+    hh = act(gph) * uph
+    hh = shard_constraint(hh, rules,
+                          (ax.EXPERTS, ax.BATCH, None, ax.EXPERT_MLP))
+    expert_out = jnp.einsum("egcf,efd->egcd", hh, wo)      # (E,G,C,D)
+    out = jnp.einsum("gsec,egcd->gsd", comb, expert_out)   # (G,S,D)
+    out = out.reshape(B, T, D).astype(x.dtype)
+
+    if "shared" in p:
+        sp = p["shared"]
+        g = jnp.einsum("btd,df->btf", h, sp["wg"].astype(h.dtype))
+        u = jnp.einsum("btd,df->btf", h, sp["wi"].astype(h.dtype))
+        sh = act(g) * u
+        sh = shard_constraint(sh, rules, (ax.BATCH, ax.SEQ, ax.MLP))
+        so = jnp.einsum("btf,fd->btd", sh, sp["wo"].astype(h.dtype))
+        sg = jax.nn.sigmoid(
+            jnp.einsum("btd,do->bto", h, sp["gate"].astype(h.dtype)))
+        out = out + sg * so
+
+    out = shard_constraint(out, rules, (ax.BATCH, ax.SEQ, ax.EMBED))
+    if not return_aux:
+        return out
+    # Switch-style load-balance loss: E * sum_e f_e * p_e
+    frac = top_oh.sum(axis=2).mean(axis=(0, 1))            # tokens/expert (E,)
+    mean_p = probs.mean(axis=(0, 1))
+    aux = E * jnp.sum(frac * mean_p)
+    return out, aux
+
+
+def moe_layer(p: Params, x, cfg: ModelConfig, *, positions, cache=None,
+              index=None, impl="xla", rules=None, kv_seq_shard=False,
+              with_aux=False):
+    a, new_cache = tfm.attention_block(
+        p["attn"], x, cfg, positions=positions, cache=cache, index=index,
+        impl=impl, rules=rules, kv_seq_shard=kv_seq_shard,
+    )
+    x = x + a
+    if with_aux:
+        m, aux = moe_ffn(p["moe"], x, cfg, rules, return_aux=True)
+        return x + m, new_cache, aux
+    m = moe_ffn(p["moe"], x, cfg, rules)
+    return x + m, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Model
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class MoELM(tfm.DenseLM):
+    """Every layer: attention + MoE FFN (qwen MoE family)."""
+
+    def param_specs(self) -> Params:
+        return param_specs(self.cfg)
+
+    def forward(self, params: Params, batch: Dict[str, jnp.ndarray],
+                return_aux: bool = False):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        x = tfm.embed(params, tokens, cfg, self.rules)
+        positions = jnp.arange(tokens.shape[1], dtype=jnp.int32)
+        impl, rules = self.impl, self.rules
+
+        def fn(pl, carry):
+            x, aux = carry
+            y, _, a = moe_layer(pl, x, cfg, positions=positions, impl=impl,
+                                rules=rules, with_aux=True)
+            return (y, aux + a)
+
+        f = tfm._remat(fn, cfg.remat)
+        if cfg.scan_layers:
+            def body(carry, pl):
+                return f(pl, carry), None
+            (x, aux), _ = jax.lax.scan(body, (x, jnp.float32(0.0)),
+                                       params["layers"])
+        else:
+            carry = (x, jnp.float32(0.0))
+            for i in range(cfg.num_layers):
+                carry = f(jax.tree.map(lambda a: a[i], params["layers"]), carry)
+            x, aux = carry
+        logits = tfm.unembed(params, x, cfg, self.rules)
+        if return_aux:
+            return logits, cfg.moe_router_aux_coef * aux / cfg.num_layers
+        return logits
+
+    def prefill(self, params: Params, tokens: jnp.ndarray, cache: Params):
+        cfg = self.cfg
+        x = tfm.embed(params, tokens, cfg, self.rules)
+        positions = jnp.arange(tokens.shape[1], dtype=jnp.int32)
+
+        def fn(pl, cl, h):
+            y, new_c = moe_layer(
+                pl, h, cfg, positions=positions, cache=(cl["k"], cl["v"]),
+                impl=self.impl, rules=self.rules,
+            )
+            return y, {"k": new_c[0], "v": new_c[1]}
+
+        x, cache = tfm.scan_stack_cache(fn, params["layers"], cache, x,
+                                        scan=cfg.scan_layers,
+                                        length=cfg.num_layers)
+        logits = tfm.unembed(params, x[:, -1:, :], cfg, self.rules)
+        return logits[:, 0, :], cache
+
+    def decode_step(self, params: Params, tokens: jnp.ndarray, cache: Params,
+                    index: jnp.ndarray, *, kv_seq_shard: bool = False):
+        cfg = self.cfg
+        x = tfm.embed(params, tokens, cfg, self.rules)
+        positions = index + jnp.arange(tokens.shape[1], dtype=jnp.int32)
+
+        def fn(pl, cl, h):
+            y, new_c = moe_layer(
+                pl, h, cfg, positions=positions, cache=(cl["k"], cl["v"]),
+                index=index, impl=self.impl, rules=self.rules,
+                kv_seq_shard=kv_seq_shard,
+            )
+            return y, {"k": new_c[0], "v": new_c[1]}
+
+        x, cache = tfm.scan_stack_cache(fn, params["layers"], cache, x,
+                                        scan=cfg.scan_layers,
+                                        length=cfg.num_layers)
+        logits = tfm.unembed(params, x, cfg, self.rules)
+        return logits[:, -1, :], cache

@@ -1,0 +1,250 @@
+"""RWKV6 "Finch" — attention-free LM with data-dependent decay
+[arXiv:2404.05892].
+
+Faithful block structure: time-mix with ddlerp token-shift LoRAs, per-channel
+data-dependent decay w_t (via a decay LoRA), bonus u, the WKV6 recurrence
+(kernels/ops.wkv6 — chunked linear-attention form on TPU, DESIGN.md §6),
+per-head group-norm and silu(g) gating; channel-mix with squared-ReLU.
+
+O(1) decode state: (wkv state (B,H,N,N) fp32, token-shift states (B,D)).
+`long_500k` runs for this family.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import base as ax
+from repro.configs.base import ModelConfig
+from repro.kernels import ops
+from repro.models import common as cm
+from repro.models import transformer as tfm
+from repro.models.common import ParamSpec
+from repro.sharding.rules import shard_constraint
+
+Params = Dict[str, Any]
+
+_DDLERP = ("w", "k", "v", "r", "g")
+
+
+def time_mix_specs(cfg: ModelConfig) -> Params:
+    D = cfg.d_model
+    R = cfg.rwkv_lora_rank
+    Rd = cfg.rwkv_decay_lora_rank
+    H = cfg.rwkv_num_heads
+    N = cfg.rwkv_head_dim
+    return {
+        "ln": ParamSpec((D,), (ax.EMBED,), init="ones"),
+        "mu_x": ParamSpec((D,), (ax.EMBED,), init="uniform", scale=0.5),
+        "mu": ParamSpec((5, D), (None, ax.EMBED), init="uniform", scale=0.5),
+        "lora_a": ParamSpec((D, 5, R), (ax.EMBED, None, None), scale=0.1),
+        "lora_b": ParamSpec((5, R, D), (None, None, ax.EMBED), scale=0.1),
+        "w0": ParamSpec((D,), (ax.EMBED,), init="uniform", scale=1.0),
+        "decay_a": ParamSpec((D, Rd), (ax.EMBED, None), scale=0.1),
+        "decay_b": ParamSpec((Rd, D), (None, ax.EMBED), scale=0.1),
+        "u": ParamSpec((H, N), (ax.HEADS, ax.HEAD_DIM), init="uniform", scale=0.5),
+        "wr": ParamSpec((D, D), (ax.EMBED, ax.MLP)),   # head dim sharded as mlp
+        "wk": ParamSpec((D, D), (ax.EMBED, ax.MLP)),
+        "wv": ParamSpec((D, D), (ax.EMBED, ax.MLP)),
+        "wg": ParamSpec((D, D), (ax.EMBED, ax.MLP)),
+        "wo": ParamSpec((D, D), (ax.MLP, ax.EMBED)),
+        "gn_w": ParamSpec((D,), (ax.EMBED,), init="ones"),
+        "gn_b": ParamSpec((D,), (ax.EMBED,), init="zeros"),
+    }
+
+
+def channel_mix_specs(cfg: ModelConfig) -> Params:
+    D, F = cfg.d_model, cfg.d_ff
+    return {
+        "ln": ParamSpec((D,), (ax.EMBED,), init="ones"),
+        "mu_k": ParamSpec((D,), (ax.EMBED,), init="uniform", scale=0.5),
+        "mu_r": ParamSpec((D,), (ax.EMBED,), init="uniform", scale=0.5),
+        "wk": ParamSpec((D, F), (ax.EMBED, ax.MLP)),
+        "wv": ParamSpec((F, D), (ax.MLP, ax.EMBED)),
+        "wr": ParamSpec((D, D), (ax.EMBED, None)),
+    }
+
+
+def layer_specs(cfg: ModelConfig) -> Params:
+    return {"tmix": time_mix_specs(cfg), "cmix": channel_mix_specs(cfg)}
+
+
+def param_specs(cfg: ModelConfig) -> Params:
+    return {
+        "layers": cm.stack_tree(layer_specs(cfg), cfg.num_layers),
+        **tfm.embed_specs(cfg),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Blocks.  `shift_state` is the last token of the previous segment (B, D);
+# None during full-sequence training (zero-pad shift).
+# ---------------------------------------------------------------------------
+
+
+def _token_shift(x: jnp.ndarray, shift_state: Optional[jnp.ndarray]):
+    """Returns x_{t-1} (same shape as x)."""
+    if x.shape[1] == 1 and shift_state is not None:
+        return shift_state[:, None, :]
+    prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    if shift_state is not None:
+        prev = prev.at[:, 0].set(shift_state)
+    return prev
+
+
+def time_mix(
+    p: Params, x: jnp.ndarray, cfg: ModelConfig, *,
+    wkv_state: Optional[jnp.ndarray] = None,
+    shift_state: Optional[jnp.ndarray] = None,
+    impl: str = "xla", rules=None, chunk: int = 64,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Returns (out, new_wkv_state, new_shift_state)."""
+    B, T, D = x.shape
+    H, N = cfg.rwkv_num_heads, cfg.rwkv_head_dim
+    h = cm.rms_norm(x, p["ln"], cfg.norm_eps)
+    prev = _token_shift(h, shift_state)
+    delta = prev - h
+
+    xxx = h + delta * p["mu_x"].astype(h.dtype)
+    lo = jnp.einsum("btd,dir->btir", xxx, p["lora_a"].astype(h.dtype))
+    adj = jnp.einsum("btir,ird->btid", jnp.tanh(lo), p["lora_b"].astype(h.dtype))
+    mixed = (h[:, :, None, :]
+             + delta[:, :, None, :] * (p["mu"].astype(h.dtype) + adj))
+    xw, xk, xv, xr, xg = [mixed[:, :, i, :] for i in range(5)]
+
+    r = jnp.einsum("btd,de->bte", xr, p["wr"].astype(h.dtype))
+    k = jnp.einsum("btd,de->bte", xk, p["wk"].astype(h.dtype))
+    v = jnp.einsum("btd,de->bte", xv, p["wv"].astype(h.dtype))
+    g = jnp.einsum("btd,de->bte", xg, p["wg"].astype(h.dtype))
+
+    dlo = jnp.tanh(jnp.einsum("btd,dr->btr", xw, p["decay_a"].astype(h.dtype)))
+    dlog = p["w0"].astype(jnp.float32) + jnp.einsum(
+        "btr,rd->btd", dlo.astype(jnp.float32), p["decay_b"].astype(jnp.float32))
+    w = jnp.exp(-jnp.exp(dlog))                     # (B,T,D) in (0,1)
+
+    hd = lambda z: z.reshape(B, T, H, N)
+    r4, k4, v4, w4 = hd(r), hd(k), hd(v), hd(w.astype(h.dtype))
+    r4 = shard_constraint(r4, rules, (ax.BATCH, ax.SEQ, ax.HEADS, ax.HEAD_DIM))
+    if T == 1 and wkv_state is not None:
+        y4, new_state = ops.wkv6_decode(
+            r4[:, 0], k4[:, 0], v4[:, 0], w4[:, 0], p["u"], wkv_state)
+        y4 = y4[:, None]
+    else:
+        y4, new_state = ops.wkv6(r4, k4, v4, w4, p["u"], wkv_state,
+                                 impl=impl, chunk=min(chunk, T))
+    y = y4.reshape(B, T, D)
+    y = cm.group_norm(y, p["gn_w"], p["gn_b"], groups=H, eps=64e-5)
+    y = y * jax.nn.silu(g)
+    out = jnp.einsum("bte,ed->btd", y, p["wo"].astype(h.dtype))
+    out = shard_constraint(out, rules, (ax.BATCH, ax.SEQ, ax.EMBED))
+    return out, new_state, h[:, -1, :]
+
+
+def channel_mix(
+    p: Params, x: jnp.ndarray, cfg: ModelConfig, *,
+    shift_state: Optional[jnp.ndarray] = None, rules=None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    h = cm.rms_norm(x, p["ln"], cfg.norm_eps)
+    prev = _token_shift(h, shift_state)
+    delta = prev - h
+    xk = h + delta * p["mu_k"].astype(h.dtype)
+    xr = h + delta * p["mu_r"].astype(h.dtype)
+    k = jnp.einsum("btd,df->btf", xk, p["wk"].astype(h.dtype))
+    k = jnp.square(jax.nn.relu(k))
+    k = shard_constraint(k, rules, (ax.BATCH, ax.SEQ, ax.MLP))
+    kv = jnp.einsum("btf,fd->btd", k, p["wv"].astype(h.dtype))
+    rg = jax.nn.sigmoid(jnp.einsum("btd,de->bte", xr, p["wr"].astype(h.dtype)))
+    out = rg * kv
+    return shard_constraint(out, rules, (ax.BATCH, ax.SEQ, ax.EMBED)), h[:, -1, :]
+
+
+def rwkv_layer(p: Params, x, cfg: ModelConfig, *, states=None, impl="xla",
+               rules=None, chunk: int = 64):
+    """states: None (train) or dict(wkv, tshift, cshift)."""
+    wkv_s = states["wkv"] if states else None
+    t_s = states["tshift"] if states else None
+    c_s = states["cshift"] if states else None
+    a, new_wkv, new_tshift = time_mix(
+        p["tmix"], x, cfg, wkv_state=wkv_s, shift_state=t_s, impl=impl,
+        rules=rules, chunk=chunk)
+    x = x + a
+    c, new_cshift = channel_mix(p["cmix"], x, cfg, shift_state=c_s, rules=rules)
+    x = x + c
+    new_states = {"wkv": new_wkv, "tshift": new_tshift, "cshift": new_cshift}
+    return x, new_states
+
+
+# ---------------------------------------------------------------------------
+# Model
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class RWKV6LM(tfm.DenseLM):
+    wkv_chunk: int = 64
+
+    def param_specs(self) -> Params:
+        return param_specs(self.cfg)
+
+    def forward(self, params: Params, batch: Dict[str, jnp.ndarray]):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        x = tfm.embed(params, tokens, cfg, self.rules)
+        impl, rules, chunk = self.impl, self.rules, self.wkv_chunk
+
+        def fn(pl, h):
+            y, _ = rwkv_layer(pl, h, cfg, impl=impl, rules=rules, chunk=chunk)
+            return y
+
+        x = tfm.scan_stack(fn, params["layers"], x, remat=cfg.remat,
+                           scan=cfg.scan_layers, length=cfg.num_layers)
+        return tfm.unembed(params, x, cfg, self.rules)
+
+    # ------------------------------------------------------------- serving
+    def cache_specs(self, batch: int, max_seq: int) -> Params:
+        cfg = self.cfg
+        L, D = cfg.num_layers, cfg.d_model
+        H, N = cfg.rwkv_num_heads, cfg.rwkv_head_dim
+        return {
+            "wkv": ParamSpec((L, batch, H, N, N),
+                             (ax.LAYERS, ax.BATCH, ax.HEADS, ax.HEAD_DIM, None),
+                             init="zeros", dtype=jnp.float32),
+            "tshift": ParamSpec((L, batch, D), (ax.LAYERS, ax.BATCH, ax.EMBED),
+                                init="zeros", dtype=jnp.dtype(cfg.dtype)),
+            "cshift": ParamSpec((L, batch, D), (ax.LAYERS, ax.BATCH, ax.EMBED),
+                                init="zeros", dtype=jnp.dtype(cfg.dtype)),
+        }
+
+    def _run_with_state(self, params, tokens, cache):
+        cfg = self.cfg
+        x = tfm.embed(params, tokens, cfg, self.rules)
+        impl, rules, chunk = self.impl, self.rules, self.wkv_chunk
+
+        def fn(pl, cl, h):
+            y, new_s = rwkv_layer(pl, h, cfg, states=cl, impl=impl,
+                                  rules=rules, chunk=chunk)
+            new_s = {
+                "wkv": new_s["wkv"],
+                "tshift": new_s["tshift"].astype(cl["tshift"].dtype),
+                "cshift": new_s["cshift"].astype(cl["cshift"].dtype),
+            }
+            return y, new_s
+
+        x, cache = tfm.scan_stack_cache(fn, params["layers"], cache, x,
+                                        scan=cfg.scan_layers,
+                                        length=cfg.num_layers)
+        return x, cache
+
+    def prefill(self, params, tokens, cache):
+        x, cache = self._run_with_state(params, tokens, cache)
+        logits = tfm.unembed(params, x[:, -1:, :], self.cfg, self.rules)
+        return logits[:, 0, :], cache
+
+    def decode_step(self, params, tokens, cache, index, *, kv_seq_shard=False):
+        del index, kv_seq_shard  # recurrent: position-free, O(1) state
+        x, cache = self._run_with_state(params, tokens, cache)
+        logits = tfm.unembed(params, x, self.cfg, self.rules)
+        return logits[:, -1, :], cache

@@ -1,0 +1,366 @@
+"""Dense decoder-only transformer (GQA, optional SWA / qk-norm / tied embed).
+
+This is the backbone for llama3.2-1b, minicpm-2b, h2o-danube-3-4b,
+mistral-nemo-12b, and (with a patch-embedding prefix) internvl2-2b; the MoE
+and hybrid families subclass/borrow its attention and embedding machinery.
+
+Functional style: ``param_specs(cfg)`` builds a ParamSpec pytree,
+``DenseLM.forward`` consumes the materialized (or abstract) tree.  Layers are
+scanned (stacked params, jax.lax.scan) for O(1)-in-depth HLO; remat policy is
+per-config.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import base as ax
+from repro.configs.base import ModelConfig
+from repro.kernels import ops
+from repro.models import common as cm
+from repro.models.common import ParamSpec
+from repro.sharding.rules import shard_constraint
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Param specs
+# ---------------------------------------------------------------------------
+
+
+def attn_specs(cfg: ModelConfig) -> Params:
+    D, H, KV, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    s: Params = {
+        "ln": ParamSpec((D,), (ax.EMBED,), init="ones"),
+        "wq": ParamSpec((D, H, hd), (ax.EMBED, ax.HEADS, ax.HEAD_DIM)),
+        "wk": ParamSpec((D, KV, hd), (ax.EMBED, ax.KV_HEADS, ax.HEAD_DIM)),
+        "wv": ParamSpec((D, KV, hd), (ax.EMBED, ax.KV_HEADS, ax.HEAD_DIM)),
+        "wo": ParamSpec((H, hd, D), (ax.HEADS, ax.HEAD_DIM, ax.EMBED)),
+    }
+    if cfg.qk_norm:
+        s["q_norm"] = ParamSpec((hd,), (ax.HEAD_DIM,), init="ones")
+        s["k_norm"] = ParamSpec((hd,), (ax.HEAD_DIM,), init="ones")
+    return s
+
+
+def mlp_specs(cfg: ModelConfig, d_ff: Optional[int] = None) -> Params:
+    D = cfg.d_model
+    F = d_ff if d_ff is not None else cfg.d_ff
+    return {
+        "ln": ParamSpec((D,), (ax.EMBED,), init="ones"),
+        "wi": ParamSpec((D, F), (ax.EMBED, ax.MLP)),
+        "wg": ParamSpec((D, F), (ax.EMBED, ax.MLP)),
+        "wo": ParamSpec((F, D), (ax.MLP, ax.EMBED)),
+    }
+
+
+def layer_specs(cfg: ModelConfig) -> Params:
+    return {"attn": attn_specs(cfg), "mlp": mlp_specs(cfg)}
+
+
+def embed_specs(cfg: ModelConfig) -> Params:
+    V, D = cfg.padded_vocab, cfg.d_model
+    s: Params = {
+        "embedding": ParamSpec((V, D), (ax.VOCAB, ax.EMBED), scale=1.0),
+        "final_ln": ParamSpec((D,), (ax.EMBED,), init="ones"),
+    }
+    if not cfg.tie_embeddings:
+        s["lm_head"] = ParamSpec((D, V), (ax.EMBED, ax.VOCAB))
+    return s
+
+
+def param_specs(cfg: ModelConfig) -> Params:
+    return {
+        "layers": cm.stack_tree(layer_specs(cfg), cfg.num_layers),
+        **embed_specs(cfg),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+
+def attention_block(
+    p: Params,
+    x: jnp.ndarray,                    # (B, T, D)
+    cfg: ModelConfig,
+    *,
+    positions: jnp.ndarray,            # (T,) or (B, T)
+    cache: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,  # (k,v): (B,S,KV,hd)
+    index: Optional[jnp.ndarray] = None,  # scalar int32 write offset (decode)
+    impl: str = "xla",
+    rules=None,
+    kv_seq_shard: bool = False,
+):
+    """Pre-norm attention block.  Returns (out, new_cache)."""
+    B, T, D = x.shape
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    h = cm.rms_norm(x, p["ln"], cfg.norm_eps)
+    q = jnp.einsum("btd,dhk->bthk", h, p["wq"].astype(h.dtype))
+    k = jnp.einsum("btd,dhk->bthk", h, p["wk"].astype(h.dtype))
+    v = jnp.einsum("btd,dhk->bthk", h, p["wv"].astype(h.dtype))
+    if cfg.qk_norm:
+        q = cm.rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = cm.rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if cfg.rope_theta:
+        q = cm.rope(q, positions, cfg.rope_theta)
+        k = cm.rope(k, positions, cfg.rope_theta)
+    q = shard_constraint(q, rules, (ax.BATCH, ax.SEQ, ax.HEADS, ax.HEAD_DIM))
+
+    new_cache = None
+    if cache is not None:
+        ck, cv = cache
+        if index is not None:  # decode: write T new tokens at `index`
+            ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, index, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, index, 0, 0))
+            kv_len = jnp.full((B,), index + T, dtype=jnp.int32)
+            o = ops.attention(
+                q, ck, cv, causal=False, window=cfg.sliding_window,
+                q_offset=index, kv_len=kv_len, impl=impl,
+                kv_seq_shard=kv_seq_shard, rules=rules,
+            )
+        else:  # prefill: write at 0, causal within
+            ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, 0, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, 0, 0, 0))
+            o = ops.attention(
+                q, k, v, causal=True, window=cfg.sliding_window, impl=impl,
+            )
+        new_cache = (ck, cv)
+    else:
+        o = ops.attention(
+            q, k, v, causal=True, window=cfg.sliding_window, impl=impl
+        )
+    o = shard_constraint(o, rules, (ax.BATCH, ax.SEQ, ax.HEADS, ax.HEAD_DIM))
+    out = jnp.einsum("bthk,hkd->btd", o, p["wo"].astype(o.dtype))
+    return shard_constraint(out, rules, (ax.BATCH, ax.SEQ, ax.EMBED)), new_cache
+
+
+def mlp_block(p: Params, x: jnp.ndarray, cfg: ModelConfig, rules=None) -> jnp.ndarray:
+    h = cm.rms_norm(x, p["ln"], cfg.norm_eps)
+    act = cm.activation(cfg.act)
+    g = jnp.einsum("btd,df->btf", h, p["wg"].astype(h.dtype))
+    u = jnp.einsum("btd,df->btf", h, p["wi"].astype(h.dtype))
+    hh = act(g) * u
+    hh = shard_constraint(hh, rules, (ax.BATCH, ax.SEQ, ax.MLP))
+    out = jnp.einsum("btf,fd->btd", hh, p["wo"].astype(h.dtype))
+    return shard_constraint(out, rules, (ax.BATCH, ax.SEQ, ax.EMBED))
+
+
+def dense_layer(
+    p: Params, x: jnp.ndarray, cfg: ModelConfig, *,
+    positions, cache=None, index=None, impl="xla", rules=None,
+    kv_seq_shard=False,
+):
+    a, new_cache = attention_block(
+        p["attn"], x, cfg, positions=positions, cache=cache, index=index,
+        impl=impl, rules=rules, kv_seq_shard=kv_seq_shard,
+    )
+    x = x + a
+    x = x + mlp_block(p["mlp"], x, cfg, rules)
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Scan-over-layers helpers (shared by all families)
+# ---------------------------------------------------------------------------
+
+
+def _remat(fn: Callable, mode: str) -> Callable:
+    if mode == "full":
+        return jax.checkpoint(fn, prevent_cse=False)
+    if mode == "dots":
+        return jax.checkpoint(
+            fn,
+            policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims,
+            prevent_cse=False,
+        )
+    return fn
+
+
+def scan_stack(layer_fn: Callable, stacked: Params, x, *, remat: str = "none",
+               scan: bool = True, length: Optional[int] = None):
+    """x' = layer_fn(params_i, x) folded over the leading (layers) axis."""
+    f = _remat(layer_fn, remat)
+    if not scan:
+        n = length or jax.tree.leaves(stacked)[0].shape[0]
+        for i in range(n):
+            x = f(jax.tree.map(lambda a: a[i], stacked), x)
+        return x
+
+    def body(carry, pl):
+        return f(pl, carry), None
+
+    x, _ = jax.lax.scan(body, x, stacked)
+    return x
+
+
+def scan_stack_cache(layer_fn: Callable, stacked: Params, caches, x, *,
+                     scan: bool = True, length: Optional[int] = None):
+    """Like scan_stack but threads a per-layer cache pytree (decode path).
+
+    layer_fn(params_i, cache_i, x) -> (x, new_cache_i)
+    """
+    if not scan:
+        n = length or jax.tree.leaves(stacked)[0].shape[0]
+        new_caches = []
+        for i in range(n):
+            x, c = layer_fn(
+                jax.tree.map(lambda a: a[i], stacked),
+                jax.tree.map(lambda a: a[i], caches),
+                x,
+            )
+            new_caches.append(c)
+        stacked_cache = jax.tree.map(
+            lambda *cs: jnp.stack(cs, axis=0), *new_caches
+        )
+        return x, stacked_cache
+
+    def body(carry, inputs):
+        pl, cl = inputs
+        y, new_c = layer_fn(pl, cl, carry)
+        return y, new_c
+
+    x, new_caches = jax.lax.scan(body, x, (stacked, caches))
+    return x, new_caches
+
+
+# ---------------------------------------------------------------------------
+# The model
+# ---------------------------------------------------------------------------
+
+
+def unembed(p: Params, x: jnp.ndarray, cfg: ModelConfig, rules=None) -> jnp.ndarray:
+    x = cm.rms_norm(x, p["final_ln"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("btd,vd->btv", x, p["embedding"].astype(x.dtype))
+    else:
+        logits = jnp.einsum("btd,dv->btv", x, p["lm_head"].astype(x.dtype))
+    logits = cm.softcap(logits, cfg.logit_softcap)
+    return shard_constraint(logits, rules, (ax.BATCH, ax.SEQ, ax.VOCAB))
+
+
+def embed(p: Params, tokens: jnp.ndarray, cfg: ModelConfig, rules=None) -> jnp.ndarray:
+    x = cm.take_embedding(p["embedding"], tokens).astype(cfg.dtype)
+    return shard_constraint(x, rules, (ax.BATCH, ax.SEQ, ax.EMBED))
+
+
+@dataclasses.dataclass
+class DenseLM:
+    """Decoder-only dense LM.  ``rules`` (MeshRules) enables sharding hints."""
+
+    cfg: ModelConfig
+    impl: str = "xla"
+    rules: Any = None
+
+    # ------------------------------------------------------------- specs
+    def param_specs(self) -> Params:
+        return param_specs(self.cfg)
+
+    def init(self, rng) -> Params:
+        return cm.init_params(self.param_specs(), rng)
+
+    def _layer_fn(self, positions):
+        cfg, impl, rules = self.cfg, self.impl, self.rules
+
+        def fn(pl, x):
+            y, _ = dense_layer(pl, x, cfg, positions=positions, impl=impl,
+                               rules=rules)
+            return y
+
+        return fn
+
+    # ------------------------------------------------------------- forward
+    def forward(self, params: Params, batch: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        x = embed(params, tokens, cfg, self.rules)
+        positions = jnp.arange(tokens.shape[1], dtype=jnp.int32)
+        x = scan_stack(
+            self._layer_fn(positions), params["layers"], x,
+            remat=cfg.remat, scan=cfg.scan_layers, length=cfg.num_layers,
+        )
+        return unembed(params, x, cfg, self.rules)
+
+    # ------------------------------------------------------------- serving
+    def cache_specs(self, batch: int, max_seq: int) -> Params:
+        cfg = self.cfg
+        kv_axes = (ax.LAYERS, ax.BATCH, ax.CACHE_SEQ, ax.KV_HEADS, ax.HEAD_DIM)
+        shape = (cfg.num_layers, batch, max_seq, cfg.num_kv_heads,
+                 cfg.resolved_head_dim)
+        return {
+            "k": ParamSpec(shape, kv_axes, init="zeros", dtype=jnp.dtype(cfg.dtype)),
+            "v": ParamSpec(shape, kv_axes, init="zeros", dtype=jnp.dtype(cfg.dtype)),
+        }
+
+    def init_cache(self, batch: int, max_seq: int) -> Params:
+        return cm.init_params(self.cache_specs(batch, max_seq), jax.random.PRNGKey(0))
+
+    def prefill(self, params: Params, tokens: jnp.ndarray, cache: Params):
+        """Fill the cache with T prompt tokens; return (last_logits, cache)."""
+        cfg = self.cfg
+        x = embed(params, tokens, cfg, self.rules)
+        positions = jnp.arange(tokens.shape[1], dtype=jnp.int32)
+
+        def fn(pl, cl, h):
+            y, new_c = dense_layer(
+                pl, h, cfg, positions=positions,
+                cache=(cl["k"], cl["v"]), index=None, impl=self.impl,
+                rules=self.rules,
+            )
+            return y, {"k": new_c[0], "v": new_c[1]}
+
+        x, cache = scan_stack_cache(fn, params["layers"], cache, x,
+                                    scan=cfg.scan_layers, length=cfg.num_layers)
+        logits = unembed(params, x[:, -1:, :], cfg, self.rules)
+        return logits[:, 0, :], cache
+
+    def decode_step(self, params: Params, tokens: jnp.ndarray, cache: Params,
+                    index: jnp.ndarray, *, kv_seq_shard: bool = False):
+        """One decode step: tokens (B, 1) written at `index` (scalar int32)."""
+        cfg = self.cfg
+        x = embed(params, tokens, cfg, self.rules)
+        positions = index + jnp.arange(tokens.shape[1], dtype=jnp.int32)
+
+        def fn(pl, cl, h):
+            y, new_c = dense_layer(
+                pl, h, cfg, positions=positions,
+                cache=(cl["k"], cl["v"]), index=index, impl=self.impl,
+                rules=self.rules, kv_seq_shard=kv_seq_shard,
+            )
+            return y, {"k": new_c[0], "v": new_c[1]}
+
+        x, cache = scan_stack_cache(fn, params["layers"], cache, x,
+                                    scan=cfg.scan_layers, length=cfg.num_layers)
+        logits = unembed(params, x, cfg, self.rules)
+        return logits[:, -1, :], cache
+
+
+# ---------------------------------------------------------------------------
+# Loss (shared by the whole zoo)
+# ---------------------------------------------------------------------------
+
+
+def lm_loss(logits: jnp.ndarray, labels: jnp.ndarray,
+            mask: Optional[jnp.ndarray] = None, z_loss_coef: float = 0.0):
+    """Next-token cross entropy in fp32.  labels: (B, T) int32; -1 = ignore."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    ll = jnp.take_along_axis(lf, labels[..., None].clip(0), axis=-1)[..., 0]
+    nll = lse - ll
+    valid = labels >= 0
+    if mask is not None:
+        valid = valid & (mask > 0)
+    w = valid.astype(jnp.float32)
+    denom = jnp.maximum(w.sum(), 1.0)
+    loss = (nll * w).sum() / denom
+    metrics = {"nll": loss, "tokens": w.sum()}
+    if z_loss_coef:
+        zl = z_loss_coef * ((lse * w) ** 2).sum() / denom
+        loss = loss + zl
+        metrics["z_loss"] = zl
+    return loss, metrics

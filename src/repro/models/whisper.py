@@ -1,0 +1,222 @@
+"""Whisper-small backbone — encoder-decoder with STUB conv frontend
+[arXiv:2212.04356].
+
+Per the assignment, the mel+conv frontend is a stub: ``input_specs()``
+supplies precomputed frame embeddings (B, 1500, 768); the encoder is 12
+bidirectional layers over those frames, the decoder is 12 causal layers with
+cross-attention.  seq_len applies to the decoder token stream.  MLPs are
+non-gated (fc1 -> gelu -> fc2), positions are sinusoidal (encoder) and
+learned (decoder), sized to the shape's max_seq at build time.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import base as ax
+from repro.configs.base import ModelConfig
+from repro.models import common as cm
+from repro.models import transformer as tfm
+from repro.models.common import ParamSpec
+from repro.sharding.rules import shard_constraint
+
+Params = Dict[str, Any]
+
+
+def _ffn_specs(cfg: ModelConfig) -> Params:
+    D, F = cfg.d_model, cfg.d_ff
+    return {
+        "ln": ParamSpec((D,), (ax.EMBED,), init="ones"),
+        "wi": ParamSpec((D, F), (ax.EMBED, ax.MLP)),
+        "wo": ParamSpec((F, D), (ax.MLP, ax.EMBED)),
+    }
+
+
+def _ffn(p: Params, x, cfg: ModelConfig, rules=None):
+    h = cm.rms_norm(x, p["ln"], cfg.norm_eps)
+    hh = jax.nn.gelu(jnp.einsum("btd,df->btf", h, p["wi"].astype(h.dtype)))
+    hh = shard_constraint(hh, rules, (ax.BATCH, ax.SEQ, ax.MLP))
+    out = jnp.einsum("btf,fd->btd", hh, p["wo"].astype(h.dtype))
+    return shard_constraint(out, rules, (ax.BATCH, ax.SEQ, ax.EMBED))
+
+
+def enc_layer_specs(cfg: ModelConfig) -> Params:
+    return {"attn": tfm.attn_specs(cfg), "ffn": _ffn_specs(cfg)}
+
+
+def dec_layer_specs(cfg: ModelConfig) -> Params:
+    return {
+        "self_attn": tfm.attn_specs(cfg),
+        "cross_attn": tfm.attn_specs(cfg),
+        "ffn": _ffn_specs(cfg),
+    }
+
+
+def param_specs(cfg: ModelConfig, max_seq: int) -> Params:
+    D = cfg.d_model
+    return {
+        "encoder": cm.stack_tree(enc_layer_specs(cfg), cfg.encoder_layers),
+        "enc_final_ln": ParamSpec((D,), (ax.EMBED,), init="ones"),
+        "decoder": cm.stack_tree(dec_layer_specs(cfg), cfg.num_layers),
+        "dec_pos": ParamSpec((max_seq, D), (None, ax.EMBED), scale=0.02),
+        "embedding": ParamSpec((cfg.padded_vocab, D), (ax.VOCAB, ax.EMBED)),
+        "final_ln": ParamSpec((D,), (ax.EMBED,), init="ones"),
+    }
+
+
+def _cross_attention(p: Params, x, enc_kv, cfg: ModelConfig, impl, rules):
+    """Cross-attn: q from decoder x, (k,v) precomputed from encoder output."""
+    h = cm.rms_norm(x, p["ln"], cfg.norm_eps)
+    q = jnp.einsum("btd,dhk->bthk", h, p["wq"].astype(h.dtype))
+    k, v = enc_kv
+    from repro.kernels import ops
+    o = ops.attention(q, k, v, causal=False, impl=impl)
+    out = jnp.einsum("bthk,hkd->btd", o, p["wo"].astype(o.dtype))
+    return shard_constraint(out, rules, (ax.BATCH, ax.SEQ, ax.EMBED))
+
+
+def _enc_kv(p: Params, enc_out, cfg: ModelConfig):
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, p["wk"].astype(enc_out.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, p["wv"].astype(enc_out.dtype))
+    return k, v
+
+
+@dataclasses.dataclass
+class WhisperLM(tfm.DenseLM):
+    max_seq: int = 4096
+
+    def param_specs(self) -> Params:
+        return param_specs(self.cfg, self.max_seq)
+
+    # ------------------------------------------------------------ encoder
+    def encode(self, params: Params, enc_embeds: jnp.ndarray) -> jnp.ndarray:
+        cfg = self.cfg
+        B, S, D = enc_embeds.shape
+        x = enc_embeds.astype(cfg.dtype) + cm.sinusoidal_positions(S, D).astype(
+            cfg.dtype)[None]
+        positions = jnp.arange(S, dtype=jnp.int32)
+        impl, rules = self.impl, self.rules
+
+        def fn(pl, h):
+            # bidirectional self-attention
+            hn = cm.rms_norm(h, pl["attn"]["ln"], cfg.norm_eps)
+            q = jnp.einsum("btd,dhk->bthk", hn, pl["attn"]["wq"].astype(hn.dtype))
+            k = jnp.einsum("btd,dhk->bthk", hn, pl["attn"]["wk"].astype(hn.dtype))
+            v = jnp.einsum("btd,dhk->bthk", hn, pl["attn"]["wv"].astype(hn.dtype))
+            from repro.kernels import ops
+            o = ops.attention(q, k, v, causal=False, impl=impl)
+            h = h + jnp.einsum("bthk,hkd->btd", o,
+                               pl["attn"]["wo"].astype(o.dtype))
+            return h + _ffn(pl["ffn"], h, cfg, rules)
+
+        x = tfm.scan_stack(fn, params["encoder"], x, remat=cfg.remat,
+                           scan=cfg.scan_layers, length=cfg.encoder_layers)
+        return cm.rms_norm(x, params["enc_final_ln"], cfg.norm_eps)
+
+    # ------------------------------------------------------------ decoder
+    def _dec_embed(self, params, tokens, offset):
+        cfg = self.cfg
+        x = cm.take_embedding(params["embedding"], tokens).astype(cfg.dtype)
+        T = tokens.shape[1]
+        pos = jax.lax.dynamic_slice_in_dim(
+            params["dec_pos"], offset, T, axis=0) if not isinstance(offset, int) \
+            else params["dec_pos"][offset:offset + T]
+        return x + pos.astype(cfg.dtype)[None]
+
+    def forward(self, params: Params, batch: Dict[str, jnp.ndarray]):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        enc_out = self.encode(params, batch["enc_embeds"])
+        x = self._dec_embed(params, tokens, 0)
+        positions = jnp.arange(tokens.shape[1], dtype=jnp.int32)
+        impl, rules = self.impl, self.rules
+
+        def fn(pl, h):
+            a, _ = tfm.attention_block(pl["self_attn"], h, cfg,
+                                       positions=positions, impl=impl,
+                                       rules=rules)
+            h = h + a
+            kv = _enc_kv(pl["cross_attn"], enc_out, cfg)
+            h = h + _cross_attention(pl["cross_attn"], h, kv, cfg, impl, rules)
+            return h + _ffn(pl["ffn"], h, cfg, rules)
+
+        x = tfm.scan_stack(fn, params["decoder"], x, remat=cfg.remat,
+                           scan=cfg.scan_layers, length=cfg.num_layers)
+        x = cm.rms_norm(x, params["final_ln"], cfg.norm_eps)
+        logits = jnp.einsum("btd,vd->btv", x,
+                            params["embedding"].astype(x.dtype))
+        return shard_constraint(logits, rules, (ax.BATCH, ax.SEQ, ax.VOCAB))
+
+    # ------------------------------------------------------------- serving
+    def cache_specs(self, batch: int, max_seq: int) -> Params:
+        cfg = self.cfg
+        kv_axes = (ax.LAYERS, ax.BATCH, ax.CACHE_SEQ, ax.KV_HEADS, ax.HEAD_DIM)
+        ca_axes = (ax.LAYERS, ax.BATCH, ax.ENC_SEQ, ax.KV_HEADS, ax.HEAD_DIM)
+        L, KV, hd = cfg.num_layers, cfg.num_kv_heads, cfg.resolved_head_dim
+        return {
+            "k": ParamSpec((L, batch, max_seq, KV, hd), kv_axes, init="zeros",
+                           dtype=jnp.dtype(cfg.dtype)),
+            "v": ParamSpec((L, batch, max_seq, KV, hd), kv_axes, init="zeros",
+                           dtype=jnp.dtype(cfg.dtype)),
+            "cross_k": ParamSpec((L, batch, cfg.encoder_seq, KV, hd), ca_axes,
+                                 init="zeros", dtype=jnp.dtype(cfg.dtype)),
+            "cross_v": ParamSpec((L, batch, cfg.encoder_seq, KV, hd), ca_axes,
+                                 init="zeros", dtype=jnp.dtype(cfg.dtype)),
+        }
+
+    def _dec_run(self, params, tokens, cache, index, kv_seq_shard=False):
+        cfg = self.cfg
+        offset = 0 if index is None else index
+        x = self._dec_embed(params, tokens, offset)
+        if index is None:
+            positions = jnp.arange(tokens.shape[1], dtype=jnp.int32)
+        else:
+            positions = index + jnp.arange(tokens.shape[1], dtype=jnp.int32)
+
+        def fn(pl, cl, h):
+            a, nc = tfm.attention_block(
+                pl["self_attn"], h, cfg, positions=positions,
+                cache=(cl["k"], cl["v"]), index=index, impl=self.impl,
+                rules=self.rules, kv_seq_shard=kv_seq_shard)
+            h = h + a
+            h = h + _cross_attention(pl["cross_attn"], h,
+                                     (cl["cross_k"], cl["cross_v"]), cfg,
+                                     self.impl, self.rules)
+            h = h + _ffn(pl["ffn"], h, cfg, self.rules)
+            out_c = {"k": nc[0], "v": nc[1],
+                     "cross_k": cl["cross_k"], "cross_v": cl["cross_v"]}
+            return h, out_c
+
+        x, cache = tfm.scan_stack_cache(fn, params["decoder"], cache, x,
+                                        scan=cfg.scan_layers,
+                                        length=cfg.num_layers)
+        x = cm.rms_norm(x, params["final_ln"], cfg.norm_eps)
+        logits = jnp.einsum("btd,vd->btv", x,
+                            params["embedding"].astype(x.dtype))
+        return logits, cache
+
+    def prefill(self, params, tokens, cache, enc_embeds=None):
+        """Runs the encoder, fills cross-attn caches, then decodes prompt."""
+        cfg = self.cfg
+        if enc_embeds is not None:
+            enc_out = self.encode(params, enc_embeds)
+
+            def fill(pl, cl):
+                k, v = _enc_kv(pl["cross_attn"], enc_out, cfg)
+                cl = dict(cl)
+                cl["cross_k"] = k.astype(cl["cross_k"].dtype)
+                cl["cross_v"] = v.astype(cl["cross_v"].dtype)
+                return cl
+
+            # per-layer cross kv (unstacked map over the layer axis)
+            cache = jax.vmap(fill, in_axes=(0, 0))(params["decoder"], cache)
+        logits, cache = self._dec_run(params, tokens, cache, None)
+        return logits[:, -1, :], cache
+
+    def decode_step(self, params, tokens, cache, index, *, kv_seq_shard=False):
+        logits, cache = self._dec_run(params, tokens, cache, index,
+                                      kv_seq_shard)
+        return logits[:, -1, :], cache

@@ -1,0 +1,4 @@
+from repro.optim.adamw import (  # noqa: F401
+    AdamWState, adamw_init, adamw_update, global_norm, clip_by_global_norm,
+)
+from repro.optim.schedule import make_schedule  # noqa: F401

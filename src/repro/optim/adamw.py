@@ -1,0 +1,186 @@
+"""AdamW with optional int8 block-quantized moments (beyond-paper).
+
+Functional, pytree-shaped like the params, so optimizer state inherits the
+parameter shardings under pjit (ZeRO-1 comes from sharding the state over
+the `data` axis where divisible — sharding/rules handles the mapping).
+
+int8 moments: per-block (128) absmax quantization of mu/nu, fp32 scales —
+6 bytes/param optimizer+master state instead of 12, the difference between
+fitting and not fitting jamba-398B / qwen3-235B on v5e HBM (EXPERIMENTS §Perf).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 128
+
+
+# ---------------------------------------------------------------------------
+# int8 blockwise quantization
+# ---------------------------------------------------------------------------
+
+
+class QTensor(NamedTuple):
+    q: jnp.ndarray          # int8, SAME SHAPE as the source tensor
+    scale: jnp.ndarray      # fp32, blocked along `axis`
+    block: int              # static
+    axis: int               # static: blocked dimension
+
+
+def _block_for(n: int) -> int:
+    b = min(BLOCK, n)
+    while n % b:
+        b -= 1
+    return b
+
+
+def _pick_axis(shape) -> int:
+    """Blocked dim choice matters under sharding: if size/block on the
+    blocked dim stops being divisible by the mesh (e.g. vocab 151936/128 =
+    1187, prime), the scale/reshape forces an all-gather of the whole
+    dequantized tensor (§Perf qwen3 iter 5).  Prefer a dim where the
+    post-blocking quotient stays 16-divisible; prefer the last on ties."""
+    best, best_score = len(shape) - 1, -1
+    for d in range(len(shape) - 1, -1, -1):
+        n = shape[d]
+        b = _block_for(n)
+        score = 0
+        if b >= 16:
+            score += 1
+        if (n // b) % 16 == 0 or n // b == 1:
+            score += 2
+        if score > best_score:
+            best, best_score = d, score
+    return best
+
+
+def quantize(x: jnp.ndarray, axis: Optional[int] = None) -> QTensor:
+    """Shape-preserving per-block absmax int8 quantization along one dim.
+
+    ``q`` keeps the source shape, so it inherits the parameter's sharding
+    spec verbatim; ``scale`` has the blocked dim divided by the block."""
+    if x.ndim == 0:
+        t = quantize(x[None], axis=0)
+        return QTensor(t.q[0], t.scale[0], t.block, 0)
+    ax_ = _pick_axis(x.shape) if axis is None else axis
+    n = x.shape[ax_]
+    b = _block_for(n)
+    xm = jnp.moveaxis(x.astype(jnp.float32), ax_, -1)
+    xr = xm.reshape(*xm.shape[:-1], n // b, b)
+    scale = jnp.max(jnp.abs(xr), axis=-1) / 127.0
+    safe = jnp.where(scale == 0, 1.0, scale)
+    q = jnp.clip(jnp.round(xr / safe[..., None]), -127, 127)
+    q = jnp.moveaxis(q.reshape(xm.shape), -1, ax_).astype(jnp.int8)
+    scale = jnp.moveaxis(scale, -1, ax_)   # blocked dim now n//b, in place
+    return QTensor(q, scale, b, ax_)
+
+
+def dequantize(t: QTensor) -> jnp.ndarray:
+    shape = t.q.shape
+    if len(shape) == 0:
+        return t.q.astype(jnp.float32) * t.scale
+    n = shape[t.axis]
+    qm = jnp.moveaxis(t.q.astype(jnp.float32), t.axis, -1)
+    sm = jnp.moveaxis(t.scale, t.axis, -1)
+    xr = qm.reshape(*qm.shape[:-1], n // t.block, t.block) * sm[..., None]
+    return jnp.moveaxis(xr.reshape(qm.shape), -1, t.axis)
+
+
+jax.tree_util.register_pytree_node(
+    QTensor,
+    lambda t: ((t.q, t.scale), (t.block, t.axis)),
+    lambda aux, ch: QTensor(ch[0], ch[1], aux[0], aux[1]),
+)
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    mu: Any
+    nu: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    quantized: bool = False
+
+
+def adamw_init(params: Any, quantized: bool = False) -> AdamWState:
+    def zero(p):
+        z = jnp.zeros(p.shape, jnp.float32)
+        return quantize(z) if quantized else z
+
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        mu=jax.tree.map(zero, params),
+        nu=jax.tree.map(zero, params),
+    )
+
+
+def global_norm(tree: Any) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads: Any, max_norm: float):
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), gn
+
+
+def adamw_update(
+    grads: Any,
+    state: AdamWState,
+    params: Any,
+    lr: jnp.ndarray,
+    cfg: AdamWConfig = AdamWConfig(),
+) -> Tuple[Any, AdamWState]:
+    """Returns (new_params, new_state).  Math in fp32 regardless of storage."""
+    step = state.step + 1
+    b1, b2 = cfg.beta1, cfg.beta2
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+    is_q = lambda x: isinstance(x, QTensor)
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32)
+        mf = dequantize(m) if cfg.quantized else m
+        vf = dequantize(v) if cfg.quantized else v
+        mf = b1 * mf + (1 - b1) * g
+        vf = b2 * vf + (1 - b2) * g * g
+        mhat = mf / c1
+        vhat = vf / c2
+        pf = p.astype(jnp.float32)
+        new_p = pf - lr * (mhat / (jnp.sqrt(vhat) + cfg.eps)
+                           + cfg.weight_decay * pf)
+        if cfg.quantized:
+            mf, vf = quantize(mf), quantize(vf)
+        return new_p.astype(p.dtype), mf, vf
+
+    del is_q
+    flat_g, treedef = jax.tree.flatten(grads)
+    # flatten_up_to stops at grads' leaf positions, so QTensor moment
+    # subtrees come back whole.
+    flat_m = treedef.flatten_up_to(state.mu)
+    flat_v = treedef.flatten_up_to(state.nu)
+    flat_p = treedef.flatten_up_to(params)
+
+    out = [upd(g, m, v, p) for g, m, v, p in
+           zip(flat_g, flat_m, flat_v, flat_p)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, AdamWState(step=step, mu=new_m, nu=new_v)

@@ -1,0 +1,47 @@
+"""LR schedules: cosine, constant, and WSD (warmup-stable-decay — the
+minicpm-2b paper's schedule, wired to that arch's TrainConfig)."""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax.numpy as jnp
+
+
+def make_schedule(
+    kind: str,
+    base_lr: float,
+    warmup_steps: int = 0,
+    decay_steps: int = 10_000,
+    stable_steps: int = 0,
+    min_lr_ratio: float = 0.1,
+) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    min_lr = base_lr * min_lr_ratio
+
+    def warmup(step):
+        if warmup_steps <= 0:
+            return jnp.asarray(1.0, jnp.float32)
+        return jnp.minimum(1.0, step.astype(jnp.float32)
+                           / float(warmup_steps))
+
+    if kind == "constant":
+        def fn(step):
+            return base_lr * warmup(step)
+    elif kind == "cosine":
+        def fn(step):
+            s = jnp.asarray(step, jnp.float32)
+            t = jnp.clip((s - warmup_steps) / max(decay_steps - warmup_steps,
+                                                  1), 0.0, 1.0)
+            cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+            return warmup(step) * (min_lr + (base_lr - min_lr) * cos)
+    elif kind == "wsd":
+        # warmup -> stable plateau at base_lr -> linear decay to min_lr
+        def fn(step):
+            s = jnp.asarray(step, jnp.float32)
+            decay_start = warmup_steps + stable_steps
+            t = jnp.clip((s - decay_start)
+                         / max(decay_steps - decay_start, 1), 0.0, 1.0)
+            return warmup(step) * (base_lr - (base_lr - min_lr) * t)
+    else:
+        raise ValueError(f"unknown schedule {kind!r}")
+
+    return fn

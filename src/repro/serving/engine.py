@@ -1,0 +1,88 @@
+"""Batched serving engine: prefill + decode loop over the model zoo's
+uniform cache API (KV caches for attention archs, recurrent states for
+rwkv6/mamba — the engine is agnostic).
+
+``ServeEngine.generate`` runs greedy / temperature sampling with jitted
+prefill and decode-step closures; used by examples/serve_lm.py and the
+serving smoke tests.  The decode step is the same function the decode/long
+dry-run cells lower at the production mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model_zoo
+
+
+@dataclasses.dataclass
+class GenerationResult:
+    tokens: np.ndarray          # (B, prompt+gen)
+    prefill_seconds: float
+    decode_seconds: float
+    steps: int
+
+    @property
+    def decode_tokens_per_s(self) -> float:
+        if self.decode_seconds == 0:
+            return float("inf")
+        return self.tokens.shape[0] * self.steps / self.decode_seconds
+
+
+class ServeEngine:
+    def __init__(self, model, params, max_seq: int, batch: int,
+                 temperature: float = 0.0, seed: int = 0):
+        self.model = model
+        self.params = params
+        self.max_seq = max_seq
+        self.batch = batch
+        self.temperature = temperature
+        self.rng = jax.random.PRNGKey(seed)
+        cfg = model.cfg
+        self._prefill = jax.jit(model_zoo.make_prefill_fn(model))
+        decode_fn = model_zoo.make_decode_fn(model)
+        self._decode = jax.jit(decode_fn, donate_argnums=(2,))
+
+    def _sample(self, logits: jnp.ndarray) -> jnp.ndarray:
+        if self.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        self.rng, k = jax.random.split(self.rng)
+        return jax.random.categorical(
+            k, logits / self.temperature, axis=-1).astype(jnp.int32)
+
+    def generate(self, batch_inputs: Dict[str, np.ndarray],
+                 max_new_tokens: int) -> GenerationResult:
+        tokens = jnp.asarray(batch_inputs["tokens"], jnp.int32)
+        B, T = tokens.shape
+        cfg = self.model.cfg
+        n_prefix = cfg.vision_tokens if cfg.family == "vlm" else 0
+        cache = self.model.init_cache(B, self.max_seq)
+
+        t0 = time.perf_counter()
+        logits, cache = self._prefill(self.params, batch_inputs, cache)
+        logits.block_until_ready()
+        t_prefill = time.perf_counter() - t0
+
+        out = [tokens]
+        cur = self._sample(logits)[:, None]
+        t1 = time.perf_counter()
+        for i in range(max_new_tokens):
+            out.append(cur)
+            if i == max_new_tokens - 1:
+                break
+            index = jnp.int32(n_prefix + T + i)
+            logits, cache = self._decode(self.params, cur, cache, index)
+            cur = self._sample(logits)[:, None]
+        jax.block_until_ready(cur)
+        t_decode = time.perf_counter() - t1
+        return GenerationResult(
+            tokens=np.asarray(jnp.concatenate(out, axis=1)),
+            prefill_seconds=t_prefill,
+            decode_seconds=t_decode,
+            steps=max_new_tokens,
+        )

@@ -1,0 +1,8 @@
+from repro.sharding.rules import (  # noqa: F401
+    DEFAULT_RULES,
+    MeshRules,
+    logical_to_pspec,
+    logical_sharding,
+    merged_rules,
+    shard_constraint,
+)

@@ -1,0 +1,177 @@
+"""Logical-axis sharding rules (MaxText-style) with divisibility fallback.
+
+Every parameter / activation dimension in the model zoo is annotated with a
+*logical* axis name (configs/base.py).  A rules table maps each logical axis
+to a tuple of physical mesh axes.  The resolver drops a mapping (axis ->
+replicated) whenever the dimension size is not divisible by the product of
+the mapped mesh axis sizes, or when a mesh axis is already consumed by an
+earlier dimension of the same tensor — recording the fallback so the
+dry-run can report it instead of failing to compile.
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import base as axes
+
+log = logging.getLogger(__name__)
+
+# logical axis -> physical mesh axes.  () means explicitly replicated.
+Rules = Mapping[str, Tuple[str, ...]]
+
+DEFAULT_RULES: Dict[str, Tuple[str, ...]] = {
+    axes.BATCH: ("pod", "data"),
+    axes.SEQ: (),
+    axes.EMBED: (),
+    axes.HEADS: ("model",),
+    axes.KV_HEADS: ("model",),
+    axes.HEAD_DIM: (),
+    axes.MLP: ("model",),
+    axes.VOCAB: ("model",),
+    axes.EXPERTS: ("model",),
+    axes.EXPERT_MLP: (),
+    axes.LAYERS: (),
+    axes.STATE: (),
+    axes.CONV: (),
+    axes.COMMITTEE: ("model",),
+    axes.CACHE_SEQ: (),
+    axes.ENC_SEQ: (),
+}
+
+
+def merged_rules(*overrides: Optional[Rules]) -> Dict[str, Tuple[str, ...]]:
+    out = dict(DEFAULT_RULES)
+    for ov in overrides:
+        if ov:
+            out.update({k: tuple(v) for k, v in ov.items()})
+    return out
+
+
+@dataclasses.dataclass
+class FallbackRecord:
+    tensor: str
+    dim: int
+    logical: str
+    wanted: Tuple[str, ...]
+    reason: str
+
+
+class MeshRules:
+    """Resolves logical-axis tuples to PartitionSpecs on a concrete mesh."""
+
+    def __init__(self, mesh: Mesh, rules: Optional[Rules] = None):
+        self.mesh = mesh
+        self.rules = merged_rules(rules)
+        self.fallbacks: List[FallbackRecord] = []
+
+    def _mesh_axes_for(self, logical: Optional[str]) -> Tuple[str, ...]:
+        if logical is None:
+            return ()
+        wanted = self.rules.get(logical, ())
+        # drop mesh axes that don't exist on this mesh (e.g. 'pod' single-pod)
+        return tuple(a for a in wanted if a in self.mesh.shape)
+
+    def pspec(
+        self,
+        logical_axes: Sequence[Optional[str]],
+        dims: Optional[Sequence[int]] = None,
+        name: str = "?",
+    ) -> P:
+        """PartitionSpec for a tensor with the given logical axes.
+
+        `dims` (concrete sizes) enables the divisibility fallback; without it
+        the mapping is trusted.
+        """
+        used: set = set()
+        entries = []
+        for i, logical in enumerate(logical_axes):
+            mesh_axes = self._mesh_axes_for(logical)
+            if not mesh_axes:
+                entries.append(None)
+                continue
+            # greedy subset fallback: keep every axis that is still free and
+            # keeps the dim divisible, instead of dropping the whole mapping
+            # (e.g. mlp -> ('model','data') with 'data' taken by batch must
+            # degrade to ('model',), not to replicated).
+            chosen = []
+            prod = 1
+            dropped_reasons = []
+            for a in mesh_axes:
+                if a in used:
+                    dropped_reasons.append(f"{a}: mesh axis reuse")
+                    continue
+                sz = self.mesh.shape[a]
+                if dims is not None and dims[i] % (prod * sz) != 0:
+                    dropped_reasons.append(
+                        f"{a}: dim {dims[i]} % {prod * sz} != 0")
+                    continue
+                chosen.append(a)
+                prod *= sz
+            if dropped_reasons:
+                self.fallbacks.append(
+                    FallbackRecord(name, i, logical or "?", mesh_axes,
+                                   "; ".join(dropped_reasons)))
+            if not chosen:
+                entries.append(None)
+                continue
+            used.update(chosen)
+            entries.append(tuple(chosen) if len(chosen) > 1 else chosen[0])
+        return P(*entries)
+
+    def sharding(
+        self,
+        logical_axes: Sequence[Optional[str]],
+        dims: Optional[Sequence[int]] = None,
+        name: str = "?",
+    ) -> NamedSharding:
+        return NamedSharding(self.mesh, self.pspec(logical_axes, dims, name))
+
+    # ------------------------------------------------------------- pytrees
+    def tree_pspecs(self, axes_tree, shape_tree=None):
+        """Map a pytree of logical-axis tuples (+ optional ShapeDtypeStructs)
+        to a pytree of PartitionSpecs."""
+        if shape_tree is None:
+            return jax.tree.map(
+                lambda ax: self.pspec(ax),
+                axes_tree,
+                is_leaf=lambda x: isinstance(x, tuple),
+            )
+        paths = {}
+
+        def resolve(ax, sds):
+            return self.pspec(ax, sds.shape, name=str(sds.shape))
+
+        return jax.tree.map(
+            resolve, axes_tree, shape_tree, is_leaf=lambda x: isinstance(x, tuple)
+        )
+
+    def tree_shardings(self, axes_tree, shape_tree=None):
+        ps = self.tree_pspecs(axes_tree, shape_tree)
+        return jax.tree.map(lambda p: NamedSharding(self.mesh, p), ps,
+                            is_leaf=lambda x: isinstance(x, P))
+
+
+def logical_to_pspec(mesh: Mesh, logical_axes, rules: Optional[Rules] = None,
+                     dims=None) -> P:
+    return MeshRules(mesh, rules).pspec(logical_axes, dims)
+
+
+def logical_sharding(mesh: Mesh, logical_axes, rules: Optional[Rules] = None,
+                     dims=None) -> NamedSharding:
+    return MeshRules(mesh, rules).sharding(logical_axes, dims)
+
+
+def shard_constraint(x, mesh_rules: Optional["MeshRules"], logical_axes):
+    """with_sharding_constraint keyed by logical axes; no-op outside a mesh."""
+    if mesh_rules is None:
+        return x
+    spec = mesh_rules.pspec(logical_axes, x.shape)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh_rules.mesh, spec)
+    )

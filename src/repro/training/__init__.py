@@ -1,0 +1,3 @@
+from repro.training.train_step import (  # noqa: F401
+    TrainState, make_train_state, make_train_step, make_eval_step,
+)

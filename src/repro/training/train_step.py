@@ -1,0 +1,104 @@
+"""Train/eval step builders: loss (incl. MoE aux) -> grads -> clip ->
+schedule -> AdamW, with gradient accumulation and an optional gradient-
+compression cast at the DP-reduction point (beyond-paper).
+
+The returned step function is pure (state, batch) -> (state, metrics) and
+jit/pjit-able; sharding is applied by the caller (launch/dryrun.py resolves
+in_shardings from the ParamSpec logical axes).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+from repro.optim.adamw import (
+    AdamWConfig, AdamWState, adamw_init, adamw_update, clip_by_global_norm,
+)
+from repro.optim.schedule import make_schedule
+
+
+class TrainState(NamedTuple):
+    step: jnp.ndarray
+    params: Any
+    opt: AdamWState
+
+
+def make_train_state(params: Any, train_cfg: TrainConfig) -> TrainState:
+    return TrainState(
+        step=jnp.zeros((), jnp.int32),
+        params=params,
+        opt=adamw_init(params, quantized=train_cfg.quantized_opt_state),
+    )
+
+
+def make_train_step(
+    loss_fn: Callable[[Any, Dict[str, jnp.ndarray]], Tuple[jnp.ndarray, Dict]],
+    train_cfg: TrainConfig,
+) -> Callable[[TrainState, Dict[str, jnp.ndarray]], Tuple[TrainState, Dict]]:
+    schedule = make_schedule(
+        train_cfg.schedule, train_cfg.learning_rate,
+        warmup_steps=train_cfg.warmup_steps,
+        decay_steps=train_cfg.decay_steps,
+        stable_steps=train_cfg.stable_steps,
+        min_lr_ratio=train_cfg.min_lr_ratio,
+    )
+    adam_cfg = AdamWConfig(
+        beta1=train_cfg.beta1, beta2=train_cfg.beta2, eps=train_cfg.eps,
+        weight_decay=train_cfg.weight_decay,
+        quantized=train_cfg.quantized_opt_state,
+    )
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+    accum = max(1, train_cfg.accum_steps)
+
+    def compute_grads(params, batch):
+        if accum == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+            # microbatch over the leading batch dim
+            def micro(i, carry):
+                g_acc, l_acc = carry
+                mb = jax.tree.map(
+                    lambda x: jax.lax.dynamic_slice_in_dim(
+                        x, i * (x.shape[0] // accum), x.shape[0] // accum, 0),
+                    batch)
+                (l, _), g = grad_fn(params, mb)
+                g_acc = jax.tree.map(jnp.add, g_acc, g)
+                return g_acc, l_acc + l
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            grads, loss = jax.lax.fori_loop(
+                0, accum, micro, (zeros, jnp.float32(0.0)))
+            grads = jax.tree.map(lambda g: g / accum, grads)
+            loss = loss / accum
+            metrics = {}
+        if train_cfg.grad_compression == "bf16":
+            # beyond-paper: cast grads at the cross-replica reduction point;
+            # under SPMD the psum then runs on 2-byte words (half the DP
+            # all-reduce bytes), error feedback not needed at these scales.
+            grads = jax.tree.map(lambda g: g.astype(jnp.bfloat16), grads)
+        return loss, metrics, grads
+
+    def train_step(state: TrainState, batch) -> Tuple[TrainState, Dict]:
+        loss, metrics, grads = compute_grads(state.params, batch)
+        grads, gnorm = clip_by_global_norm(grads, train_cfg.grad_clip_norm)
+        lr = schedule(state.step)
+        new_params, new_opt = adamw_update(grads, state.opt, state.params,
+                                           lr, adam_cfg)
+        metrics = dict(metrics)
+        metrics.update({"loss": loss, "grad_norm": gnorm, "lr": lr})
+        return TrainState(state.step + 1, new_params, new_opt), metrics
+
+    return train_step
+
+
+def make_eval_step(loss_fn):
+    def eval_step(params, batch):
+        loss, metrics = loss_fn(params, batch)
+        return metrics
+
+    return eval_step

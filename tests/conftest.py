@@ -1,0 +1,38 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — smoke tests and benches must
+see the real single device; only the dry-run subprocesses get 512."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import ModelConfig
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+def tiny_config(family: str, **kw) -> ModelConfig:
+    base = dict(
+        name=f"tiny-{family}", family=family, num_layers=2, d_model=64,
+        num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=256,
+        dtype="float32", param_dtype="float32", remat="none")
+    if family == "moe":
+        base.update(moe_num_experts=8, moe_top_k=2, moe_num_shared_experts=2,
+                    moe_shared_d_ff=256, moe_group_size=16,
+                    moe_capacity_factor=8.0)
+    if family == "rwkv6":
+        base.update(num_heads=4, num_kv_heads=4, rwkv_head_dim=16,
+                    rwkv_lora_rank=8, rwkv_decay_lora_rank=8)
+    if family == "hybrid":
+        base.update(num_layers=8, attn_layer_period=8, attn_layer_offset=4,
+                    moe_num_experts=4, moe_top_k=2, moe_layer_period=2,
+                    moe_layer_offset=1, mamba_head_dim=16, mamba_d_state=8,
+                    moe_group_size=16, moe_capacity_factor=8.0)
+    if family == "encdec":
+        base.update(encoder_layers=2, encoder_seq=24, rope_theta=0.0,
+                    act="gelu")
+    if family == "vlm":
+        base.update(vision_tokens=4)
+    base.update(kw)
+    return ModelConfig(**base)

@@ -1,0 +1,357 @@
+"""PAL core unit tests: transport semantics, buffers, selection, committee
+packing, weight sync, speedup model — including hypothesis property tests on
+the system's invariants."""
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import committee as cmte
+from repro.core import selection as sel
+from repro.core import speedup as sp
+from repro.core.buffers import (OracleInputBuffer, RollingTrainingBuffer,
+                                TrainingDataBuffer)
+from repro.core.transport import Channel, Communicator, TransportError
+from repro.core.weight_sync import WeightStore
+
+# ---------------------------------------------------------------------------
+# transport
+# ---------------------------------------------------------------------------
+
+
+def test_channel_isend_irecv_roundtrip():
+    ch = Channel("t")
+    req = ch.irecv()
+    assert not req.test()
+    ch.isend({"x": 1})
+    assert req.test()
+    assert req.value == {"x": 1}
+
+
+def test_channel_send_before_recv():
+    ch = Channel("t")
+    ch.isend(1)
+    ch.isend(2)
+    assert ch.recv() == 1
+    assert ch.recv() == 2
+
+
+def test_channel_recv_timeout():
+    ch = Channel("t")
+    with pytest.raises(TimeoutError):
+        ch.recv(timeout=0.01)
+
+
+def test_request_test_mirrors_mpi_capitalization():
+    ch = Channel("t")
+    req = ch.irecv()
+    assert req.Test() is False     # paper code calls req_data.Test()
+    ch.isend(None)
+    assert req.Test() is True
+
+
+def test_channel_cross_thread():
+    ch = Channel("t")
+    out = []
+
+    def consumer():
+        out.append(ch.recv(timeout=5))
+
+    th = threading.Thread(target=consumer)
+    th.start()
+    time.sleep(0.02)
+    ch.isend(42)
+    th.join()
+    assert out == [42]
+
+
+def test_fixed_size_data_enforced():
+    ch = Channel("t", fixed_size=(4,))
+    ch.isend(np.zeros(4))
+    with pytest.raises(TransportError):
+        ch.isend(np.zeros(5))
+
+
+def test_communicator_gather_scatter_order():
+    comm = Communicator()
+    srcs = [f"g{i}" for i in range(4)]
+    for i, s in enumerate(srcs):
+        comm.channel(s, "ctrl").isend(i * 10)
+    got = comm.gather(srcs, "ctrl", timeout=1)
+    assert got == [0, 10, 20, 30]          # rank-sorted, as the paper requires
+    comm.scatter("ctrl", srcs, [i + 1 for i in range(4)])
+    for i, s in enumerate(srcs):
+        assert comm.channel("ctrl", s).recv(timeout=1) == i + 1
+    with pytest.raises(TransportError):
+        comm.scatter("ctrl", srcs, [1, 2])
+
+
+# ---------------------------------------------------------------------------
+# buffers
+# ---------------------------------------------------------------------------
+
+
+@given(st.lists(st.integers(), max_size=200),
+       st.integers(min_value=1, max_value=50))
+@settings(max_examples=50, deadline=None)
+def test_training_buffer_releases_exact_blocks(items, retrain_size):
+    buf = TrainingDataBuffer(retrain_size)
+    for x in items:
+        buf.add(x, x)
+    released = []
+    while buf.ready():
+        block = buf.release()
+        assert len(block) == retrain_size
+        released.extend(block)
+    assert len(buf) == len(items) - len(released)
+    assert len(buf) < retrain_size
+
+
+@given(st.lists(st.integers(), min_size=1, max_size=300),
+       st.integers(min_value=1, max_value=40))
+@settings(max_examples=50, deadline=None)
+def test_rolling_buffer_never_exceeds_capacity(xs, cap):
+    buf = RollingTrainingBuffer(cap)
+    for x in xs:
+        buf.extend([np.float64(x)], [np.float64(x)])
+        assert len(buf) <= cap
+    # newest items survive
+    x_arr, _ = buf.arrays()
+    want = xs[-min(cap, len(xs)):]
+    assert list(x_arr) == [float(w) for w in want]
+    assert buf.evicted == max(0, len(xs) - cap)
+
+
+def test_oracle_buffer_fifo_and_adjust():
+    buf = OracleInputBuffer()
+    buf.put([1, 2, 3])
+    assert buf.pop() == 1
+    buf.adjust(lambda items: list(reversed(items)))
+    assert buf.pop() == 3
+    assert len(buf) == 1
+
+
+def test_oracle_buffer_bounded_drops_oldest():
+    buf = OracleInputBuffer(max_size=3)
+    buf.put([1, 2, 3, 4, 5])
+    assert buf.snapshot() == [3, 4, 5]
+    assert buf.dropped == 2
+
+
+# ---------------------------------------------------------------------------
+# selection (prediction_check & friends)
+# ---------------------------------------------------------------------------
+
+
+def test_prediction_check_selects_above_threshold():
+    inputs = [np.array([float(i)]) for i in range(4)]
+    # committee of 2: disagree on samples 1 and 3
+    preds = np.zeros((2, 4, 2))
+    preds[1, 1, 0] = 1.0
+    preds[1, 3, 1] = 2.0
+    res = sel.prediction_check(inputs, preds, threshold=0.5)
+    assert list(res.uncertain_mask) == [False, True, False, True]
+    assert len(res.inputs_to_oracle) == 2
+    assert (res.inputs_to_oracle[0] == inputs[1]).all()
+    # generators receive committee mean
+    np.testing.assert_allclose(res.data_to_generators[1],
+                               preds[:, 1].mean(axis=0))
+
+
+@given(st.floats(min_value=0.0, max_value=5.0),
+       st.floats(min_value=0.0, max_value=5.0))
+@settings(max_examples=30, deadline=None)
+def test_prediction_check_threshold_monotonic(t1, t2):
+    """Raising the threshold can only shrink the oracle set."""
+    rng = np.random.RandomState(0)
+    inputs = [rng.randn(3) for _ in range(16)]
+    preds = rng.randn(4, 16, 3)
+    lo, hi = min(t1, t2), max(t1, t2)
+    n_lo = sel.prediction_check(inputs, preds, lo).uncertain_mask.sum()
+    n_hi = sel.prediction_check(inputs, preds, hi).uncertain_mask.sum()
+    assert n_hi <= n_lo
+
+
+def test_adjust_input_for_oracle_sorts_and_prunes():
+    buf = [np.array([i]) for i in range(3)]
+    preds = np.zeros((2, 3, 1))
+    preds[1, 0, 0] = 0.1      # small std
+    preds[1, 2, 0] = 5.0      # large std
+    out = sel.adjust_input_for_oracle(buf, preds, threshold=0.5)
+    assert len(out) == 1 and out[0][0] == 2
+    out2 = sel.adjust_input_for_oracle(buf, preds, threshold=0.01)
+    assert [int(x[0]) for x in out2] == [2, 0]  # sorted by std desc
+
+
+def test_patience_tracker_restarts_after_budget():
+    pt = sel.PatienceTracker(n_generators=2, patience=2)
+    m = np.array([True, False])
+    assert not pt.step(m).any()
+    assert not pt.step(m).any()
+    restart = pt.step(m)
+    assert list(restart) == [True, False]
+    assert pt.counts[0] == 0                  # reset after restart
+    assert pt.restarts[0] == 1
+
+
+def test_diversity_filter_drops_near_duplicates():
+    inputs = [np.zeros(2), np.zeros(2) + 0.001, np.ones(2) * 9]
+    kept = sel.diversity_filter(inputs, np.array([0, 1, 2]), min_dist=0.1)
+    assert list(kept) == [0, 2]
+
+
+# ---------------------------------------------------------------------------
+# committee: packing + UQ
+# ---------------------------------------------------------------------------
+
+_tree_strategy = st.fixed_dictionaries({
+    "a": st.tuples(st.integers(1, 5), st.integers(1, 5)),
+    "b": st.tuples(st.integers(1, 8)),
+})
+
+
+@given(_tree_strategy, st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=30, deadline=None)
+def test_weight_pack_unpack_roundtrip(shapes, seed):
+    rng = np.random.RandomState(seed % 100000)
+    tree = {k: jnp.asarray(rng.randn(*shp).astype(np.float32))
+            for k, shp in shapes.items()}
+    packed = cmte.get_weight(tree)
+    assert packed.ndim == 1
+    assert packed.size == cmte.get_weight_size(tree)
+    out = cmte.update(tree, packed)
+    for k in tree:
+        np.testing.assert_array_equal(np.asarray(tree[k]),
+                                      np.asarray(out[k]))
+
+
+def test_update_rejects_wrong_size():
+    tree = {"w": jnp.zeros((2, 2))}
+    with pytest.raises(ValueError):
+        cmte.update(tree, np.zeros(5, np.float32))
+
+
+def test_committee_mean_std_ddof1():
+    preds = jnp.asarray(np.random.RandomState(0).randn(4, 8, 3))
+    mean, std = cmte.mean_std(preds)
+    np.testing.assert_allclose(np.asarray(std),
+                               np.asarray(preds).std(axis=0, ddof=1),
+                               rtol=1e-5)
+
+
+def test_committee_vmap_equals_member_loop():
+    def apply_fn(p, x):
+        return x @ p["w"]
+
+    rng = np.random.RandomState(1)
+    members = [{"w": jnp.asarray(rng.randn(3, 2).astype(np.float32))}
+               for _ in range(4)]
+    cparams = cmte.stack_members(members)
+    x = jnp.asarray(rng.randn(5, 3).astype(np.float32))
+    com = cmte.Committee(apply_fn, cparams, jit=False)
+    preds, mean, std = com.predict(x)
+    for i, m in enumerate(members):
+        np.testing.assert_allclose(np.asarray(preds[i]),
+                                   np.asarray(apply_fn(m, x)), rtol=1e-6)
+
+
+def test_lm_committee_uncertainty_zero_for_identical_members():
+    logits = jnp.asarray(np.random.RandomState(0).randn(1, 2, 8, 16))
+    clogits = jnp.concatenate([logits, logits], axis=0)
+    labels = jnp.zeros((2, 8), jnp.int32)
+    mean, std = cmte.lm_committee_uncertainty(clogits, labels)
+    np.testing.assert_allclose(np.asarray(std), 0.0, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# weight store
+# ---------------------------------------------------------------------------
+
+
+def test_weight_store_versioning():
+    store = WeightStore(2)
+    assert store.pull_packed(0) is None
+    v1 = store.publish_packed(0, np.arange(4, dtype=np.float32))
+    got, v = store.pull_packed(0)
+    assert v == v1
+    assert store.pull_packed(0, newer_than=v1) is None
+    v2 = store.publish_packed(0, np.arange(4, dtype=np.float32) * 2)
+    got, v = store.pull_packed(0, newer_than=v1)
+    assert v == v2 and got[1] == 2.0
+
+
+def test_weight_store_pull_all_requires_all_members():
+    store = WeightStore(2)
+    tree = {"w": jnp.zeros(3)}
+    cparams = cmte.stack_members([tree, tree])
+    store.publish(0, tree)
+    out, v = store.pull_all(cparams)
+    assert out is None                     # member 1 never published
+    store.publish(1, {"w": jnp.ones(3)})
+    out, v = store.pull_all(cparams)
+    assert out is not None
+    np.testing.assert_allclose(np.asarray(out["w"][1]), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# speedup model (SI S2)
+# ---------------------------------------------------------------------------
+
+
+def test_use_case_1_balanced_dft_gnn_approaches_2():
+    w = sp.USE_CASES["dft_gnn"]
+    assert sp.speedup(w) == pytest.approx(2.0, abs=0.02)   # Eq. 7
+
+
+def test_use_case_2_training_bound_approaches_1():
+    w = sp.USE_CASES["xtb_reaction"]
+    assert sp.speedup(w) == pytest.approx(1.0, abs=0.2)    # Eq. 10
+    assert sp.bottleneck(w) == "train"
+
+
+def test_use_case_3_all_balanced_is_3():
+    w = sp.USE_CASES["cfd"]
+    assert sp.speedup(w) == pytest.approx(3.0)             # Eq. 13
+
+
+@given(st.floats(0.01, 1e4), st.floats(0.01, 1e4), st.floats(0.01, 1e4),
+       st.integers(1, 64), st.integers(1, 64))
+@settings(max_examples=100, deadline=None)
+def test_speedup_bounded_between_1_and_3(to, tt, tg, n, p):
+    """S = sum/max of three non-negative terms: 1 <= S <= 3 always."""
+    if p > n:
+        p = n
+    w = sp.WorkloadParams(to, tt, tg, n, p)
+    s = sp.speedup(w)
+    assert 1.0 <= s <= 3.0 + 1e-9
+
+
+def test_speedup_eq7_formula():
+    """Balanced oracle/train with N >= P: S = 1 + P/N (t_gen -> 0)."""
+    for n, p in [(16, 16), (32, 8), (64, 16)]:
+        w = sp.WorkloadParams(t_oracle=100.0, t_train=(n / p) * 100.0,
+                              t_gen=1e-9, n_samples=n, n_workers=p)
+        assert sp.speedup(w) == pytest.approx(1.0 + (w.t_train /
+                                                     ((n / p) * 100.0)),
+                                              rel=1e-6)
+
+
+def test_workload_rejects_p_greater_than_n():
+    with pytest.raises(ValueError):
+        sp.WorkloadParams(1, 1, 1, n_samples=2, n_workers=4)
+
+
+def test_recv_timeout_does_not_eat_next_message():
+    """Regression: a timed-out recv must cancel its pending request —
+    otherwise the next isend completes a dead request and the message is
+    lost (deadlocked the oracle pool on late first dispatch)."""
+    ch = Channel("t")
+    for _ in range(5):                    # park-and-abandon five times
+        with pytest.raises(TimeoutError):
+            ch.recv(timeout=0.005)
+    ch.isend("job")
+    assert ch.recv(timeout=1.0) == "job"  # must still be deliverable

@@ -1,0 +1,219 @@
+"""Per-kernel validation: Pallas (interpret=True) and the chunked XLA
+schedules against the pure-jnp sequential oracles, swept over shapes,
+dtypes, and masking modes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ssd_scan import ssd
+from repro.kernels.wkv6 import wkv6
+
+
+def _rand(key, shape, dtype, lo=None, hi=None):
+    if lo is not None:
+        return jax.random.uniform(key, shape, jnp.float32, lo, hi).astype(dtype)
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+TOL = {jnp.float32: 2e-4, jnp.bfloat16: 2e-2}
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("B,T,H,KV,D", [
+    (1, 128, 4, 4, 64),     # MHA
+    (2, 256, 8, 2, 64),     # GQA 4:1
+    (1, 128, 4, 1, 128),    # MQA, head_dim 128
+])
+@pytest.mark.parametrize("causal,window", [
+    (True, None), (True, 64), (False, None),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_matches_ref(B, T, H, KV, D, causal, window, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = _rand(ks[0], (B, T, H, D), dtype)
+    k = _rand(ks[1], (B, T, KV, D), dtype)
+    v = _rand(ks[2], (B, T, KV, D), dtype)
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          block_q=64, block_k=64, interpret=True)
+    want = ref.attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(want, np.float32),
+        atol=TOL[dtype], rtol=TOL[dtype])
+
+
+def test_flash_attention_decode_kv_len():
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    B, S, H, KV, D = 3, 192, 8, 4, 64
+    q = _rand(ks[0], (B, 1, H, D), jnp.float32)
+    k = _rand(ks[1], (B, S, KV, D), jnp.float32)
+    v = _rand(ks[2], (B, S, KV, D), jnp.float32)
+    kv_len = jnp.array([50, 192, 1], jnp.int32)
+    out = flash_attention(q, k, v, causal=False, kv_len=kv_len, q_offset=191,
+                          block_q=1, block_k=64, interpret=True)
+    want = ref.attention_ref(q, k, v, causal=False, kv_len=kv_len,
+                             q_offset=191)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-4)
+
+
+def test_flash_attention_sliding_window_decode():
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    B, S, H, D, W = 2, 256, 4, 64, 64
+    q = _rand(ks[0], (B, 1, H, D), jnp.float32)
+    k = _rand(ks[1], (B, S, H, D), jnp.float32)
+    v = _rand(ks[2], (B, S, H, D), jnp.float32)
+    kv_len = jnp.array([200, 256], jnp.int32)
+    out = flash_attention(q, k, v, causal=False, window=W, kv_len=kv_len,
+                          q_offset=255, block_q=1, block_k=64, interpret=True)
+    want = ref.attention_ref(q, k, v, causal=False, window=W, kv_len=kv_len,
+                             q_offset=255)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-4)
+
+
+def test_attention_chunked_ref_matches_naive():
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    B, T, H, KV, D = 2, 512, 8, 4, 64
+    q = _rand(ks[0], (B, T, H, D), jnp.float32)
+    k = _rand(ks[1], (B, T, KV, D), jnp.float32)
+    v = _rand(ks[2], (B, T, KV, D), jnp.float32)
+    for window in (None, 128):
+        got = ref.attention_chunked_ref(q, k, v, causal=True, window=window,
+                                        chunk=128)
+        want = ref.attention_ref(q, k, v, causal=True, window=window)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=2e-4)
+
+
+def test_flash_attention_raises_on_untileable():
+    q = jnp.zeros((1, 100, 4, 64))
+    k = v = jnp.zeros((1, 100, 4, 64))
+    with pytest.raises(ValueError):
+        flash_attention(q, k, v, block_q=64, block_k=64, interpret=True)
+
+
+# ---------------------------------------------------------------------------
+# wkv6
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("B,T,H,N,chunk", [
+    (1, 64, 2, 16, 16),
+    (2, 128, 3, 32, 32),
+    (1, 96, 1, 64, 32),     # T not a power of two multiple
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_wkv6_pallas_matches_sequential(B, T, H, N, chunk, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(4), 6)
+    r = _rand(ks[0], (B, T, H, N), dtype)
+    k = _rand(ks[1], (B, T, H, N), dtype)
+    v = _rand(ks[2], (B, T, H, N), dtype)
+    w = _rand(ks[3], (B, T, H, N), jnp.float32, lo=0.2, hi=0.999).astype(dtype)
+    u = _rand(ks[4], (H, N), jnp.float32)
+    s0 = _rand(ks[5], (B, H, N, N), jnp.float32)
+    y, S = wkv6(r, k, v, w, u, s0, chunk=chunk, interpret=True)
+    y_ref, S_ref = ref.wkv6_ref(r, k, v, w, u, s0)
+    atol = 5e-3 if dtype == jnp.float32 else 1e-1
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(y_ref, np.float32), atol=atol)
+    np.testing.assert_allclose(np.asarray(S), np.asarray(S_ref), atol=atol)
+
+
+def test_wkv6_strong_decay_stable():
+    """Strong decay (w -> 0) must not overflow the chunked form."""
+    B, T, H, N = 1, 128, 2, 16
+    ks = jax.random.split(jax.random.PRNGKey(5), 5)
+    r = _rand(ks[0], (B, T, H, N), jnp.float32)
+    k = _rand(ks[1], (B, T, H, N), jnp.float32)
+    v = _rand(ks[2], (B, T, H, N), jnp.float32)
+    w = jnp.full((B, T, H, N), 1e-4, jnp.float32)
+    u = _rand(ks[3], (H, N), jnp.float32)
+    y, S = wkv6(r, k, v, w, u, None, chunk=32, interpret=True)
+    y_ref, S_ref = ref.wkv6_ref(r, k, v, w, u, None)
+    assert np.isfinite(np.asarray(y)).all()
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), atol=5e-3)
+
+
+def test_wkv6_state_chaining_equals_full_run():
+    """Running two halves with carried state == one full run."""
+    B, T, H, N = 2, 128, 2, 16
+    ks = jax.random.split(jax.random.PRNGKey(6), 5)
+    r = _rand(ks[0], (B, T, H, N), jnp.float32)
+    k = _rand(ks[1], (B, T, H, N), jnp.float32)
+    v = _rand(ks[2], (B, T, H, N), jnp.float32)
+    w = _rand(ks[3], (B, T, H, N), jnp.float32, lo=0.3, hi=0.99)
+    u = _rand(ks[4], (H, N), jnp.float32)
+    y_full, S_full = ref.wkv6_chunked_ref(r, k, v, w, u, None, chunk=32)
+    h = T // 2
+    y1, S1 = ref.wkv6_chunked_ref(r[:, :h], k[:, :h], v[:, :h], w[:, :h],
+                                  u, None, chunk=32)
+    y2, S2 = ref.wkv6_chunked_ref(r[:, h:], k[:, h:], v[:, h:], w[:, h:],
+                                  u, S1, chunk=32)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 1)),
+                               np.asarray(y_full), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(S2), np.asarray(S_full), atol=1e-4)
+
+
+def test_wkv6_decode_step_matches_scan():
+    B, H, N = 2, 2, 16
+    ks = jax.random.split(jax.random.PRNGKey(7), 6)
+    r = _rand(ks[0], (B, 8, H, N), jnp.float32)
+    k = _rand(ks[1], (B, 8, H, N), jnp.float32)
+    v = _rand(ks[2], (B, 8, H, N), jnp.float32)
+    w = _rand(ks[3], (B, 8, H, N), jnp.float32, lo=0.3, hi=0.99)
+    u = _rand(ks[4], (H, N), jnp.float32)
+    y_ref, _ = ref.wkv6_ref(r, k, v, w, u, None)
+    S = jnp.zeros((B, H, N, N))
+    ys = []
+    for t in range(8):
+        y, S = ref.wkv6_decode_ref(r[:, t], k[:, t], v[:, t], w[:, t], u, S)
+        ys.append(y)
+    np.testing.assert_allclose(np.asarray(jnp.stack(ys, 1)),
+                               np.asarray(y_ref), atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# ssd
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("B,T,H,P,N,chunk", [
+    (1, 64, 2, 16, 8, 16),
+    (2, 128, 4, 32, 16, 32),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssd_pallas_matches_sequential(B, T, H, P, N, chunk, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(8), 5)
+    x = _rand(ks[0], (B, T, H, P), dtype)
+    a = _rand(ks[1], (B, T, H), jnp.float32, lo=0.3, hi=1.0).astype(dtype)
+    Bm = _rand(ks[2], (B, T, H, N), dtype)
+    Cm = _rand(ks[3], (B, T, H, N), dtype)
+    s0 = _rand(ks[4], (B, H, N, P), jnp.float32)
+    y, S = ssd(x, a, Bm, Cm, s0, chunk=chunk, interpret=True)
+    y_ref, S_ref = ref.ssd_ref(x, a, Bm, Cm, s0)
+    atol = 5e-3 if dtype == jnp.float32 else 1e-1
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(y_ref, np.float32), atol=atol)
+    np.testing.assert_allclose(np.asarray(S), np.asarray(S_ref), atol=atol)
+
+
+def test_ssd_decode_step_matches_scan():
+    B, H, P, N = 2, 2, 8, 4
+    ks = jax.random.split(jax.random.PRNGKey(9), 4)
+    x = _rand(ks[0], (B, 8, H, P), jnp.float32)
+    a = _rand(ks[1], (B, 8, H), jnp.float32, lo=0.3, hi=1.0)
+    Bm = _rand(ks[2], (B, 8, H, N), jnp.float32)
+    Cm = _rand(ks[3], (B, 8, H, N), jnp.float32)
+    y_ref, _ = ref.ssd_ref(x, a, Bm, Cm, None)
+    S = jnp.zeros((B, H, N, P))
+    ys = []
+    for t in range(8):
+        y, S = ref.ssd_decode_ref(x[:, t], a[:, t], Bm[:, t], Cm[:, t], S)
+        ys.append(y)
+    np.testing.assert_allclose(np.asarray(jnp.stack(ys, 1)),
+                               np.asarray(y_ref), atol=1e-4)

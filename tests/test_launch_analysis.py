@@ -1,0 +1,120 @@
+"""Unit tests for the dry-run / roofline analysis machinery (HLO parsing,
+resident-bytes accounting, rule merging incl. serve_rules, analytic
+MODEL_FLOPS sanity)."""
+import jax
+import numpy as np
+import pytest
+
+# These imports must not initialize 512 devices — dryrun sets XLA_FLAGS at
+# module import, but the device count only locks on first backend use, and
+# these tests only exercise pure helpers.
+from repro.launch.dryrun import (_line_result_bytes, parse_collectives,
+                                 make_rules)
+from repro.configs import get_arch, get_shape
+from repro.configs.base import ModelConfig, ShapeConfig
+
+
+def test_line_result_bytes_simple():
+    line = "%add.1 = f32[16,128]{1,0} add(%a, %b)"
+    assert _line_result_bytes(line) == 16 * 128 * 4
+    line2 = "%c = bf16[8]{0} copy(%x)"
+    assert _line_result_bytes(line2) == 16
+    assert _line_result_bytes("ROOT %t = tuple(...)") == 0
+
+
+def test_line_result_bytes_tuple_shapes():
+    line = ("%ar = (f32[4,4]{1,0}, bf16[2]{0}) all-reduce(%p0, %p1), "
+            "replica_groups={}")
+    assert _line_result_bytes(line) == 4 * 4 * 4 + 2 * 2
+
+
+def test_parse_collectives_counts_and_bytes():
+    hlo = """
+  %x = f32[4] parameter(0)
+  %ag = f32[64,4]{1,0} all-gather(%x), dimensions={0}
+  %ar = f32[16]{0} all-reduce(%y), to_apply=%sum
+  %ar2 = f32[16]{0} all-reduce(%z), to_apply=%sum
+  %rs = bf16[8]{0} reduce-scatter(%w), dimensions={0}
+  %cp = f32[2]{0} collective-permute(%v), source_target_pairs={{0,1}}
+  %dot = f32[99] dot(%a, %b)
+"""
+    out = parse_collectives(hlo)
+    assert out["all-gather"]["count"] == 1
+    assert out["all-gather"]["bytes"] == 64 * 4 * 4
+    assert out["all-reduce"]["count"] == 2
+    assert out["all-reduce"]["bytes"] == 2 * 16 * 4
+    assert out["reduce-scatter"]["bytes"] == 8 * 2
+    assert out["collective-permute"]["count"] == 1
+    assert "dot" not in out
+
+
+def test_parse_collectives_async_start_variant():
+    hlo = "%ags = f32[32]{0} all-gather-start(%x), dimensions={0}"
+    out = parse_collectives(hlo)
+    assert out["all-gather"]["count"] == 1
+
+
+class FakeMesh:
+    def __init__(self, shape):
+        self.shape = dict(shape)
+
+
+def test_make_rules_merges_serve_rules_only_for_serving():
+    spec = get_arch("jamba-1.5-large-398b")
+    mesh = FakeMesh({"data": 16, "model": 16})
+    train_shape = get_shape(spec, "train_4k")
+    dec_shape = get_shape(spec, "decode_32k")
+    r_train = make_rules(spec, train_shape, mesh)
+    r_dec = make_rules(spec, dec_shape, mesh)
+    assert r_train.rules["mlp"] == ("model", "data")   # training: 256-way
+    assert r_dec.rules["mlp"] == ("model",)            # serving: plain TP
+
+
+def test_shape_overrides_beat_serve_rules():
+    spec = get_arch("jamba-1.5-large-398b")
+    mesh = FakeMesh({"data": 16, "model": 16})
+    long_shape = get_shape(spec, "long_500k")
+    r = make_rules(spec, long_shape, mesh)
+    assert r.rules["cache_seq"] == ("data",)   # LONG_500K shape override
+
+
+# ---------------------------------------------------------------------------
+# analytic MODEL_FLOPS sanity (no device allocation)
+# ---------------------------------------------------------------------------
+
+
+def test_analytic_flops_scales_linearly_with_tokens():
+    from repro.launch.roofline import analytic_model_flops
+    cfg = get_arch("llama3.2-1b").model
+    s1 = ShapeConfig("a", 1024, 8, "train")
+    s2 = ShapeConfig("b", 1024, 16, "train")
+    f1 = analytic_model_flops(cfg, s1)
+    f2 = analytic_model_flops(cfg, s2)
+    assert f2 == pytest.approx(2 * f1, rel=1e-6)
+
+
+def test_analytic_flops_train_is_3x_prefill():
+    from repro.launch.roofline import analytic_model_flops
+    cfg = get_arch("mistral-nemo-12b").model
+    tr = analytic_model_flops(cfg, ShapeConfig("a", 2048, 8, "train"))
+    pf = analytic_model_flops(cfg, ShapeConfig("b", 2048, 8, "prefill"))
+    assert tr == pytest.approx(3 * pf, rel=1e-6)
+
+
+def test_analytic_decode_flops_much_smaller_than_prefill():
+    from repro.launch.roofline import analytic_model_flops
+    for arch in ("rwkv6-7b", "whisper-small", "jamba-1.5-large-398b"):
+        cfg = get_arch(arch).model
+        pf = analytic_model_flops(cfg, ShapeConfig("b", 4096, 8, "prefill"))
+        de = analytic_model_flops(cfg, ShapeConfig("c", 4096, 8, "decode"))
+        assert de < pf / 100, arch     # one token vs 4096
+
+
+def test_moe_active_ratio():
+    from repro.launch.roofline import _active_params
+    dense = get_arch("llama3.2-1b").model
+    moe = get_arch("qwen3-moe-235b-a22b").model
+    n_act = _active_params(moe)
+    # qwen3: ~22B active of 235B total
+    assert 1.5e10 < n_act < 3.5e10
+    assert _active_params(dense) > 1.0e9

@@ -1,0 +1,218 @@
+"""Substrate tests: AdamW (+int8 moments), schedules, synthetic data
+determinism/sharding, prefetcher, checkpoints (atomicity, retention,
+resume)."""
+import os
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import AsyncCheckpointer, load_checkpoint, save_checkpoint
+from repro.checkpoint.pytree_ckpt import latest_step, list_steps
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.data.prefetch import Prefetcher
+from repro.data.replay import ALReplayBuffer
+from repro.data.synthetic import SyntheticTokenStream, synthetic_batch
+from repro.optim.adamw import (AdamWConfig, adamw_init, adamw_update,
+                               clip_by_global_norm, dequantize, global_norm,
+                               quantize)
+from repro.optim.schedule import make_schedule
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+
+def _quadratic_converges(quantized: bool) -> float:
+    target = jnp.asarray(np.random.RandomState(0).randn(8, 8), jnp.float32)
+    params = {"w": jnp.zeros((8, 8))}
+    state = adamw_init(params, quantized=quantized)
+    cfg = AdamWConfig(weight_decay=0.0, quantized=quantized)
+
+    @jax.jit
+    def step(params, state):
+        grads = jax.grad(lambda p: jnp.mean((p["w"] - target) ** 2))(params)
+        return adamw_update(grads, state, params, jnp.float32(0.05), cfg)
+
+    for _ in range(300):
+        params, state = step(params, state)
+    return float(jnp.mean((params["w"] - target) ** 2))
+
+
+def test_adamw_converges_quadratic():
+    assert _quadratic_converges(False) < 1e-3
+
+
+def test_adamw_int8_moments_converge():
+    assert _quadratic_converges(True) < 5e-2
+
+
+@given(st.integers(0, 10000))
+@settings(max_examples=30, deadline=None)
+def test_quantize_roundtrip_bounded_error(seed):
+    rng = np.random.RandomState(seed)
+    shape = tuple(rng.randint(1, 9, size=rng.randint(1, 4)))
+    x = jnp.asarray(rng.randn(*shape).astype(np.float32) * 10 ** rng.randint(
+        -3, 3))
+    t = quantize(x)
+    assert t.q.shape == x.shape
+    y = dequantize(t)
+    scale = float(jnp.max(jnp.abs(x))) + 1e-12
+    assert float(jnp.max(jnp.abs(x - y))) <= scale / 127.0 + 1e-9
+
+
+def test_clip_by_global_norm():
+    grads = {"a": jnp.ones(4) * 10}
+    clipped, gn = clip_by_global_norm(grads, 1.0)
+    assert float(gn) == pytest.approx(20.0)
+    assert float(global_norm(clipped)) == pytest.approx(1.0, rel=1e-5)
+    # below threshold: untouched
+    small = {"a": jnp.ones(4) * 0.01}
+    out, _ = clip_by_global_norm(small, 1.0)
+    np.testing.assert_allclose(np.asarray(out["a"]), 0.01, rtol=1e-6)
+
+
+def test_wsd_schedule_shape():
+    fn = make_schedule("wsd", 1.0, warmup_steps=10, decay_steps=100,
+                       stable_steps=50, min_lr_ratio=0.1)
+    assert float(fn(jnp.int32(0))) == 0.0
+    assert float(fn(jnp.int32(10))) == pytest.approx(1.0)
+    assert float(fn(jnp.int32(40))) == pytest.approx(1.0)      # stable
+    assert float(fn(jnp.int32(100))) == pytest.approx(0.1)     # decayed
+    mid = float(fn(jnp.int32(80)))
+    assert 0.1 < mid < 1.0                                     # linear decay
+
+
+def test_cosine_schedule_endpoints():
+    fn = make_schedule("cosine", 2.0, warmup_steps=5, decay_steps=50,
+                       min_lr_ratio=0.05)
+    assert float(fn(jnp.int32(5))) == pytest.approx(2.0, rel=1e-3)
+    assert float(fn(jnp.int32(50))) == pytest.approx(0.1, rel=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# synthetic data
+# ---------------------------------------------------------------------------
+
+CFG = ModelConfig(name="t", family="dense", num_layers=1, d_model=32,
+                  num_heads=2, num_kv_heads=2, d_ff=64, vocab_size=1000)
+SHAPE = ShapeConfig("s", 16, 8, "train")
+
+
+def test_synthetic_batch_deterministic():
+    a = synthetic_batch(CFG, SHAPE, step=7, seed=3)
+    b = synthetic_batch(CFG, SHAPE, step=7, seed=3)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    c = synthetic_batch(CFG, SHAPE, step=8, seed=3)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+
+
+def test_synthetic_labels_are_shifted_tokens():
+    b = synthetic_batch(CFG, SHAPE, step=0)
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+def test_dp_shards_partition_global_batch():
+    full = synthetic_batch(CFG, SHAPE, step=0, dp_rank=0, dp_size=1)
+    parts = [synthetic_batch(CFG, SHAPE, step=0, dp_rank=r, dp_size=4)
+             for r in range(4)]
+    stacked = np.concatenate([p["tokens"] for p in parts], axis=0)
+    np.testing.assert_array_equal(full["tokens"], stacked)
+
+
+def test_stream_resume_bit_exact():
+    s1 = SyntheticTokenStream(CFG, SHAPE, seed=1)
+    batches = [next(s1) for _ in range(5)]
+    state = s1.state_dict()
+    s2 = SyntheticTokenStream(CFG, SHAPE)
+    s2.load_state_dict(state)
+    np.testing.assert_array_equal(next(s1)["tokens"], next(s2)["tokens"])
+
+
+def test_tokens_within_vocab():
+    b = synthetic_batch(CFG, SHAPE, step=0)
+    assert b["tokens"].min() >= 0
+    assert b["tokens"].max() < CFG.vocab_size
+
+
+def test_prefetcher_preserves_order_and_surfaces_errors():
+    it = Prefetcher(iter(range(10)), depth=2)
+    assert list(it) == list(range(10))
+
+    def bad():
+        yield 1
+        raise RuntimeError("boom")
+
+    it2 = Prefetcher(bad(), depth=2)
+    assert next(it2) == 1
+    with pytest.raises(RuntimeError):
+        next(it2)
+
+
+def test_replay_buffer_sampling_and_eviction():
+    buf = ALReplayBuffer(capacity=4, seq_len=8)
+    buf.add([np.arange(10) + i for i in range(6)])
+    assert len(buf) == 4 and buf.evicted == 2
+    batch = buf.sample(3, np.random.RandomState(0))
+    assert batch["tokens"].shape == (3, 8)
+    np.testing.assert_array_equal(batch["tokens"][:, 1:],
+                                  batch["labels"][:, :-1])
+
+
+# ---------------------------------------------------------------------------
+# checkpoints
+# ---------------------------------------------------------------------------
+
+
+def test_checkpoint_save_load_roundtrip():
+    tmp = tempfile.mkdtemp()
+    tree = {"w": jnp.arange(6).reshape(2, 3), "s": jnp.float32(2.5)}
+    save_checkpoint(tmp, 5, tree, extra={"note": "x"})
+    snap = load_checkpoint(tmp)
+    assert snap["step"] == 5
+    np.testing.assert_array_equal(snap["tree"]["w"], np.arange(6).reshape(2, 3))
+    assert snap["extra"]["note"] == "x"
+
+
+def test_checkpoint_retention_keeps_newest():
+    tmp = tempfile.mkdtemp()
+    ck = AsyncCheckpointer(tmp, keep=2)
+    for s in (1, 2, 3, 4):
+        ck.save(s, {"x": jnp.ones(2) * s})
+    ck.wait()
+    assert list_steps(tmp) == [3, 4]
+    assert latest_step(tmp) == 4
+
+
+def test_checkpoint_no_partial_files_visible():
+    tmp = tempfile.mkdtemp()
+    save_checkpoint(tmp, 1, {"x": jnp.ones(3)})
+    files = os.listdir(tmp)
+    assert all(not f.startswith(".tmp_") for f in files)
+
+
+def test_async_checkpointer_resume():
+    tmp = tempfile.mkdtemp()
+    ck = AsyncCheckpointer(tmp)
+    ck.save(7, {"x": jnp.ones(2) * 7})
+    snap = ck.restore_latest()
+    assert snap["step"] == 7
+    np.testing.assert_array_equal(snap["tree"]["x"], [7.0, 7.0])
+
+
+def test_async_checkpointer_surfaces_worker_errors(monkeypatch):
+    tmp = tempfile.mkdtemp()
+    ck = AsyncCheckpointer(tmp)
+    import repro.checkpoint.pytree_ckpt as mod
+
+    def bomb(*a, **k):
+        raise IOError("disk full")
+
+    monkeypatch.setattr(mod, "save_checkpoint", bomb)
+    ck.save(1, {"x": jnp.ones(1)})
+    with pytest.raises(IOError):
+        ck.wait()

@@ -1,0 +1,96 @@
+"""Serving engine behaviour + a true 512-device dry-run smoke test run in a
+subprocess (XLA_FLAGS must be set before jax init, so it cannot run
+in-process with the rest of the suite)."""
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+import jax
+import numpy as np
+import pytest
+
+from conftest import tiny_config
+from repro.models.model_zoo import build_model
+from repro.serving import ServeEngine
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_serve_engine_greedy_deterministic():
+    cfg = tiny_config("dense")
+    m = build_model(cfg, max_seq=48)
+    params = m.init(jax.random.PRNGKey(0))
+    eng = ServeEngine(m, params, max_seq=48, batch=2)
+    batch = {"tokens": np.ones((2, 16), np.int32) * 5}
+    r1 = eng.generate(batch, max_new_tokens=8)
+    r2 = eng.generate(batch, max_new_tokens=8)
+    np.testing.assert_array_equal(r1.tokens, r2.tokens)
+    assert r1.tokens.shape == (2, 24)
+
+
+def test_serve_engine_temperature_sampling_varies():
+    cfg = tiny_config("dense")
+    m = build_model(cfg, max_seq=48)
+    params = m.init(jax.random.PRNGKey(0))
+    e1 = ServeEngine(m, params, max_seq=48, batch=2, temperature=1.5, seed=1)
+    e2 = ServeEngine(m, params, max_seq=48, batch=2, temperature=1.5, seed=2)
+    batch = {"tokens": np.ones((2, 16), np.int32)}
+    t1 = e1.generate(batch, max_new_tokens=12).tokens
+    t2 = e2.generate(batch, max_new_tokens=12).tokens
+    assert not np.array_equal(t1, t2)
+
+
+def test_serve_engine_matches_decode_consistency():
+    """Greedy engine tokens equal manual prefill+decode loop."""
+    cfg = tiny_config("rwkv6")
+    m = build_model(cfg, max_seq=40)
+    params = m.init(jax.random.PRNGKey(0))
+    eng = ServeEngine(m, params, max_seq=40, batch=1)
+    batch = {"tokens": np.arange(8, dtype=np.int32)[None] % cfg.vocab_size}
+    res = eng.generate(batch, max_new_tokens=4)
+
+    import jax.numpy as jnp
+    cache = m.init_cache(1, 40)
+    last, cache = m.prefill(params, jnp.asarray(batch["tokens"]), cache)
+    toks = [int(jnp.argmax(last, -1)[0])]
+    for i in range(3):
+        nxt = jnp.asarray([[toks[-1]]], jnp.int32)
+        logits, cache = m.decode_step(params, nxt, cache, jnp.int32(8 + i))
+        toks.append(int(jnp.argmax(logits, -1)[0]))
+    np.testing.assert_array_equal(res.tokens[0, 8:], np.asarray(toks))
+
+
+# ---------------------------------------------------------------------------
+# 512-device dry-run smoke (subprocess)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_dryrun_subprocess_single_cell():
+    """Full production-mesh lower+compile for one cheap cell proves the
+    512-virtual-device path end to end."""
+    out = tempfile.mkdtemp()
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch",
+         "llama3.2-1b", "--shape", "decode_32k", "--out", out],
+        capture_output=True, text=True, timeout=560, env=env, cwd=REPO)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    rep = json.load(open(os.path.join(
+        out, "llama3.2-1b_decode_32k_singlepod.json")))
+    assert rep.get("compiled") is True
+    assert rep["mesh"] == {"data": 16, "model": 16}
+    assert rep["resident_gib_per_device"] > 0
+
+
+def test_make_production_mesh_shapes():
+    """Mesh factory axes/shape contract (uses a 1-device stub check only —
+    real 512-dev construction is exercised in the subprocess test)."""
+    from repro.launch import mesh as mesh_mod
+    import inspect
+    src = inspect.getsource(mesh_mod.make_production_mesh)
+    assert "(2, 16, 16)" in src and "(16, 16)" in src
+    assert '"pod", "data", "model"' in src
