@@ -1,0 +1,18 @@
+# Tier-1 verification + fused-exchange benchmark smoke.
+# `make check` is what CI runs (see .github/workflows/ci.yml).
+
+PY := python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: check test bench-smoke bench
+
+check: test bench-smoke
+
+test:
+	$(PY) -m pytest -x -q
+
+bench-smoke:
+	$(PY) benchmarks/committee_uq.py --smoke
+
+bench:
+	$(PY) -m benchmarks.run

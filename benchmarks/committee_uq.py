@@ -1,0 +1,190 @@
+"""Benchmark: fused single-dispatch exchange hot path vs sequential members.
+
+The seed exchange iteration dispatches K sequential ``model.predict`` calls,
+round-trips the full (K, n_gen, out_dim) prediction tensor to host, and
+recomputes committee std in float64 NumPy (core/selection.prediction_check).
+The fused engine (core/committee.FusedPredictSelect + kernels/ops
+``committee_uq``) runs the vmapped committee forward and the UQ statistics
+as ONE compiled device program and ships only (mean, scalar_std, mask) back.
+
+Two metrics per configuration, written to ``BENCH_committee_uq.json``:
+
+* wall-clock per exchange iteration (median), sequential vs fused
+* host bytes per iteration — bytes crossing the host<->device boundary
+  plus bytes the UQ step materializes in host memory (the float64
+  (K, n_gen, out_dim) copy + std/mean intermediates of the seed check;
+  zero for the fused path, whose UQ never leaves the device)
+
+Also sweeps ``n_gen`` across iterations to demonstrate the power-of-two
+shape-bucketed jit cache: compile counts per bucket are recorded and must
+be 1.
+
+Usage:  PYTHONPATH=src python benchmarks/committee_uq.py [--smoke] [--out F]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import statistics
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import committee as cmte
+from repro.core import selection as sel
+
+K = 8               # committee members (acceptance: >=2x at K=8, n_gen=64)
+N_GEN = 64
+IN_DIM = 16
+HIDDEN = 64
+OUT_DIM = 4
+THRESHOLD = 0.5
+
+
+def _mlp_apply(p, x):
+    h = jnp.tanh(x @ p["w1"] + p["b1"])
+    return h @ p["w2"] + p["b2"]
+
+
+def _make_members(rng):
+    members = []
+    for _ in range(K):
+        members.append({
+            "w1": jnp.asarray(rng.randn(IN_DIM, HIDDEN).astype(np.float32)
+                              * 0.3),
+            "b1": jnp.asarray(rng.randn(HIDDEN).astype(np.float32) * 0.1),
+            "w2": jnp.asarray(rng.randn(HIDDEN, OUT_DIM).astype(np.float32)
+                              * 0.3),
+            "b2": jnp.asarray(rng.randn(OUT_DIM).astype(np.float32) * 0.1),
+        })
+    return members
+
+
+def _inputs(rng, n):
+    return [rng.randn(IN_DIM).astype(np.float32) for _ in range(n)]
+
+
+def bench_sequential(members, batches):
+    """Seed path: K separate per-member dispatches + float64 host UQ."""
+    fns = [jax.jit(_mlp_apply) for _ in members]     # one program per member
+    times, up, down, host_uq = [], 0, 0, 0
+    first = True
+    for inputs in batches:
+        t0 = time.perf_counter()
+        x = np.stack(inputs)
+        preds = []
+        for fn, p in zip(fns, members):
+            xd = jnp.asarray(x)                      # host -> device, per member
+            preds.append(np.asarray(fn(p, xd)))      # device -> host, per member
+        stacked = np.asarray(preds)
+        res = sel.prediction_check(inputs, stacked, THRESHOLD)
+        times.append(time.perf_counter() - t0)
+        if first:       # byte accounting is shape-determined; count once
+            n, d = x.shape[0], OUT_DIM
+            up = len(members) * x.nbytes
+            down = sum(p.nbytes for p in preds)
+            # seed prediction_check materializes float64 preds + std + mean
+            host_uq = (stacked.size + 2 * n * d) * 8
+            first = False
+        last = res
+    return times, up, down, host_uq, last
+
+
+def bench_fused(engine, batches):
+    """Fused path: one dispatch, (mean, scalar_std, mask) back."""
+    times = []
+    engine.bytes_to_device = engine.bytes_to_host = 0
+    n_iter = 0
+    for inputs in batches:
+        t0 = time.perf_counter()
+        mean, sstd, mask = engine(inputs)
+        res = sel.prediction_check_fast(inputs, mean, sstd, mask)
+        times.append(time.perf_counter() - t0)
+        n_iter += 1
+    return times, engine.bytes_to_device / n_iter, \
+        engine.bytes_to_host / n_iter, res
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="few iterations")
+    ap.add_argument("--iters", type=int, default=None)
+    ap.add_argument("--out", default="BENCH_committee_uq.json")
+    args = ap.parse_args(argv)
+    iters = args.iters or (20 if args.smoke else 200)
+    warmup = 3 if args.smoke else 10
+
+    rng = np.random.RandomState(0)
+    members = _make_members(rng)
+    cparams = cmte.stack_members(members)
+    engine = cmte.FusedPredictSelect(_mlp_apply, cparams, THRESHOLD,
+                                     impl="xla")
+
+    batches = [_inputs(rng, N_GEN) for _ in range(warmup + iters)]
+    seq_t, sq_up, sq_down, sq_host, res_a = bench_sequential(members, batches)
+    fus_t, fu_up, fu_down, res_b = bench_fused(engine, batches)
+    seq_ms = statistics.median(seq_t[warmup:]) * 1e3
+    fus_ms = statistics.median(fus_t[warmup:]) * 1e3
+
+    # selection agreement sanity (same inputs, same committee); a sample
+    # whose fp32 device std lands within rounding of the threshold may
+    # legitimately flip vs the float64 host path — only flag disagreement
+    # away from the boundary
+    diff = res_a.uncertain_mask != res_b.uncertain_mask
+    near = np.abs(res_a.std - THRESHOLD) < 1e-4 * max(1.0, THRESHOLD)
+    assert not (diff & ~near).any(), \
+        "fused and sequential paths disagree on selection off-threshold"
+
+    # bucketed jit cache: varying n_gen must compile once per bucket
+    engine2 = cmte.FusedPredictSelect(_mlp_apply, cparams, THRESHOLD,
+                                      impl="xla")
+    for n in (64, 48, 33, 64, 100, 9, 128, 65):
+        engine2(_inputs(rng, n))
+    buckets_ok = all(c == 1 for c in engine2.trace_counts.values())
+
+    seq_bytes = sq_up + sq_down + sq_host
+    fus_bytes = fu_up + fu_down
+    report = {
+        "config": {"K": K, "n_gen": N_GEN, "in_dim": IN_DIM,
+                   "hidden": HIDDEN, "out_dim": OUT_DIM,
+                   "threshold": THRESHOLD, "iters": iters,
+                   "backend": jax.default_backend()},
+        "sequential": {"ms_per_iteration": seq_ms,
+                       "bytes_host_to_device": sq_up,
+                       "bytes_device_to_host": sq_down,
+                       "bytes_host_uq_materialized": sq_host,
+                       "bytes_total": seq_bytes},
+        "fused": {"ms_per_iteration": fus_ms,
+                  "bytes_host_to_device": fu_up,
+                  "bytes_device_to_host": fu_down,
+                  "bytes_host_uq_materialized": 0,
+                  "bytes_total": fus_bytes},
+        "speedup_wallclock": seq_ms / fus_ms,
+        "bytes_reduction_factor": seq_bytes / fus_bytes,
+        "bytes_reduction_transfers_only":
+            (sq_up + sq_down) / fus_bytes,
+        "bucket_trace_counts": {str(k): v for k, v
+                                in engine2.trace_counts.items()},
+        "buckets_compile_once": buckets_ok,
+    }
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2)
+
+    print(f"sequential: {seq_ms:.3f} ms/iter  "
+          f"({seq_bytes / 1024:.1f} KiB host bytes)")
+    print(f"fused:      {fus_ms:.3f} ms/iter  "
+          f"({fus_bytes / 1024:.1f} KiB host bytes)")
+    print(f"speedup {report['speedup_wallclock']:.2f}x   "
+          f"host-bytes reduction {report['bytes_reduction_factor']:.1f}x "
+          f"(transfers only: "
+          f"{report['bytes_reduction_transfers_only']:.1f}x)")
+    print(f"bucket trace counts: {engine2.trace_counts} "
+          f"(compile-once: {buckets_ok})")
+    print(f"wrote {args.out}")
+    return report
+
+
+if __name__ == "__main__":
+    main()

@@ -1,9 +1,10 @@
 """Benchmark entry point: one section per paper table/claim.
 
-  speedup    — SI S2 analytic speedup model, 3 use cases (Eqs. 1-13)
-  overhead   — §3.1 exchange-loop overhead vs committee inference
-  scaling    — §2 oracle/generator pool scaling
-  kernels    — Pallas-path microbenchmarks (XLA schedule, host timing)
+  speedup      — SI S2 analytic speedup model, 3 use cases (Eqs. 1-13)
+  overhead     — §3.1 exchange-loop overhead vs committee inference
+  scaling      — §2 oracle/generator pool scaling
+  committee_uq — fused single-dispatch exchange path vs sequential members
+  kernels      — Pallas-path microbenchmarks (XLA schedule, host timing)
 
 ``python -m benchmarks.run`` runs everything; ``--only <name>`` filters.
 The roofline/dry-run tables (launch/roofline.py) are separate because they
@@ -37,6 +38,12 @@ def bench_scaling():
     from benchmarks import scaling
     _section("Oracle / generator pool scaling (paper §2)")
     scaling.main()
+
+
+def bench_committee_uq(smoke: bool):
+    from benchmarks import committee_uq
+    _section("Fused committee-UQ exchange hot path (single dispatch)")
+    committee_uq.main(["--smoke"] if smoke else [])
 
 
 def bench_kernels():
@@ -86,9 +93,12 @@ def bench_kernels():
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    choices=["speedup", "overhead", "scaling", "kernels"])
+                    choices=["speedup", "overhead", "scaling", "kernels",
+                             "committee_uq"])
     ap.add_argument("--simulate", action="store_true",
                     help="run the measured PAL-runtime speedup simulation")
+    ap.add_argument("--smoke", action="store_true",
+                    help="few iterations (CI)")
     args = ap.parse_args()
 
     t0 = time.time()
@@ -98,6 +108,8 @@ def main():
         bench_overhead()
     if args.only in (None, "scaling"):
         bench_scaling()
+    if args.only in (None, "committee_uq"):
+        bench_committee_uq(args.smoke)
     if args.only in (None, "kernels"):
         bench_kernels()
     print(f"\n# total benchmark wall time: {time.time() - t0:.1f}s")

@@ -5,10 +5,16 @@ Public surface:
   transport     — MPI-shaped non-blocking channels (isend/irecv/Test)
   api           — UserModel / UserGene / UserOracle kernel interfaces (S4–S7)
   buffers       — oracle input buffer, retrain_size training buffer, rolling
-  committee     — vmapped committee + the paper's 1-D weight packing
-  selection     — prediction_check / adjust_input_for_oracle / patience
-  weight_sync   — versioned training->prediction weight publication
-  controller    — Exchange + Manager sub-controllers
+  committee     — vmapped committee + the paper's 1-D weight packing, plus
+                  FusedPredictSelect: the single-dispatch exchange engine
+                  (committee forward fused with the committee_uq kernel
+                  under a power-of-two shape-bucketed jit cache)
+  selection     — prediction_check (+ the fast path consuming device UQ) /
+                  adjust_input_for_oracle / patience
+  weight_sync   — versioned training->prediction weight publication with
+                  preallocated ping-pong pack buffers (alloc-free publish)
+  controller    — Exchange + Manager sub-controllers; with a fused engine
+                  one exchange iteration is ONE device dispatch
   runtime       — PAL: threads, fault tolerance, elastic pools, checkpoints
   speedup       — the SI S2 analytic speedup model
 """

@@ -4,7 +4,11 @@
   proposals from every generator, runs the committee, applies the *central*
   uncertainty check (prediction_check), queues uncertain samples for the
   oracle, scatters committee means (with restart flags realized as ``None``,
-  the paper's first-iteration semantics) back to generators.
+  the paper's first-iteration semantics) back to generators.  With a fused
+  engine (committee.FusedPredictSelect) installed on the PredictionPool the
+  whole predict+check becomes ONE device dispatch returning only
+  ``(mean, scalar_std, mask)`` — the seed path's K sequential member calls
+  and the float64 host std recompute disappear from the hot loop.
 * ``Manager``: oracle dispatch (first-available, point-to-point), labeled
   data collection into the training buffer, retrain_size-block release to
   trainers, dynamic oracle-buffer re-prioritization, fault handling
@@ -34,23 +38,37 @@ class PredictionPool:
 
     Default realization calls each ``UserModel(mode='predict').predict`` —
     the paper's per-process structure.  A vmapped single-program committee
-    (core/committee.Committee) drops in via ``predict_all_override``.
+    (core/committee.Committee) drops in via ``predict_all_override``, and a
+    fused single-dispatch engine (core/committee.FusedPredictSelect) via
+    ``fused_engine``: generator proposals are stacked into one padded
+    device batch, the committee forward + UQ run as one compiled program,
+    and only ``(mean, scalar_std, mask)`` transfer back to host.
     Weights refresh from the WeightStore at pull cadence (paper §2.1).
     """
 
     def __init__(self, models: Sequence[Any], store: Optional[WeightStore],
                  monitor: Optional[Monitor] = None,
-                 predict_all_override: Optional[Callable] = None):
+                 predict_all_override: Optional[Callable] = None,
+                 fused_engine: Optional[Any] = None):
         self.models = list(models)
         self.store = store
         self.monitor = monitor or Monitor()
         self._versions = [-1] * len(self.models)
         self._override = predict_all_override
+        self.fused = fused_engine
+
+    @property
+    def supports_fused_uq(self) -> bool:
+        # a predict_all_override takes precedence: the user controls the
+        # committee predictions, so the fused engine must not bypass it
+        return self.fused is not None and self._override is None
 
     def refresh_weights(self):
         if self.store is None:
             return 0
         n = 0
+        if self.fused is not None:
+            n = self.fused.refresh_from(self.store)
         for i, m in enumerate(self.models):
             # prediction member i replicates training member i % ml_process
             # (paper: prediction models are replicas of training models)
@@ -65,11 +83,18 @@ class PredictionPool:
             self.monitor.incr("prediction.weight_refreshes", n)
         return n
 
+    def predict_uq(self, list_data_to_pred: List[np.ndarray]):
+        """Fused single-dispatch path -> host (mean, scalar_std, mask)."""
+        with self.monitor.timer("exchange.predict"):
+            return self.fused(list_data_to_pred)
+
     def predict_all(self, list_data_to_pred: List[np.ndarray]) -> np.ndarray:
         """-> (K, n_gen, out_dim) stacked committee predictions."""
         with self.monitor.timer("exchange.predict"):
             if self._override is not None:
                 return np.asarray(self._override(list_data_to_pred))
+            if self.fused is not None and not self.models:
+                return self.fused.predict_stacked(list_data_to_pred)
             outs = [m.predict(list_data_to_pred) for m in self.models]
         return np.asarray(outs)
 
@@ -102,6 +127,9 @@ class Exchange:
         self.oracle_buffer = oracle_buffer
         self.cfg = cfg
         self.monitor = monitor or Monitor()
+        # a user-supplied check needs the stacked (K, n, d) preds, so it
+        # forces the legacy path; the fused fast path is default-check only
+        self._custom_check = prediction_check is not None
         self.prediction_check = prediction_check or (
             lambda inputs, preds: sel.prediction_check(
                 inputs, preds, cfg.std_threshold))
@@ -125,11 +153,19 @@ class Exchange:
         # 2. committee inference (+ periodic weight refresh)
         if self.iteration % max(1, self.cfg.weight_pull_every) == 0:
             self.prediction.refresh_weights()
-        preds = self.prediction.predict_all(inputs)
+        fast = (not self._custom_check
+                and getattr(self.prediction, "supports_fused_uq", False))
+        if fast:
+            mean, sstd, mask = self.prediction.predict_uq(inputs)
+        else:
+            preds = self.prediction.predict_all(inputs)
 
         # 3. central uncertainty check; queue to oracle; scatter back
         t1 = time.perf_counter()
-        res = self.prediction_check(inputs, preds)
+        if fast:
+            res = sel.prediction_check_fast(inputs, mean, sstd, mask)
+        else:
+            res = self.prediction_check(inputs, preds)
         if res.inputs_to_oracle:
             self.oracle_buffer.put(res.inputs_to_oracle)
             self.monitor.incr("exchange.queued_to_oracle",

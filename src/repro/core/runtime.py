@@ -53,6 +53,7 @@ class PAL:
         prediction_check: Optional[Callable] = None,
         adjust_input_for_oracle: Optional[Callable] = None,
         predict_all_override: Optional[Callable] = None,
+        fused_engine: Optional[Any] = None,   # committee.FusedPredictSelect
         resume: bool = False,
     ):
         self.cfg = run_cfg
@@ -78,7 +79,8 @@ class PAL:
 
         self.prediction_pool = PredictionPool(
             self.predictors, self.store, self.monitor,
-            predict_all_override=predict_all_override)
+            predict_all_override=predict_all_override,
+            fused_engine=fused_engine)
         self.exchange = Exchange(
             self.generators, self.prediction_pool, self.oracle_buffer,
             ExchangeConfig(

@@ -58,6 +58,33 @@ def prediction_check(
                            scalar_std)
 
 
+def prediction_check_fast(
+    list_data_to_pred: Sequence[np.ndarray],
+    mean: np.ndarray,                           # (n_gen, out_dim)
+    scalar_std: np.ndarray,                     # (n_gen,)
+    uncertain_mask: np.ndarray,                 # (n_gen,) bool
+    flag_value: Optional[float] = None,
+) -> SelectionResult:
+    """Fast-path ``prediction_check`` consuming precomputed device UQ.
+
+    The fused exchange engine (committee.FusedPredictSelect) already
+    computed mean / ddof-1 scalar std / threshold mask on device in the same
+    dispatch as the committee forward; this just routes them — no float64
+    recompute, no (K, n_gen, out_dim) host tensor.  Semantics match
+    ``prediction_check`` exactly (same SelectionResult for the same
+    committee outputs).
+    """
+    mean = np.asarray(mean)
+    mask = np.asarray(uncertain_mask, dtype=bool)
+    scalar_std = np.asarray(scalar_std)
+    inputs_to_oracle = [np.asarray(list_data_to_pred[i])
+                        for i in np.where(mask)[0]]
+    if flag_value is not None:
+        mean = mean.copy()
+        mean[mask] = flag_value
+    return SelectionResult(inputs_to_oracle, list(mean), mask, scalar_std)
+
+
 def adjust_input_for_oracle(
     to_orcl_buffer: List[np.ndarray],
     committee_preds: np.ndarray,                # (K, n_buf, out_dim)
@@ -124,16 +151,32 @@ def diversity_filter(inputs: Sequence[np.ndarray], selected: np.ndarray,
                      min_dist: float) -> np.ndarray:
     """Greedy de-duplication: drop selected samples closer than min_dist to
     an already-kept one (paper §3.1: 'avoiding similar and thus redundant
-    TDDFT calculations')."""
-    kept: List[int] = []
-    for i in selected:
-        x = np.asarray(inputs[int(i)]).reshape(-1)
-        ok = True
-        for j in kept:
-            yj = np.asarray(inputs[j]).reshape(-1)
-            if np.linalg.norm(x - yj) < min_dist:
-                ok = False
-                break
-        if ok:
-            kept.append(int(i))
-    return np.asarray(kept, dtype=int)
+    TDDFT calculations').
+
+    The full pairwise-distance matrix is computed in one vectorized NumPy
+    pass (Gram-matrix identity), with pairs that land within cancellation
+    error of the ``min_dist`` boundary recomputed via direct differences;
+    the greedy sweep then reduces each candidate to a single masked row
+    lookup.  Kept-index semantics match the original O(n^2) pure-Python
+    loop: candidates are visited in ``selected`` order and kept iff no
+    already-kept sample lies strictly closer than ``min_dist``.
+    """
+    sel_idx = np.asarray(selected, dtype=int).reshape(-1)
+    if sel_idx.size == 0:
+        return np.empty(0, dtype=int)
+    X = np.stack([np.asarray(inputs[int(i)], dtype=np.float64).reshape(-1)
+                  for i in sel_idx])
+    sq = np.einsum("id,id->i", X, X)
+    d2 = np.maximum(sq[:, None] + sq[None, :] - 2.0 * (X @ X.T), 0.0)
+    md2 = float(min_dist) ** 2
+    close = d2 < md2
+    # Gram identity cancels catastrophically for large-norm inputs; pairs
+    # within its error band of the threshold get the exact distance
+    band = np.abs(d2 - md2) <= 1e-9 * np.maximum(
+        1.0, sq[:, None] + sq[None, :])
+    for i, j in zip(*np.nonzero(band)):
+        close[i, j] = np.linalg.norm(X[i] - X[j]) < min_dist
+    kept_mask = np.zeros(sel_idx.size, dtype=bool)
+    for i in range(sel_idx.size):
+        kept_mask[i] = not close[i, kept_mask].any()
+    return sel_idx[kept_mask]

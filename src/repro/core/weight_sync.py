@@ -21,7 +21,18 @@ from repro.core import committee as cmte
 
 
 class WeightStore:
-    """Thread-safe latest-wins store of packed member weights."""
+    """Thread-safe latest-wins store of packed member weights.
+
+    Publishes write into a pair of preallocated ping-pong buffers per member
+    (allocated once at first publish), so the steady-state publish path does
+    zero heap allocation — no per-round ``np.concatenate`` (paper's
+    ``get_weight``) and no retention of caller arrays.  The packer always
+    writes the buffer that is NOT currently stored, and readers only touch
+    stored buffers under the lock (``pull_packed``/``pull_all`` hand out
+    copies), so no reader can observe a torn write.  One publisher per
+    member (the paper's structure: trainer i owns member i) — concurrent
+    publishes to the *same* member would race the buffer flip.
+    """
 
     def __init__(self, n_members: int):
         self.n_members = n_members
@@ -31,11 +42,27 @@ class WeightStore:
         self._global_version = 0
         self.publishes = 0
         self.last_publish_time: Optional[float] = None
+        self._pack_bufs: Dict[int, Tuple[np.ndarray, np.ndarray]] = {}
+        self._pack_flip: Dict[int, int] = {}
+
+    def _acquire_pack_buffer(self, member: int, size: int) -> np.ndarray:
+        """Next ping-pong buffer for ``member`` — by construction never the
+        currently-stored one, so packing outside the lock is safe."""
+        pair = self._pack_bufs.get(member)
+        if pair is None or pair[0].size != size:
+            pair = (np.empty(size, np.float32), np.empty(size, np.float32))
+            self._pack_bufs[member] = pair
+            self._pack_flip[member] = 0
+        i = self._pack_flip[member]
+        self._pack_flip[member] = 1 - i
+        return pair[i]
 
     # -- training side ------------------------------------------------------
     def publish(self, member: int, params: Any) -> int:
         """Pack and store member weights; returns the new global version."""
-        packed = cmte.get_weight(params)
+        size = cmte.get_weight_size(params)
+        buf = self._acquire_pack_buffer(member, size)
+        packed = cmte.get_weight(params, out=buf)
         with self._lock:
             self._weights[member] = packed
             self._global_version += 1
@@ -45,9 +72,13 @@ class WeightStore:
             return self._global_version
 
     def publish_packed(self, member: int, packed: np.ndarray) -> int:
-        """Store already-packed 1-D weights (paper's get_weight output)."""
+        """Store already-packed 1-D weights (paper's get_weight output).
+        Copied into the store's own buffer so callers may reuse theirs."""
+        packed = np.asarray(packed)
+        buf = self._acquire_pack_buffer(member, packed.size)
+        np.copyto(buf, packed.astype(np.float32, copy=False))
         with self._lock:
-            self._weights[member] = np.asarray(packed)
+            self._weights[member] = buf
             self._global_version += 1
             self._versions[member] = self._global_version
             self.publishes += 1
@@ -57,12 +88,14 @@ class WeightStore:
     # -- prediction side ----------------------------------------------------
     def pull_packed(self, member: int, newer_than: int = -1
                     ) -> Optional[Tuple[np.ndarray, int]]:
-        """Raw packed weights if a newer version exists, else None."""
+        """Packed weights (a copy, safe to hold) if a newer version exists,
+        else None.  The copy is made under the lock; version gating keeps
+        this off the steady-state exchange path."""
         with self._lock:
             v = self._versions[member]
             if v <= newer_than or member not in self._weights:
                 return None
-            return self._weights[member], v
+            return self._weights[member].copy(), v
 
     def version(self, member: Optional[int] = None) -> int:
         with self._lock:
@@ -78,7 +111,7 @@ class WeightStore:
             v = self._versions[member]
             if v <= newer_than or member not in self._weights:
                 return None
-            packed = self._weights[member]
+            packed = self._weights[member].copy()
         return cmte.update(params_like, packed), v
 
     def pull_all(self, cparams_like: Any, newer_than: int = -1):
@@ -90,7 +123,7 @@ class WeightStore:
             v = self._global_version
             if v <= newer_than or len(self._weights) < self.n_members:
                 return None, v
-            packed = dict(self._weights)
+            packed = {i: w.copy() for i, w in self._weights.items()}
         members = [
             cmte.update(cmte.member(cparams_like, i), packed[i])
             for i in range(self.n_members)

@@ -1,0 +1,102 @@
+"""Pallas TPU kernel for fused committee uncertainty quantification.
+
+One streaming pass over the committee axis computes everything the exchange
+loop's central ``prediction_check`` needs:
+
+  * committee mean                       (n, d)  fp32
+  * scalar disagreement per sample       (n,)    fp32  — max over output
+    components of the ddof=1 std (the quantity the paper thresholds)
+  * uncertainty mask ``scalar_std > threshold``  (n,)  uint8
+
+The K axis is the sequential innermost grid dimension; per-row Welford
+state (running mean in the output ref, running M2 in VMEM scratch) is
+carried across committee members, so the (K, n, d) prediction tensor is
+never materialized anywhere outside the committee forward itself — the
+controller transfers only the three small outputs to host.
+
+Grid: (n_blocks, K).  Rows are blocked; the trailing output dim d is the
+lane dimension.  Validated against ``ref.committee_uq_ref`` with
+``interpret=True`` in tests/test_committee_uq.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(preds_ref, mean_ref, sstd_ref, mask_ref, m2_ref,
+            *, n_members: int, threshold: float):
+    k = pl.program_id(1)
+    x = preds_ref[0].astype(jnp.float32)               # (bn, d)
+
+    @pl.when(k == 0)
+    def _init():
+        mean_ref[...] = x
+        m2_ref[...] = jnp.zeros_like(x)
+
+    @pl.when(k > 0)
+    def _welford():
+        mean = mean_ref[...]
+        count = (k + 1).astype(jnp.float32)
+        delta = x - mean
+        mean = mean + delta / count
+        m2_ref[...] += delta * (x - mean)
+        mean_ref[...] = mean
+
+    @pl.when(k == n_members - 1)
+    def _finalize():
+        if n_members > 1:
+            var = m2_ref[...] / jnp.float32(n_members - 1)   # ddof=1
+        else:
+            var = jnp.zeros_like(m2_ref[...])
+        std = jnp.sqrt(var)                            # (bn, d)
+        sstd = jnp.max(std, axis=-1)                   # (bn,)
+        sstd_ref[...] = sstd
+        mask_ref[...] = (sstd > threshold).astype(jnp.uint8)
+
+
+def committee_uq(
+    preds: jnp.ndarray,      # (K, n, d) committee predictions
+    threshold: float,
+    *,
+    block_n: int = 128,
+    interpret: bool = False,
+):
+    """Fused mean / ddof-1 scalar std / threshold mask over the K axis.
+
+    Returns ``(mean (n, d) fp32, scalar_std (n,) fp32, mask (n,) bool)``.
+    """
+    K, n, d = preds.shape
+    bn = min(block_n, n)
+    pad = (-n) % bn
+    if pad:
+        preds = jnp.pad(preds, ((0, 0), (0, pad), (0, 0)))
+    npad = n + pad
+    nb = npad // bn
+
+    kernel = functools.partial(_kernel, n_members=K,
+                               threshold=float(threshold))
+    pspec = pl.BlockSpec((1, bn, d), lambda i, k: (k, i, 0))
+    mean_spec = pl.BlockSpec((bn, d), lambda i, k: (i, 0))
+    row_spec = pl.BlockSpec((bn,), lambda i, k: (i,))
+
+    mean, sstd, mask = pl.pallas_call(
+        kernel,
+        grid=(nb, K),
+        in_specs=[pspec],
+        out_specs=[mean_spec, row_spec, row_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((npad, d), jnp.float32),
+            jax.ShapeDtypeStruct((npad,), jnp.float32),
+            jax.ShapeDtypeStruct((npad,), jnp.uint8),
+        ],
+        scratch_shapes=[pltpu.VMEM((bn, d), jnp.float32)],
+        interpret=interpret,
+    )(preds)
+    if pad:
+        mean, sstd, mask = mean[:n], sstd[:n], mask[:n]
+    return mean, sstd, mask.astype(jnp.bool_)

@@ -61,6 +61,25 @@ def attention(
     )
 
 
+def committee_uq(preds, threshold: float, *, impl: str = _DEFAULT_IMPL,
+                 block_n: int = 128):
+    """Fused committee-UQ for the PAL exchange loop.
+
+    preds: (K, n, d) stacked committee predictions (one vmapped forward).
+    Returns (mean (n, d) fp32, scalar_std (n,) fp32, mask (n,) bool) — the
+    ONLY tensors the controller ships back to host, replacing the seed
+    path's full (K, n, d) round trip + float64 NumPy std recompute.
+    """
+    if impl in ("pallas", "pallas_interpret"):
+        from repro.kernels import committee_uq as _cuq
+
+        return _cuq.committee_uq(
+            preds, threshold, block_n=block_n,
+            interpret=(impl == "pallas_interpret"),
+        )
+    return ref.committee_uq_ref(preds, threshold)
+
+
 def wkv6(r, k, v, w, u, state=None, *, impl: str = _DEFAULT_IMPL, chunk: int = 64):
     """RWKV6 WKV. r/k/v/w: (B,T,H,N); u: (H,N). Returns (y, state)."""
     if impl in ("pallas", "pallas_interpret"):

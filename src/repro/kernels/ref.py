@@ -15,6 +15,30 @@ import jax
 import jax.numpy as jnp
 
 # ---------------------------------------------------------------------------
+# Committee uncertainty quantification (PAL exchange hot path)
+# ---------------------------------------------------------------------------
+
+
+def committee_uq_ref(preds: jnp.ndarray, threshold: float):
+    """Committee mean / ddof-1 scalar std / threshold mask in one program.
+
+    preds: (K, n, d).  Returns (mean (n, d) fp32, scalar_std (n,) fp32,
+    mask (n,) bool).  scalar_std is the max over output components of the
+    per-component ddof=1 std — the quantity the paper's prediction_check
+    thresholds ((std > t).any over components == scalar_std > t).
+    """
+    p = preds.astype(jnp.float32)
+    K = p.shape[0]
+    mean = jnp.mean(p, axis=0)
+    if K > 1:
+        std = jnp.std(p, axis=0, ddof=1)
+    else:
+        std = jnp.zeros_like(mean)
+    scalar_std = jnp.max(std, axis=-1)
+    return mean, scalar_std, scalar_std > jnp.float32(threshold)
+
+
+# ---------------------------------------------------------------------------
 # Attention
 # ---------------------------------------------------------------------------
 

@@ -7,6 +7,13 @@ the `data` axis where divisible — sharding/rules handles the mapping).
 int8 moments: per-block (128) absmax quantization of mu/nu, fp32 scales —
 6 bytes/param optimizer+master state instead of 12, the difference between
 fitting and not fitting jamba-398B / qwen3-235B on v5e HBM (EXPERIMENTS §Perf).
+The second moment is stored as ``sqrt(nu)``: the update only ever consumes
+``sqrt(vhat)``, and quantizing in sqrt space keeps the denominator's int8
+error linear instead of blowing up the step size of small-|g| coordinates
+that share an absmax block with a large one.  NOTE: this changes the
+quantized optimizer-state format — checkpoints of quantized AdamW state
+written before this change are not resumable (their nu would be
+reinterpreted as sqrt(nu)).
 """
 from __future__ import annotations
 
@@ -158,7 +165,10 @@ def adamw_update(
     def upd(g, m, v, p):
         g = g.astype(jnp.float32)
         mf = dequantize(m) if cfg.quantized else m
-        vf = dequantize(v) if cfg.quantized else v
+        # nu is stored as sqrt(nu): the Adam denominator is sqrt(vhat), so
+        # int8 error enters it linearly instead of being amplified for
+        # small-magnitude entries sharing a block with a large absmax.
+        vf = dequantize(v) ** 2 if cfg.quantized else v
         mf = b1 * mf + (1 - b1) * g
         vf = b2 * vf + (1 - b2) * g * g
         mhat = mf / c1
@@ -167,7 +177,7 @@ def adamw_update(
         new_p = pf - lr * (mhat / (jnp.sqrt(vhat) + cfg.eps)
                            + cfg.weight_decay * pf)
         if cfg.quantized:
-            mf, vf = quantize(mf), quantize(vf)
+            mf, vf = quantize(mf), quantize(jnp.sqrt(vf))
         return new_p.astype(p.dtype), mf, vf
 
     del is_q

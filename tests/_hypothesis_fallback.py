@@ -1,0 +1,81 @@
+"""Deterministic stand-in for ``hypothesis`` when the library is absent.
+
+The tier-1 suite must collect and run without optional dependencies, so
+``test_core.py`` / ``test_optim_data_ckpt.py`` fall back to this module:
+``given`` replays each property test over a fixed number of seeded random
+examples drawn from minimal strategy objects.  It implements exactly the
+strategy surface those tests use (integers / floats / lists / tuples /
+fixed_dictionaries) — no shrinking, no database, just coverage.
+"""
+from __future__ import annotations
+
+import random
+
+_MAX_EXAMPLES = 25          # cap even when tests ask for more (speed)
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng: random.Random):
+        return self._draw(rng)
+
+
+class _Strategies:
+    @staticmethod
+    def integers(min_value=-(10 ** 9), max_value=10 ** 9):
+        return _Strategy(lambda rng: rng.randint(int(min_value), int(max_value)))
+
+    @staticmethod
+    def floats(min_value=0.0, max_value=1.0, **_kw):
+        return _Strategy(lambda rng: rng.uniform(float(min_value),
+                                                 float(max_value)))
+
+    @staticmethod
+    def lists(elements, min_size=0, max_size=10):
+        def draw(rng):
+            n = rng.randint(min_size, max_size)
+            return [elements.example(rng) for _ in range(n)]
+        return _Strategy(draw)
+
+    @staticmethod
+    def tuples(*strategies):
+        return _Strategy(
+            lambda rng: tuple(s.example(rng) for s in strategies))
+
+    @staticmethod
+    def fixed_dictionaries(mapping):
+        return _Strategy(
+            lambda rng: {k: v.example(rng) for k, v in mapping.items()})
+
+
+st = _Strategies()
+
+
+def settings(max_examples=None, deadline=None, **_kw):
+    """Records max_examples on the function; order-independent with given."""
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strategies, **kw_strategies):
+    """Run the test over seeded examples.  The wrapper takes no arguments so
+    pytest does not mistake the injected parameters for fixtures."""
+    def deco(fn):
+        def wrapper():
+            limit = (getattr(wrapper, "_fallback_max_examples", None)
+                     or getattr(fn, "_fallback_max_examples", None)
+                     or _MAX_EXAMPLES)
+            rng = random.Random(0)
+            for _ in range(min(int(limit), _MAX_EXAMPLES)):
+                args = [s.example(rng) for s in strategies]
+                kwargs = {k: s.example(rng) for k, s in kw_strategies.items()}
+                fn(*args, **kwargs)
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        return wrapper
+    return deco

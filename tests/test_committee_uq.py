@@ -1,0 +1,316 @@
+"""Fused committee-UQ engine tests: kernel parity (xla vs pallas_interpret
+vs NumPy ddof=1), K=1 edge case, the shape-bucketed jit cache (compiles at
+most once per bucket), fast-path prediction_check equivalence, vectorized
+diversity_filter semantics, and preallocated weight-pack buffers."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import committee as cmte
+from repro.core import selection as sel
+from repro.core.buffers import OracleInputBuffer
+from repro.core.controller import Exchange, ExchangeConfig, PredictionPool
+from repro.core.weight_sync import WeightStore
+from repro.kernels import ops, ref
+
+
+# ---------------------------------------------------------------------------
+# kernel parity
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("K,n,d", [
+    (8, 64, 4),       # acceptance shape
+    (4, 33, 8),       # n not a multiple of the row block -> padding path
+    (3, 10, 5),       # odd everything
+    (2, 1, 1),        # minimal
+    (16, 128, 16),    # larger
+])
+def test_committee_uq_xla_vs_pallas_interpret(K, n, d):
+    rng = np.random.RandomState(0)
+    preds = jnp.asarray(rng.randn(K, n, d).astype(np.float32))
+    t = 0.8
+    mx, sx, kx = ops.committee_uq(preds, t, impl="xla")
+    mp, sp, kp = ops.committee_uq(preds, t, impl="pallas_interpret")
+    np.testing.assert_allclose(np.asarray(mp), np.asarray(mx),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(sp), np.asarray(sx),
+                               rtol=1e-4, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(kp), np.asarray(kx))
+    assert mx.shape == (n, d) and sx.shape == (n,) and kx.shape == (n,)
+
+
+@pytest.mark.parametrize("impl", ["xla", "pallas_interpret"])
+def test_committee_uq_matches_numpy_ddof1(impl):
+    rng = np.random.RandomState(1)
+    K, n, d = 6, 24, 3
+    preds = rng.randn(K, n, d).astype(np.float32)
+    t = 0.7
+    mean, sstd, mask = ops.committee_uq(jnp.asarray(preds), t, impl=impl)
+    want_std = preds.astype(np.float64).std(axis=0, ddof=1).max(axis=-1)
+    np.testing.assert_allclose(np.asarray(mean), preds.mean(axis=0),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(sstd), want_std,
+                               rtol=1e-4, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(mask), want_std > t)
+
+
+@pytest.mark.parametrize("impl", ["xla", "pallas_interpret"])
+def test_committee_uq_k1_zero_std(impl):
+    """A single-member committee has zero disagreement by definition."""
+    preds = jnp.asarray(np.random.RandomState(2).randn(1, 16, 4)
+                        .astype(np.float32))
+    mean, sstd, mask = ops.committee_uq(preds, 1e-9, impl=impl)
+    np.testing.assert_allclose(np.asarray(mean), np.asarray(preds[0]),
+                               rtol=1e-6)
+    assert (np.asarray(sstd) == 0).all()
+    assert not np.asarray(mask).any()
+
+
+def test_committee_uq_mask_equals_anycomponent_semantics():
+    """mask == (per-component std > t).any(components) — the paper's check."""
+    rng = np.random.RandomState(3)
+    preds = rng.randn(5, 20, 6).astype(np.float32)
+    t = 0.9
+    _, _, mask = ops.committee_uq(jnp.asarray(preds), t, impl="xla")
+    want = (preds.std(axis=0, ddof=1) > t).any(axis=-1)
+    np.testing.assert_array_equal(np.asarray(mask), want)
+
+
+# ---------------------------------------------------------------------------
+# fused engine: bucketed jit cache + end-to-end equivalence
+# ---------------------------------------------------------------------------
+
+def _mlp():
+    rng = np.random.RandomState(0)
+    members = [{"w": jnp.asarray(rng.randn(6, 3).astype(np.float32) * 0.5)}
+               for _ in range(4)]
+    return members, cmte.stack_members(members), (lambda p, x: x @ p["w"])
+
+
+def test_bucketed_jit_cache_compiles_once_per_bucket():
+    _, cparams, apply_fn = _mlp()
+    eng = cmte.FusedPredictSelect(apply_fn, cparams, 0.3, impl="xla")
+    rng = np.random.RandomState(0)
+    gen = lambda n: [rng.randn(6).astype(np.float32) for _ in range(n)]
+    for n in (5, 8, 3, 7, 8, 1):          # all land in the n=8 bucket
+        mean, sstd, mask = eng(gen(n))
+        assert mean.shape == (n, 3) and sstd.shape == (n,)
+    assert eng.trace_counts == {8: 1}
+    eng(gen(20))                           # new bucket: 32
+    eng(gen(32))
+    eng(gen(9))                            # new bucket: 16
+    assert eng.trace_counts == {8: 1, 32: 1, 16: 1}
+    assert all(c == 1 for c in eng.trace_counts.values())
+
+
+def test_shape_bucket_power_of_two():
+    assert cmte.shape_bucket(1) == 8
+    assert cmte.shape_bucket(8) == 8
+    assert cmte.shape_bucket(9) == 16
+    assert cmte.shape_bucket(100) == 128
+    assert cmte.shape_bucket(3, minimum=2) == 4
+
+
+def test_fused_engine_matches_reference_uq():
+    members, cparams, apply_fn = _mlp()
+    eng = cmte.FusedPredictSelect(apply_fn, cparams, 0.3, impl="xla")
+    rng = np.random.RandomState(4)
+    inputs = [rng.randn(6).astype(np.float32) for _ in range(7)]
+    mean, sstd, mask = eng(inputs)
+    x = np.stack(inputs)
+    preds = np.stack([np.asarray(x @ np.asarray(m["w"])) for m in members])
+    np.testing.assert_allclose(mean, preds.mean(axis=0), rtol=1e-4,
+                               atol=1e-5)
+    np.testing.assert_allclose(
+        sstd, preds.std(axis=0, ddof=1).max(axis=-1), rtol=1e-4, atol=1e-5)
+    np.testing.assert_array_equal(
+        mask, preds.std(axis=0, ddof=1).max(axis=-1) > 0.3)
+    # predict_stacked: per-member outputs in one dispatch
+    np.testing.assert_allclose(eng.predict_stacked(inputs), preds,
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_fast_path_prediction_check_equivalence():
+    """prediction_check_fast(precomputed UQ) == prediction_check(preds)."""
+    rng = np.random.RandomState(5)
+    inputs = [rng.randn(4) for _ in range(12)]
+    preds = rng.randn(5, 12, 3)
+    t = 0.8
+    legacy = sel.prediction_check(inputs, preds, t)
+    mean, sstd, mask = ops.committee_uq(
+        jnp.asarray(preds, dtype=jnp.float32), t, impl="xla")
+    fast = sel.prediction_check_fast(inputs, np.asarray(mean),
+                                     np.asarray(sstd), np.asarray(mask))
+    np.testing.assert_array_equal(fast.uncertain_mask, legacy.uncertain_mask)
+    np.testing.assert_allclose(fast.std, legacy.std, rtol=1e-4, atol=1e-5)
+    assert len(fast.inputs_to_oracle) == len(legacy.inputs_to_oracle)
+    for a, b in zip(fast.inputs_to_oracle, legacy.inputs_to_oracle):
+        np.testing.assert_array_equal(a, b)
+    for a, b in zip(fast.data_to_generators, legacy.data_to_generators):
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+
+
+def test_exchange_fused_path_matches_legacy():
+    """Full Exchange loop: fused single-dispatch == sequential members."""
+    members, cparams, apply_fn = _mlp()
+    eng = cmte.FusedPredictSelect(apply_fn, cparams, 0.3, impl="xla")
+
+    class Gene:
+        def __init__(self, rank):
+            self.rng = np.random.RandomState(rank)
+            self.received = []
+
+        def generate_new_data(self, data_to_gene):
+            self.received.append(data_to_gene)
+            return False, self.rng.randn(6).astype(np.float32)
+
+        def save_progress(self):
+            pass
+
+    class Member:
+        def __init__(self, p):
+            self.w = np.asarray(p["w"])
+
+        def predict(self, xs):
+            return [np.asarray(x, np.float32) @ self.w for x in xs]
+
+    cfg = ExchangeConfig(std_threshold=0.3, patience=2)
+    ga, gb = [Gene(i) for i in range(5)], [Gene(i) for i in range(5)]
+    oa, ob = OracleInputBuffer(), OracleInputBuffer()
+    ex_legacy = Exchange(ga, PredictionPool([Member(m) for m in members],
+                                            None), oa, cfg)
+    ex_fused = Exchange(gb, PredictionPool([], None, fused_engine=eng),
+                        ob, cfg)
+    for _ in range(8):
+        ex_legacy.step()
+        ex_fused.step()
+    assert len(oa) == len(ob)
+    for a, b in zip(ga, gb):
+        for da, db in zip(a.received, b.received):
+            assert (da is None) == (db is None)
+            if da is not None:
+                np.testing.assert_allclose(da, db, rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# satellite: vectorized diversity_filter semantics
+# ---------------------------------------------------------------------------
+
+
+def _diversity_filter_reference(inputs, selected, min_dist):
+    kept = []
+    for i in selected:
+        x = np.asarray(inputs[int(i)]).reshape(-1)
+        if all(np.linalg.norm(x - np.asarray(inputs[j]).reshape(-1))
+               >= min_dist for j in kept):
+            kept.append(int(i))
+    return np.asarray(kept, dtype=int)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_diversity_filter_matches_naive_loop(seed):
+    rng = np.random.RandomState(seed)
+    inputs = [rng.randn(3) * 0.5 for _ in range(40)]
+    selected = rng.permutation(40)[:25]
+    for min_dist in (0.05, 0.5, 2.0):
+        got = sel.diversity_filter(inputs, selected, min_dist)
+        want = _diversity_filter_reference(inputs, selected, min_dist)
+        np.testing.assert_array_equal(got, want)
+
+
+def test_diversity_filter_empty_selection():
+    assert sel.diversity_filter([np.zeros(2)], np.array([], dtype=int),
+                                0.1).size == 0
+
+
+# ---------------------------------------------------------------------------
+# satellite: preallocated weight-pack buffers
+# ---------------------------------------------------------------------------
+
+
+def test_get_weight_into_preallocated_buffer():
+    tree = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "b": jnp.ones((4,), jnp.float32)}
+    want = cmte.get_weight(tree)
+    buf = np.zeros(cmte.get_weight_size(tree), np.float32)
+    out = cmte.get_weight(tree, out=buf)
+    assert out is buf
+    np.testing.assert_array_equal(out, want)
+    with pytest.raises(ValueError):
+        cmte.get_weight(tree, out=np.zeros(3, np.float32))
+
+
+def test_weight_store_publish_reuses_buffers():
+    tree = {"w": jnp.ones((3, 3), jnp.float32)}
+    store = WeightStore(1)
+    store.publish(0, tree)
+    first, v1 = store.pull_packed(0)
+    buf_a = store._weights[0]
+    store.publish(0, jax.tree.map(lambda x: x * 2, tree))
+    second, v2 = store.pull_packed(0)
+    buf_b = store._weights[0]
+    assert v2 > v1
+    assert buf_b is not buf_a                  # ping-pong pair
+    np.testing.assert_array_equal(second, first * 2)
+    store.publish(0, jax.tree.map(lambda x: x * 3, tree))
+    assert store._weights[0] is buf_a          # buffer cycled, no fresh alloc
+    third, _ = store.pull_packed(0)
+    np.testing.assert_array_equal(third, np.full(9, 3.0, np.float32))
+    # pulls hand out copies, never the live pack buffer
+    assert third is not store._weights[0]
+    third[:] = -1.0
+    again, _ = store.pull_packed(0)
+    np.testing.assert_array_equal(again, np.full(9, 3.0, np.float32))
+
+
+def test_weight_store_publish_packed_copies_caller_array():
+    store = WeightStore(1)
+    arr = np.arange(4, dtype=np.float32)
+    store.publish_packed(0, arr)
+    arr[:] = -1                                # caller reuses its buffer
+    got, _ = store.pull_packed(0)
+    np.testing.assert_array_equal(got, np.arange(4, dtype=np.float32))
+
+
+def test_fused_engine_refresh_replicates_members():
+    """K=4 prediction committee fed by 2 trainers: member i replicates
+    trainer i % 2, committee shape (and jit cache) preserved."""
+    _, cparams, apply_fn = _mlp()                     # K = 4, w: (6, 3)
+    eng = cmte.FusedPredictSelect(apply_fn, cparams, 0.3, impl="xla")
+    store = WeightStore(2)
+    w0 = np.full((6, 3), 2.0, np.float32)
+    w1 = np.full((6, 3), 5.0, np.float32)
+    store.publish(0, {"w": jnp.asarray(w0)})
+    assert eng.refresh_from(store) == 0               # member 1 not published
+    store.publish(1, {"w": jnp.asarray(w1)})
+    assert eng.refresh_from(store) == 1
+    assert eng.size == 4                              # K preserved
+    got = np.asarray(jax.tree.leaves(eng.cparams)[0])
+    np.testing.assert_array_equal(got[0], w0)
+    np.testing.assert_array_equal(got[1], w1)
+    np.testing.assert_array_equal(got[2], w0)         # 2 % 2 == 0
+    np.testing.assert_array_equal(got[3], w1)
+    assert eng.refresh_from(store) == 0               # nothing newer
+
+
+def test_fused_pool_with_override_falls_back_to_legacy():
+    """predict_all_override takes precedence over an installed fused
+    engine — the fast path must not bypass user-controlled predictions."""
+    _, cparams, apply_fn = _mlp()
+    eng = cmte.FusedPredictSelect(apply_fn, cparams, 0.3, impl="xla")
+    pool = PredictionPool([], None, fused_engine=eng,
+                          predict_all_override=lambda xs: np.zeros(
+                              (4, len(xs), 3)))
+    assert not pool.supports_fused_uq
+    assert pool.predict_all([np.zeros(6, np.float32)]).shape == (4, 1, 3)
+
+
+def test_weight_store_roundtrip_through_update():
+    tree = {"a": jnp.asarray(np.random.RandomState(0)
+                             .randn(2, 5).astype(np.float32))}
+    store = WeightStore(1)
+    store.publish(0, tree)
+    out, _ = store.pull(0, tree)
+    np.testing.assert_array_equal(np.asarray(out["a"]), np.asarray(tree["a"]))

@@ -8,7 +8,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dep — deterministic fallback keeps tier-1 green
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core import committee as cmte
 from repro.core import selection as sel

@@ -9,7 +9,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dep — deterministic fallback keeps tier-1 green
+    from _hypothesis_fallback import given, settings, st
 
 from repro.checkpoint import AsyncCheckpointer, load_checkpoint, save_checkpoint
 from repro.checkpoint.pytree_ckpt import latest_step, list_steps
