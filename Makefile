@@ -11,8 +11,12 @@ check: test bench-smoke
 test:
 	$(PY) -m pytest -x -q
 
+# hot-path + example-rot smoke: quick fused-engine benchmark (writes
+# BENCH_committee_uq.json, uploaded as a CI artifact) and a short-budget
+# quickstart run through the full PAL loop
 bench-smoke:
-	$(PY) benchmarks/committee_uq.py --smoke
+	$(PY) benchmarks/committee_uq.py --quick
+	$(PY) examples/quickstart.py --timeout 20
 
 bench:
 	$(PY) -m benchmarks.run

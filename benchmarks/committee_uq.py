@@ -1,15 +1,19 @@
-"""Benchmark: fused single-dispatch exchange hot path vs sequential members.
+"""Benchmark: fused single-dispatch acquisition engine vs sequential members.
 
 The seed exchange iteration dispatches K sequential ``model.predict`` calls,
 round-trips the full (K, n_gen, out_dim) prediction tensor to host, and
 recomputes committee std in float64 NumPy (core/selection.prediction_check).
-The fused engine (core/committee.FusedPredictSelect + kernels/ops
-``committee_uq``) runs the vmapped committee forward and the UQ statistics
-as ONE compiled device program and ships only (mean, scalar_std, mask) back.
+The unified acquisition engine (core/acquisition.FusedEngine + kernels/ops
+``committee_uq``) runs the vmapped committee forward, the UQ statistics
+(mean / max-component std / mean-component std), AND the selection-rule
+pipeline as ONE compiled device program and ships only
+(mean, scalar_std, component_std, mask) back.
 
-Two metrics per configuration, written to ``BENCH_committee_uq.json``:
+Metrics per configuration, written to ``BENCH_committee_uq.json``:
 
-* wall-clock per exchange iteration (median), sequential vs fused
+* wall-clock per exchange iteration (median), sequential vs fused — plus a
+  fused run with a CUSTOM rule pipeline (threshold + top-fraction), which
+  must stay on the single-dispatch path (no (K, n_gen, out_dim) transfer)
 * host bytes per iteration — bytes crossing the host<->device boundary
   plus bytes the UQ step materializes in host memory (the float64
   (K, n_gen, out_dim) copy + std/mean intermediates of the seed check;
@@ -19,7 +23,7 @@ Also sweeps ``n_gen`` across iterations to demonstrate the power-of-two
 shape-bucketed jit cache: compile counts per bucket are recorded and must
 be 1.
 
-Usage:  PYTHONPATH=src python benchmarks/committee_uq.py [--smoke] [--out F]
+Usage:  PYTHONPATH=src python benchmarks/committee_uq.py [--quick] [--out F]
 """
 from __future__ import annotations
 
@@ -32,6 +36,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import acquisition as acq
 from repro.core import committee as cmte
 from repro.core import selection as sel
 
@@ -93,14 +98,14 @@ def bench_sequential(members, batches):
 
 
 def bench_fused(engine, batches):
-    """Fused path: one dispatch, (mean, scalar_std, mask) back."""
+    """Engine path: one dispatch, (mean, sstd, cstd, mask) back."""
     times = []
     engine.bytes_to_device = engine.bytes_to_host = 0
     n_iter = 0
     for inputs in batches:
         t0 = time.perf_counter()
-        mean, sstd, mask = engine(inputs)
-        res = sel.prediction_check_fast(inputs, mean, sstd, mask)
+        uq = engine.score(inputs)
+        res = sel.selection_from_uq(inputs, uq)
         times.append(time.perf_counter() - t0)
         n_iter += 1
     return times, engine.bytes_to_device / n_iter, \
@@ -109,7 +114,8 @@ def bench_fused(engine, batches):
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--smoke", action="store_true", help="few iterations")
+    ap.add_argument("--smoke", "--quick", dest="smoke", action="store_true",
+                    help="few iterations (CI smoke)")
     ap.add_argument("--iters", type=int, default=None)
     ap.add_argument("--out", default="BENCH_committee_uq.json")
     args = ap.parse_args(argv)
@@ -119,14 +125,21 @@ def main(argv=None):
     rng = np.random.RandomState(0)
     members = _make_members(rng)
     cparams = cmte.stack_members(members)
-    engine = cmte.FusedPredictSelect(_mlp_apply, cparams, THRESHOLD,
-                                     impl="xla")
+    engine = acq.FusedEngine(_mlp_apply, cparams, THRESHOLD, impl="xla")
 
     batches = [_inputs(rng, N_GEN) for _ in range(warmup + iters)]
     seq_t, sq_up, sq_down, sq_host, res_a = bench_sequential(members, batches)
     fus_t, fu_up, fu_down, res_b = bench_fused(engine, batches)
     seq_ms = statistics.median(seq_t[warmup:]) * 1e3
     fus_ms = statistics.median(fus_t[warmup:]) * 1e3
+
+    # custom selection rules stay on the single-dispatch path: same engine
+    # machinery, threshold + top-fraction compiled into the jit
+    engine_rules = acq.FusedEngine(
+        _mlp_apply, cparams, THRESHOLD, impl="xla",
+        rules=(acq.ThresholdRule(THRESHOLD), acq.TopFractionRule(0.25)))
+    rul_t, ru_up, ru_down, _ = bench_fused(engine_rules, batches)
+    rul_ms = statistics.median(rul_t[warmup:]) * 1e3
 
     # selection agreement sanity (same inputs, same committee); a sample
     # whose fp32 device std lands within rounding of the threshold may
@@ -138,10 +151,9 @@ def main(argv=None):
         "fused and sequential paths disagree on selection off-threshold"
 
     # bucketed jit cache: varying n_gen must compile once per bucket
-    engine2 = cmte.FusedPredictSelect(_mlp_apply, cparams, THRESHOLD,
-                                      impl="xla")
+    engine2 = acq.FusedEngine(_mlp_apply, cparams, THRESHOLD, impl="xla")
     for n in (64, 48, 33, 64, 100, 9, 128, 65):
-        engine2(_inputs(rng, n))
+        engine2.score(_inputs(rng, n))
     buckets_ok = all(c == 1 for c in engine2.trace_counts.values())
 
     seq_bytes = sq_up + sq_down + sq_host
@@ -161,7 +173,13 @@ def main(argv=None):
                   "bytes_device_to_host": fu_down,
                   "bytes_host_uq_materialized": 0,
                   "bytes_total": fus_bytes},
+        "fused_custom_rules": {"ms_per_iteration": rul_ms,
+                               "bytes_host_to_device": ru_up,
+                               "bytes_device_to_host": ru_down,
+                               "bytes_host_uq_materialized": 0,
+                               "bytes_total": ru_up + ru_down},
         "speedup_wallclock": seq_ms / fus_ms,
+        "speedup_wallclock_custom_rules": seq_ms / rul_ms,
         "bytes_reduction_factor": seq_bytes / fus_bytes,
         "bytes_reduction_transfers_only":
             (sq_up + sq_down) / fus_bytes,
@@ -172,11 +190,15 @@ def main(argv=None):
     with open(args.out, "w") as f:
         json.dump(report, f, indent=2)
 
-    print(f"sequential: {seq_ms:.3f} ms/iter  "
+    print(f"sequential:   {seq_ms:.3f} ms/iter  "
           f"({seq_bytes / 1024:.1f} KiB host bytes)")
-    print(f"fused:      {fus_ms:.3f} ms/iter  "
+    print(f"fused:        {fus_ms:.3f} ms/iter  "
           f"({fus_bytes / 1024:.1f} KiB host bytes)")
+    print(f"fused+rules:  {rul_ms:.3f} ms/iter  "
+          f"({(ru_up + ru_down) / 1024:.1f} KiB host bytes, "
+          f"threshold+top-fraction on-device)")
     print(f"speedup {report['speedup_wallclock']:.2f}x   "
+          f"(custom rules: {report['speedup_wallclock_custom_rules']:.2f}x)  "
           f"host-bytes reduction {report['bytes_reduction_factor']:.1f}x "
           f"(transfers only: "
           f"{report['bytes_reduction_transfers_only']:.1f}x)")

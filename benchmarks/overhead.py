@@ -18,14 +18,14 @@ import tempfile
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.pal_potential import PALRunConfig, PotentialConfig
+from repro.core import acquisition as acq
 from repro.core.buffers import OracleInputBuffer
 from repro.core.controller import (Exchange, ExchangeConfig, PredictionPool)
 from repro.core.monitor import Monitor
-from repro.core import UserGene, UserModel
+from repro.core import UserGene
 from repro.models import potential as pot
 
 N_GEN = 89          # paper: 89 parallel trajectories
@@ -48,56 +48,32 @@ class MDGene(UserGene):
         return False, self.x
 
 
-class CommitteePredictor(UserModel):
-    """One vmapped committee = the whole prediction kernel (DESIGN.md §2)."""
+def make_engine(cfg: PotentialConfig, threshold: float) -> acq.FusedEngine:
+    """The unified acquisition engine over the MLP-potential committee."""
 
-    def __init__(self, rank, rd, dev, mode, cfg: PotentialConfig):
-        super().__init__(rank, rd, dev, mode)
-        self.cfg = cfg
-        self.cparams = pot.init_committee(cfg, jax.random.PRNGKey(rank))
+    def member_forces(p, flat_coords):            # (n, 3A) -> (n, 3A)
+        def one(flat):
+            _, f = pot.energy_forces(p, flat.reshape(cfg.n_atoms, 3), cfg)
+            return f.reshape(-1)
+        return jax.vmap(one)(flat_coords)
 
-        def forces_flat(cp, flat_coords):
-            coords = flat_coords.reshape(-1, cfg.n_atoms, 3)
-            _, f = pot.batched_committee_energy_forces(cp, coords, cfg)
-            return f.reshape(coords.shape[0], cfg.committee_size, -1)
-
-        self._fn = jax.jit(forces_flat)
-
-    def predict(self, list_data):
-        x = jnp.asarray(np.stack(list_data))
-        out = np.asarray(self._fn(self.cparams, x))   # (n_gen, K, 3A)
-        return out
-
-    def update(self, arr):
-        pass
-
-    def get_weight(self):
-        return np.zeros(1, np.float32)
-
-    def get_weight_size(self):
-        return 1
-
-
-def committee_check(inputs, preds):
-    """predict_all returns (1, n_gen, K, out) -> committee std over K."""
-    from repro.core import selection as sel
-    p = np.asarray(preds)[0]                      # (n_gen, K, out)
-    p = np.moveaxis(p, 1, 0)                      # (K, n_gen, out)
-    return sel.prediction_check(inputs, p, threshold=1e9)
+    cparams = pot.init_committee(cfg, jax.random.PRNGKey(0))
+    return acq.FusedEngine(member_forces, cparams, threshold, impl="xla",
+                           min_bucket=N_GEN)
 
 
 def run(with_oracle_queue: bool) -> dict:
     cfg = PotentialConfig(n_atoms=8, committee_size=COMMITTEE)
     monitor = Monitor()
     gens = [MDGene(i, "/tmp") for i in range(N_GEN)]
-    predictor = CommitteePredictor(0, "/tmp", 0, "predict", cfg)
-    pool = PredictionPool([predictor], store=None, monitor=monitor)
+    threshold = 0.0 if with_oracle_queue else 1e9
+    pool = PredictionPool([], store=None, monitor=monitor,
+                          engine=make_engine(cfg, threshold))
     buf = OracleInputBuffer(max_size=1000 if with_oracle_queue else 1)
     exch = Exchange(gens, pool, buf,
-                    ExchangeConfig(std_threshold=1e9 if not with_oracle_queue
-                                   else 0.0, patience=10 ** 9,
+                    ExchangeConfig(std_threshold=threshold, patience=10 ** 9,
                                    progress_save_interval=1e9),
-                    monitor, prediction_check=committee_check)
+                    monitor)
     # warmup (jit compile is NOT part of the steady-state claim)
     for _ in range(5):
         exch.step()

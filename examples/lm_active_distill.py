@@ -11,6 +11,12 @@ The five kernels instantiated with transformers:
   training   = continuous refit of the committee on the labeled buffer
   controller = the same Exchange/Manager machinery as the MD example
 
+Prediction runs on the unified acquisition engine: the student committee is
+a ``CommitteeSpec`` (stacked params, vmapped seq-NLL forward) and selection
+is a CUSTOM rule pipeline — threshold + top-fraction cap on teacher traffic
+— compiled INTO the fused dispatch, so custom selection still costs one
+device round trip per exchange iteration.
+
   PYTHONPATH=src python examples/lm_active_distill.py
 """
 import sys
@@ -25,9 +31,9 @@ sys.path.insert(0, "src")
 
 from repro.configs.base import ModelConfig
 from repro.configs.pal_potential import PALRunConfig
-from repro.core import PAL, UserGene, UserModel, UserOracle
+from repro.core import (CommitteeSpec, PAL, ThresholdRule, TopFractionRule,
+                        UserGene, UserModel, UserOracle)
 from repro.core import committee as cmte
-from repro.core import selection as sel
 from repro.data.replay import ALReplayBuffer
 from repro.models.model_zoo import build_model
 from repro.models.transformer import lm_loss
@@ -139,10 +145,21 @@ class TeacherOracle(UserOracle):
         return inp, labeled.astype(np.float32)
 
 
-def committee_nll_check(threshold):
-    def check(inputs, preds):
-        return sel.prediction_check(inputs, preds, threshold)
-    return check
+def make_student_committee(n_members: int) -> CommitteeSpec:
+    """Stacked student committee for the fused engine: one member's params
+    mapped over a float token batch -> per-sequence mean NLL (n, 1)."""
+    model = build_model(STUDENT)
+    fwd = model.forward
+
+    def member_nll(p, x):                        # (n, SEQ) float -> (n, 1)
+        toks = x.astype(jnp.int32)
+        logits = fwd(p, {"tokens": toks[:, :-1]})
+        return jnp.mean(cmte.lm_token_nll(logits, toks[:, 1:]),
+                        axis=-1, keepdims=True)
+
+    cparams = cmte.stack_members(
+        [model.init(jax.random.PRNGKey(i)) for i in range(n_members)])
+    return CommitteeSpec(member_nll, cparams)
 
 
 def main():
@@ -151,8 +168,13 @@ def main():
         gene_process=8, orcl_process=2, pred_process=3, ml_process=3,
         retrain_size=24, std_threshold=0.08, patience=1000,
         weight_sync_every=1)
+    # custom selection compiled into the fused dispatch: disagreement
+    # threshold, then cap teacher traffic at the 50% most-uncertain
+    rules = (ThresholdRule(cfg.std_threshold), TopFractionRule(0.5))
     pal = PAL(cfg, make_generator=PromptGene, make_model=StudentCommittee,
-              make_oracle=TeacherOracle)
+              make_oracle=TeacherOracle,
+              committee=make_student_committee(cfg.pred_process),
+              rules=rules)
     pal.start()
     t0 = time.time()
     while pal.train_buffer.total_labeled < 120 and time.time() - t0 < 120:

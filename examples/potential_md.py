@@ -28,7 +28,8 @@ from repro.configs.pal_potential import PALRunConfig, PotentialConfig
 from repro.core import PAL
 from repro.core import committee as cmte
 from repro.models import potential as pot
-from quickstart import CommitteePotential, LJOracle, MDGenerator, PCFG
+from quickstart import (CommitteePotential, LJOracle, MDGenerator, PCFG,
+                        make_committee_spec)
 
 
 def make_test_set(n_traj=16, steps=60, seed=123):
@@ -91,7 +92,8 @@ def run_al(budget: int, seed: int = 0):
         retrain_size=16, std_threshold=0.3, patience=5,
         weight_sync_every=1)
     pal = PAL(cfg, make_generator=MDGenerator,
-              make_model=CommitteePotential, make_oracle=LJOracle)
+              make_model=CommitteePotential, make_oracle=LJOracle,
+              committee=make_committee_spec(PCFG.committee_size))
     # warm start: pre-train every committee member on the foundational set
     # and publish so the prediction kernel starts from sane forces
     seed_data = seed_set(SEED_N)

@@ -4,8 +4,14 @@ uncertain geometries go to an analytic 'DFT' oracle; trainers continuously
 refit; weights flow back to the prediction committee. Patience policy
 included (§2.2).
 
-  PYTHONPATH=src python examples/quickstart.py
+Prediction runs on the unified acquisition engine: a ``CommitteeSpec``
+hands PAL the per-member forward + stacked params, and the committee
+forward, uncertainty statistics, and selection rules execute as ONE fused
+device dispatch per exchange iteration (``PALRunConfig.uq_impl``).
+
+  PYTHONPATH=src python examples/quickstart.py [--timeout 45]
 """
+import argparse
 import sys
 import tempfile
 import time
@@ -17,7 +23,7 @@ import numpy as np
 sys.path.insert(0, "src")
 
 from repro.configs.pal_potential import PALRunConfig, PotentialConfig
-from repro.core import PAL, UserGene, UserModel, UserOracle
+from repro.core import PAL, CommitteeSpec, UserGene, UserModel, UserOracle
 from repro.core import committee as cmte
 from repro.models import potential as pot
 
@@ -130,16 +136,38 @@ class LJOracle(UserOracle):
         return input_for_orcl, np.asarray(f).reshape(-1).astype(np.float32)
 
 
-def main():
+def make_committee_spec(n_members: int, seed_offset: int = 0
+                        ) -> CommitteeSpec:
+    """Fused-engine committee: per-member force field over flat coords."""
+
+    def member_forces(p, flat_batch):            # (n, 3A) -> (n, 3A)
+        def one(flat):
+            _, f = pot.energy_forces(p, flat.reshape(PCFG.n_atoms, 3), PCFG)
+            return f.reshape(-1)
+        return jax.vmap(one)(flat_batch)
+
+    cparams = cmte.stack_members([
+        pot.init(PCFG, jax.random.PRNGKey(i + seed_offset))
+        for i in range(n_members)])
+    return CommitteeSpec(member_forces, cparams)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--timeout", type=float, default=45.0,
+                    help="run budget in seconds (CI smoke uses a short one)")
+    args = ap.parse_args(argv)
     cfg = PALRunConfig(
         result_dir=tempfile.mkdtemp(prefix="pal_quickstart_"),
         gene_process=8, orcl_process=4, pred_process=4, ml_process=4,
         retrain_size=16, std_threshold=0.25, patience=5,
         weight_sync_every=1, checkpoint_every=10.0)
     pal = PAL(cfg, make_generator=MDGenerator,
-              make_model=CommitteePotential, make_oracle=LJOracle)
-    print("running PAL (8 MD generators, 4-NN committee, 4 LJ oracles)...")
-    token = pal.run(timeout=45)
+              make_model=CommitteePotential, make_oracle=LJOracle,
+              committee=make_committee_spec(PCFG.committee_size))
+    print("running PAL (8 MD generators, 4-NN committee, 4 LJ oracles, "
+          f"fused acquisition engine uq_impl={cfg.uq_impl})...")
+    token = pal.run(timeout=args.timeout)
     rep = pal.report()
     print(f"stopped by: {token}")
     print(f"exchange iterations : {rep['counters'].get('exchange.iterations')}")

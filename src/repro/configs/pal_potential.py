@@ -46,6 +46,15 @@ class PALRunConfig:
     max_oracle_retries: int = 2
     checkpoint_every: float = 0.0    # seconds; 0 disables
     seed: int = 0
+    # --- acquisition engine (core/acquisition.make_engine) ---------------
+    uq_impl: str = "auto"            # 'auto' | 'xla' | 'pallas' |
+                                     # 'pallas_interpret' | 'legacy':
+                                     # fused backends need committee=
+                                     # CommitteeSpec(...) passed to PAL;
+                                     # 'auto' picks fused-xla when one is
+                                     # given, per-member legacy otherwise
+    uq_block_n: int = 128            # Pallas kernel row-block size
+    uq_bucket: int = 8               # min power-of-two n_gen jit bucket
 
 
 DEFAULT = PotentialConfig()

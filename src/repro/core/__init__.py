@@ -5,19 +5,28 @@ Public surface:
   transport     — MPI-shaped non-blocking channels (isend/irecv/Test)
   api           — UserModel / UserGene / UserOracle kernel interfaces (S4–S7)
   buffers       — oracle input buffer, retrain_size training buffer, rolling
-  committee     — vmapped committee + the paper's 1-D weight packing, plus
-                  FusedPredictSelect: the single-dispatch exchange engine
-                  (committee forward fused with the committee_uq kernel
-                  under a power-of-two shape-bucketed jit cache)
-  selection     — prediction_check (+ the fast path consuming device UQ) /
-                  adjust_input_for_oracle / patience
+  committee     — vmapped committee + the paper's 1-D weight packing +
+                  shape bucketing
+  acquisition   — the ONE UQ path: UQEngine backends (FusedEngine: committee
+                  forward + committee_uq kernel + device-side selection
+                  rules in a single dispatch under a power-of-two
+                  shape-bucketed jit cache; LegacyEngine: per-member
+                  UserModel.predict), composable rules (ThresholdRule /
+                  TopFractionRule / DiversityRule), and the config-driven
+                  make_engine factory
+  selection     — prediction_check (paper port) / selection_from_uq /
+                  adjust_input_for_oracle(_uq) / patience
   weight_sync   — versioned training->prediction weight publication with
                   preallocated ping-pong pack buffers (alloc-free publish)
-  controller    — Exchange + Manager sub-controllers; with a fused engine
-                  one exchange iteration is ONE device dispatch
+  controller    — Exchange + Manager sub-controllers; one engine call per
+                  exchange iteration, dynamic_oracle_list on the same engine
   runtime       — PAL: threads, fault tolerance, elastic pools, checkpoints
   speedup       — the SI S2 analytic speedup model
 """
+from repro.core.acquisition import (  # noqa: F401
+    CommitteeSpec, DiversityRule, FusedEngine, LegacyEngine, SelectionRule,
+    ThresholdRule, TopFractionRule, UQEngine, UQResult, make_engine,
+)
 from repro.core.api import UserGene, UserModel, UserOracle  # noqa: F401
 from repro.core.runtime import PAL  # noqa: F401
 from repro.core.speedup import WorkloadParams  # noqa: F401

@@ -1,0 +1,472 @@
+"""Unified device-resident acquisition engine — ONE UQ path from the
+exchange hot loop to the Manager's oracle re-prioritization.
+
+The paper's promise is a modular controller where uncertainty estimation,
+selection, and oracle re-prioritization are user-swappable without giving up
+parallel throughput.  This module is that contract:
+
+  * ``UQResult``  — everything the controller ever needs from a committee
+    evaluation: mean, scalar (max-over-components) std, mean-over-components
+    std, and the final selection mask.  Nothing larger ever crosses to host.
+  * ``UQEngine``  — the one interface: ``score(inputs) -> UQResult``.
+  * Backends     — ``FusedEngine`` (vmapped committee forward fused with the
+    ``committee_uq`` kernel, impl='pallas'|'pallas_interpret'|'xla', one
+    device dispatch per exchange iteration, shape-bucketed jit cache) and
+    ``LegacyEngine`` (per-member ``UserModel.predict`` for arbitrary user
+    kernels, float64 host statistics — the paper's original structure).
+  * Rules        — composable selection logic (``ThresholdRule``,
+    ``TopFractionRule``, ``DiversityRule``) written in jnp.  The fused
+    backend traces them INSIDE its compiled dispatch, so custom selection
+    runs device-side and never forfeits fusion; the legacy backend executes
+    the very same functions eagerly on host statistics, so both backends
+    select identically by construction.
+  * ``make_engine`` — config-driven factory (``PALRunConfig.uq_impl`` /
+    ``uq_block_n`` / ``uq_bucket``): the runtime never hand-threads engines.
+
+The pre-engine escape hatches (``prediction_check=`` host callables,
+manual ``fused_engine=`` threading, ``predict_stacked`` host round trips)
+are gone: every scenario — examples, benchmarks, the Manager's
+``dynamic_oracle_list`` — consumes ``UQResult`` from the same hot path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.committee import (
+    committee_size, make_committee_apply, member, shape_bucket, stack_members,
+    update,
+)
+
+
+# ---------------------------------------------------------------------------
+# Results and statistics
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class UQResult:
+    """Host-side outcome of one committee scoring round (all (n,)-shaped or
+    (n, d)-shaped numpy arrays, n = true number of inputs scored).
+
+    ``scalar_std``    max over output components of the ddof=1 committee std
+                      — the quantity the paper's ``prediction_check``
+                      thresholds.
+    ``component_std`` mean over output components of the same std — the
+                      ranking score of ``adjust_input_for_oracle``
+                      (``dynamic_oracle_list``), emitted in the same Welford
+                      pass so the Manager never recomputes statistics from a
+                      ``(K, n, d)`` host tensor.
+    ``mask``          final selection decision after the rule pipeline.
+    """
+
+    mean: np.ndarray            # (n, d)
+    scalar_std: np.ndarray      # (n,)
+    component_std: np.ndarray   # (n,)
+    mask: np.ndarray            # (n,) bool
+
+
+@dataclasses.dataclass
+class UQStats:
+    """Per-round statistics handed to selection rules.
+
+    Inside the fused dispatch every field is a traced jnp array over the
+    PADDED bucket; on the legacy path they are host numpy arrays over the
+    true n.  ``valid`` masks real rows (padding rows are never selectable);
+    ``n_valid`` is the true input count (traced scalar on device, so
+    fraction-of-n rules never force a retrace when n varies in a bucket).
+    """
+
+    x: Any                      # (nb, in_dim) the stacked proposal batch
+    mean: Any                   # (nb, d)
+    scalar_std: Any             # (nb,)
+    component_std: Any          # (nb,)
+    valid: Any                  # (nb,) bool
+    n_valid: Any                # scalar int
+
+
+# ---------------------------------------------------------------------------
+# Selection rules — jnp-traceable, so one definition serves both backends
+# ---------------------------------------------------------------------------
+
+
+class SelectionRule:
+    """Composable selection logic: ``apply(stats, mask) -> mask``.
+
+    Rules are folded in order over the incoming mask (initially every valid
+    row).  Implementations must be pure jnp so the fused backend can trace
+    them into its single compiled dispatch; the same code runs eagerly on
+    host arrays for the legacy backend.  Set ``needs_inputs`` when the rule
+    reads ``stats.x`` — the legacy backend only stacks the input batch
+    (which the fused path gets for free) for rules that declare it.
+    """
+
+    needs_inputs: bool = False
+
+    def apply(self, stats: UQStats, mask: jnp.ndarray) -> jnp.ndarray:
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class ThresholdRule(SelectionRule):
+    """The paper's central check: select where scalar_std > threshold.
+
+    Compares in the statistics' native dtype — float32 on the fused device
+    path, float64 on the legacy host path (the seed ``prediction_check``
+    semantics; forcing a jnp cast here would silently downgrade the legacy
+    backend's near-threshold decisions to fp32)."""
+
+    threshold: float
+
+    def apply(self, stats: UQStats, mask):
+        return mask & (stats.scalar_std > self.threshold)
+
+
+@dataclasses.dataclass(frozen=True)
+class TopFractionRule(SelectionRule):
+    """Keep exactly the top ``round(fraction * n_valid)`` most-uncertain
+    candidates (by scalar_std) among those still masked — the device-side
+    equivalent of ``selection.top_fraction``.  Caps oracle traffic at a
+    fixed fraction of the generator pool regardless of how noisy the
+    committee currently is.  Rank-based, so exact ties (e.g. duplicate
+    proposals from patience-restarted generators) never push the selection
+    over the cap; tied ranks break toward the lower index.
+    """
+
+    fraction: float
+
+    def apply(self, stats: UQStats, mask):
+        # k must equal the host's int(round(n * fraction)) EXACTLY — fp32
+        # arithmetic on the device cannot reproduce float64 rounding for
+        # arbitrary (n, fraction) (e.g. 45*0.7: fp32 lands on 31.5 -> 32,
+        # float64 on 31.499999999999996 -> 31).  fraction is static and
+        # n_valid is bounded by the (static) bucket size, so the exact k
+        # for every possible n is precomputed host-side at trace time and
+        # the traced n_valid just indexes the table.
+        n = int(mask.shape[0])
+        k_table = jnp.asarray(
+            [int(round(m * self.fraction)) for m in range(n + 1)],
+            jnp.int32)
+        k = k_table[jnp.clip(stats.n_valid, 0, n)]
+        score = jnp.where(mask, stats.scalar_std, -jnp.inf)
+        order = jnp.argsort(-score)            # stable: ties by lower index
+        rank = jnp.zeros(n, jnp.int32).at[order].set(
+            jnp.arange(n, dtype=jnp.int32))
+        return mask & (rank < k)
+
+
+@dataclasses.dataclass(frozen=True)
+class DiversityRule(SelectionRule):
+    """Greedy de-duplication in input space (paper §3.1: avoid redundant
+    oracle calculations): visit masked candidates in descending-uncertainty
+    order and keep one only if no already-kept candidate lies closer than
+    ``min_dist`` — ``selection.diversity_filter`` compiled into the
+    dispatch (the O(n^2) distance matrix lives on device; n is the bucket).
+    """
+
+    min_dist: float
+    needs_inputs = True
+
+    def apply(self, stats: UQStats, mask):
+        x = jnp.asarray(stats.x, jnp.float32)
+        mask = jnp.asarray(mask)
+        n = x.shape[0]
+        md2 = jnp.float32(self.min_dist) ** 2
+        order = jnp.argsort(
+            jnp.where(mask, -jnp.asarray(stats.scalar_std), jnp.inf))
+
+        # distances per candidate row inside the loop, via direct
+        # differences — NOT the Gram identity (||a||^2+||b||^2-2ab cancels
+        # catastrophically in fp32 for large-norm inputs; the host
+        # diversity_filter needs a float64 boundary recompute for exactly
+        # this reason) and NOT a precomputed (n, n, in_dim) difference
+        # tensor (the Manager scores whole oracle buffers through the same
+        # engine, where that intermediate would be GBs); O(n*d) memory,
+        # same O(n^2*d) work.
+        def body(t, kept):
+            i = order[t]
+            di = jnp.sum((x - x[i]) ** 2, axis=-1)
+            ok = mask[i] & ~jnp.any(kept & (di < md2))
+            return kept.at[i].set(ok)
+
+        return jax.lax.fori_loop(0, n, body, jnp.zeros(n, bool))
+
+
+def default_rules(threshold: float) -> Tuple[SelectionRule, ...]:
+    return (ThresholdRule(threshold),)
+
+
+# ---------------------------------------------------------------------------
+# Engine protocol
+# ---------------------------------------------------------------------------
+
+
+class UQEngine:
+    """One interface for committee scoring.  ``score`` is the ONLY call the
+    controller makes on the hot path; ``refresh_from`` pulls fresh weights
+    from a WeightStore (no-op for backends whose members refresh
+    themselves); ``uses_models`` tells the PredictionPool whether the
+    per-member ``UserModel`` instances are part of this engine's path."""
+
+    uses_models: bool = False
+
+    def score(self, list_data: Sequence[np.ndarray]) -> UQResult:
+        raise NotImplementedError
+
+    def refresh_from(self, store) -> int:
+        return 0
+
+
+class FusedEngine(UQEngine):
+    """Single-dispatch committee inference + UQ + device-side selection.
+
+    One exchange iteration is ONE compiled device program: the vmapped
+    committee forward, the ``ops.committee_uq`` statistics (streaming
+    Welford over the K axis: mean / max-component std / mean-component std /
+    threshold mask), and the rule pipeline all trace into the same jit.
+    Only ``(mean, scalar_std, component_std, mask)`` cross back to host —
+    the ``(K, n, d)`` prediction tensor never leaves the device, regardless
+    of which rules are installed.
+
+    Varying generator counts are padded to power-of-two shape buckets so a
+    run with fluctuating ``n_gen`` compiles at most once per bucket
+    (``trace_counts`` records tracings per bucket; tests assert <= 1); the
+    true count enters the program as a traced scalar, so fraction-of-n rules
+    don't retrace either.  The padded input batch is donated to the compiled
+    program where the backend supports aliasing.
+
+    ``apply_fn(params, x)`` must map a single member's params over a batch
+    ``x: (n, in_dim) -> (n, out_dim)``.
+    """
+
+    def __init__(self, apply_fn: Callable, cparams: Any, threshold: float,
+                 *, rules: Optional[Sequence[SelectionRule]] = None,
+                 impl: str = "xla", min_bucket: int = 8,
+                 donate: bool = True, block_n: int = 128):
+        from repro.kernels import ops as _ops
+
+        self._ops = _ops
+        self.apply = make_committee_apply(apply_fn)
+        self.cparams = cparams
+        self.threshold = float(threshold)
+        self.rules = tuple(rules) if rules is not None \
+            else default_rules(threshold)
+        self.impl = impl
+        self.min_bucket = min_bucket
+        self.donate = donate
+        self.block_n = block_n
+        self.version = -1                      # last WeightStore version seen
+        self._cache: Dict[int, Callable] = {}
+        self.trace_counts: Dict[int, int] = {}
+        # the Exchange and Manager threads score through the SAME engine:
+        # the compile cache and traffic counters need a lock or two threads
+        # hitting a fresh bucket would both trace it (duplicate multi-second
+        # XLA compiles, trace_counts == 2) and lose counter increments
+        self._compile_lock = threading.Lock()
+        self._counter_lock = threading.Lock()
+        self._warmed: set = set()
+        # host<->device traffic accounting (benchmarks/committee_uq.py)
+        self.bytes_to_device = 0
+        self.bytes_to_host = 0
+
+    @property
+    def size(self) -> int:
+        return committee_size(self.cparams)
+
+    # ------------------------------------------------------------- compile
+    def _compiled_locked(self, nb: int) -> Callable:
+        # caller holds self._compile_lock
+        fn = self._cache.get(nb)
+        if fn is None:
+            def fused(cparams, x, n_valid):
+                # trace-time counter: fires once per (bucket) compilation
+                self.trace_counts[nb] = self.trace_counts.get(nb, 0) + 1
+                preds = self.apply(cparams, x)
+                mean, sstd, cstd, _ = self._ops.committee_uq(
+                    preds, self.threshold, impl=self.impl,
+                    block_n=self.block_n)
+                valid = jnp.arange(nb) < n_valid
+                stats = UQStats(x=x, mean=mean, scalar_std=sstd,
+                                component_std=cstd, valid=valid,
+                                n_valid=n_valid)
+                mask = valid
+                for rule in self.rules:
+                    mask = jnp.asarray(rule.apply(stats, mask)) & valid
+                return mean, sstd, cstd, mask
+            # donation is a no-op (plus a warning) on CPU — only request it
+            # where XLA can actually alias the buffer
+            donate = self.donate and jax.default_backend() != "cpu"
+            fn = jax.jit(fused, donate_argnums=(1,)) if donate \
+                else jax.jit(fused)
+            self._cache[nb] = fn
+        return fn
+
+    def _pad_batch(self, list_data: Sequence[np.ndarray]):
+        """Stack generator proposals into one padded (bucket, in_dim) batch."""
+        rows = [np.asarray(x, dtype=np.float32).reshape(-1)
+                for x in list_data]
+        n = len(rows)
+        nb = shape_bucket(n, self.min_bucket)
+        x = np.zeros((nb, rows[0].size), np.float32)
+        for i, r in enumerate(rows):
+            x[i] = r
+        return x, n, nb
+
+    # -------------------------------------------------------------- score
+    def score(self, list_data: Sequence[np.ndarray]) -> UQResult:
+        x, n, nb = self._pad_batch(list_data)
+        args = (self.cparams, jnp.asarray(x), np.int32(n))
+        if nb in self._warmed:                 # steady state: lock-free call
+            out = self._cache[nb](*args)
+        else:
+            # first call per bucket traces lazily inside jit — hold the
+            # lock across it so concurrent Exchange/Manager scoring can't
+            # double-trace the same bucket
+            with self._compile_lock:
+                out = self._compiled_locked(nb)(*args)
+                self._warmed.add(nb)
+        mean, sstd, cstd, mask = (np.asarray(o) for o in out)
+        with self._counter_lock:
+            self.bytes_to_device += x.nbytes
+            self.bytes_to_host += (mean.nbytes + sstd.nbytes + cstd.nbytes
+                                   + mask.nbytes)
+        return UQResult(mean[:n], sstd[:n], cstd[:n], mask[:n])
+
+    # -------------------------------------------------------------- weights
+    def refresh_from(self, store) -> int:
+        """Refresh the stacked committee from a WeightStore if anything
+        newer exists.  Prediction member i replicates training member
+        ``i % store.n_members`` (paper: prediction models are replicas of
+        training models), so the committee size K is preserved even when
+        fewer trainers publish — shapes never change, so no retrace.
+        Returns the number of refreshed committees (0 or 1)."""
+        v = store.version()
+        if v <= self.version:
+            return 0
+        K = self.size
+        packs = [store.pull_packed(i % store.n_members) for i in range(K)]
+        if any(p is None for p in packs):
+            return 0              # not all trainers have published yet
+        members = [update(member(self.cparams, i), packs[i][0])
+                   for i in range(K)]
+        self.cparams = stack_members(members)
+        self.version = v
+        return 1
+
+
+class LegacyEngine(UQEngine):
+    """Per-member backend for arbitrary ``UserModel`` kernels (the paper's
+    original per-process structure): K sequential ``model.predict`` calls
+    (or a user ``predict_all_override``), float64 host statistics, then the
+    SAME rule objects executed eagerly — so swapping a user model in never
+    changes selection semantics, only throughput.
+
+    Weight refresh stays with the PredictionPool (the models own their
+    parameters), hence ``uses_models`` and a no-op ``refresh_from``.
+    """
+
+    uses_models = True
+
+    def __init__(self, predict_all: Callable[[Sequence[np.ndarray]],
+                                             np.ndarray],
+                 threshold: float,
+                 *, rules: Optional[Sequence[SelectionRule]] = None):
+        self.predict_all = predict_all
+        self.threshold = float(threshold)
+        self.rules = tuple(rules) if rules is not None \
+            else default_rules(threshold)
+
+    def score(self, list_data: Sequence[np.ndarray]) -> UQResult:
+        preds = np.asarray(self.predict_all(list_data), dtype=np.float64)
+        k = preds.shape[0]
+        mean = preds.mean(axis=0)
+        std = preds.std(axis=0, ddof=1) if k > 1 else np.zeros_like(preds[0])
+        flat = std.reshape(std.shape[0], -1)
+        sstd = flat.max(axis=-1)
+        cstd = flat.mean(axis=-1)
+        n = len(list_data)
+        x = np.stack([np.asarray(r, np.float32).reshape(-1)
+                      for r in list_data]) \
+            if any(r.needs_inputs for r in self.rules) else None
+        stats = UQStats(
+            x=x, mean=mean, scalar_std=sstd, component_std=cstd,
+            valid=np.ones(n, bool), n_valid=n)
+        mask = np.ones(n, bool)
+        for rule in self.rules:
+            mask = np.asarray(rule.apply(stats, mask), dtype=bool)
+        return UQResult(mean, sstd, cstd, mask)
+
+
+# ---------------------------------------------------------------------------
+# Config-driven construction
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class CommitteeSpec:
+    """What the fused backends need from the user: a single-member batch
+    apply ``apply_fn(params, x: (n, in_dim)) -> (n, out_dim)`` plus the
+    stacked committee parameters (leading K axis, ``committee.stack_members``).
+    """
+
+    apply_fn: Callable
+    cparams: Any
+
+
+def wants_legacy(run_cfg, committee: Optional[CommitteeSpec],
+                 force_legacy: bool = False) -> bool:
+    """Whether ``make_engine`` will build the per-member legacy backend for
+    this configuration — i.e. whether per-member prediction ``UserModel``
+    instances are actually needed (the runtime skips constructing them
+    otherwise)."""
+    impl = getattr(run_cfg, "uq_impl", "auto")
+    return force_legacy or impl == "legacy" or (impl == "auto"
+                                                and committee is None)
+
+
+def make_engine(
+    run_cfg,
+    *,
+    committee: Optional[CommitteeSpec] = None,
+    predict_all: Optional[Callable] = None,
+    rules: Optional[Sequence[SelectionRule]] = None,
+    force_legacy: bool = False,
+) -> UQEngine:
+    """Build the acquisition engine from ``PALRunConfig`` knobs.
+
+    ``uq_impl``:
+      'auto'             — fused XLA backend when a ``CommitteeSpec`` is
+                           given, per-member legacy otherwise
+      'xla'              — fused single-dispatch, jnp reference statistics
+      'pallas'           — fused single-dispatch, Pallas TPU kernel
+      'pallas_interpret' — same kernel, interpret mode (CPU validation)
+      'legacy'           — per-member ``UserModel.predict`` + host float64
+
+    ``force_legacy`` overrides everything (used when a
+    ``predict_all_override`` puts the user in control of raw predictions).
+    """
+    impl = getattr(run_cfg, "uq_impl", "auto")
+    threshold = run_cfg.std_threshold
+    if wants_legacy(run_cfg, committee, force_legacy):
+        if predict_all is None:
+            raise ValueError(
+                "legacy UQ backend needs a predict_all callable "
+                "(no committee spec was provided)")
+        return LegacyEngine(predict_all, threshold, rules=rules)
+    if committee is None:
+        raise ValueError(
+            f"uq_impl={impl!r} is a fused backend and needs a CommitteeSpec "
+            "(apply_fn + stacked cparams); pass committee=... to PAL or use "
+            "uq_impl='legacy'")
+    return FusedEngine(
+        committee.apply_fn, committee.cparams, threshold,
+        rules=rules,
+        impl=("xla" if impl == "auto" else impl),
+        block_n=getattr(run_cfg, "uq_block_n", 128),
+        min_bucket=getattr(run_cfg, "uq_bucket", 8),
+    )

@@ -66,6 +66,57 @@ class OracleInputBuffer:
         with self._lock:
             self._items = list(items)
 
+    def snapshot_for_adjust(self) -> Tuple[List[Any], int]:
+        """Snapshot plus the enqueue generation at snapshot time — pass the
+        generation back to ``merge_adjusted`` so concurrent appends are
+        identified correctly even on a bounded buffer."""
+        with self._lock:
+            return list(self._items), self.total_enqueued
+
+    def merge_adjusted(self, new_items: Sequence[Any], enqueued_at: int,
+                       snapshot_len: int = 0):
+        """Replace the re-scored snapshot portion with ``new_items``
+        (priority-sorted, most uncertain first), KEEPING anything appended
+        concurrently since the snapshot was taken (dynamic_oracle_list:
+        scoring runs outside the lock, and the Exchange thread keeps
+        enqueueing while it does — a blind ``restore`` would silently drop
+        those fresh selections).  Pops only happen on the Manager's own
+        thread, so the un-scored portion is the appended suffix; it is
+        counted via the enqueue generation, not list length, so a
+        ``max_size`` trim during scoring cannot drop fresh selections.  On
+        overflow the LOWEST-priority re-scored items are evicted first
+        (``new_items`` is priority-sorted, unlike the age-sorted steady
+        state where ``put`` drops the stalest), and fresh appends are only
+        trimmed oldest-first if they alone exceed ``max_size``.
+
+        ``snapshot_len`` (length of the snapshot the caller re-scored) is
+        used to keep the ``dropped`` counter honest: snapshot items a
+        concurrent ``put`` trim already counted as dropped may be
+        re-inserted here via ``new_items``, so merge-overflow evictions are
+        only counted beyond what that trim already charged (best-effort —
+        identity is not tracked)."""
+        with self._lock:
+            n_appended = min(len(self._items),
+                             self.total_enqueued - enqueued_at)
+            appended = self._items[len(self._items) - n_appended:] \
+                if n_appended > 0 else []
+            new_items = list(new_items)
+            trimmed_during = max(
+                0, snapshot_len - (len(self._items) - n_appended))
+            evicted = 0
+            if self.max_size:
+                overflow = len(new_items) + len(appended) - self.max_size
+                if overflow > 0:
+                    keep_new = max(0, len(new_items) - overflow)
+                    evicted += len(new_items) - keep_new
+                    new_items = new_items[:keep_new]
+                if len(appended) > self.max_size:
+                    extra = len(appended) - self.max_size
+                    appended = appended[extra:]
+                    evicted += extra
+            self.dropped += max(0, evicted - trimmed_during)
+            self._items = new_items + appended
+
 
 class TrainingDataBuffer:
     """Labeled (input, target) pairs; released to trainers in blocks of

@@ -11,15 +11,17 @@ pytrees directly.  ``get_weight`` accepts an ``out=`` buffer so the publish
 path can reuse a preallocated array instead of ``np.concatenate``-ing a
 fresh one every round.
 
-``FusedPredictSelect`` is the fused exchange engine (see kernels/ops
-``committee_uq``): the vmapped committee forward and the uncertainty
-statistics run as ONE jitted device program per shape bucket (n_gen padded
-to power-of-two buckets so varying generator counts never retrace), and
-only ``(mean, scalar_std, mask)`` return to host.
+The fused exchange engine lives in ``core/acquisition.py``
+(``FusedEngine``): the vmapped committee forward, the uncertainty
+statistics (kernels/ops ``committee_uq``), and the selection-rule pipeline
+run as ONE jitted device program per shape bucket (``shape_bucket`` here:
+n_gen padded to power-of-two buckets so varying generator counts never
+retrace), and only ``(mean, scalar_std, component_std, mask)`` return to
+host.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -161,7 +163,7 @@ class Committee:
 
 
 # ---------------------------------------------------------------------------
-# Fused committee-UQ exchange engine
+# Shape bucketing (jit-cache quantization for the acquisition engine)
 # ---------------------------------------------------------------------------
 
 
@@ -171,130 +173,3 @@ def shape_bucket(n: int, minimum: int = 8) -> int:
     while b < n:
         b *= 2
     return b
-
-
-class FusedPredictSelect:
-    """Single-dispatch committee inference + uncertainty quantification.
-
-    One exchange iteration becomes ONE device program: the vmapped committee
-    forward fused with ``ops.committee_uq`` (mean / ddof-1 scalar std /
-    ``std > threshold`` mask, streamed over the K axis) under ``jax.jit``.
-    Only ``(mean, scalar_std, mask)`` cross back to host — the full
-    ``(K, n_gen, out_dim)`` tensor never leaves the device.
-
-    Varying generator counts are padded to power-of-two shape buckets so a
-    run with fluctuating ``n_gen`` compiles at most once per bucket
-    (``trace_counts`` records tracings per bucket; tests assert <= 1).  The
-    padded input batch is donated to the compiled program, so XLA reuses its
-    buffer instead of allocating per iteration.
-
-    ``apply_fn(params, x)`` must map a single member's params over a batch
-    ``x: (n, in_dim) -> (n, out_dim)``.
-    """
-
-    def __init__(self, apply_fn: Callable, cparams: Any, threshold: float,
-                 *, impl: str = "xla", min_bucket: int = 8,
-                 donate: bool = True, block_n: int = 128):
-        from repro.kernels import ops as _ops
-
-        self._ops = _ops
-        self.apply = make_committee_apply(apply_fn)
-        self.cparams = cparams
-        self.threshold = float(threshold)
-        self.impl = impl
-        self.min_bucket = min_bucket
-        self.donate = donate
-        self.block_n = block_n
-        self.version = -1                      # last WeightStore version seen
-        self._cache: Dict[int, Callable] = {}
-        self._stacked: Optional[Callable] = None
-        self.trace_counts: Dict[int, int] = {}
-        # host<->device traffic accounting (benchmarks/committee_uq.py)
-        self.bytes_to_device = 0
-        self.bytes_to_host = 0
-
-    @property
-    def size(self) -> int:
-        return committee_size(self.cparams)
-
-    # ------------------------------------------------------------- compile
-    def _compiled(self, nb: int) -> Callable:
-        fn = self._cache.get(nb)
-        if fn is None:
-            def fused(cparams, x):
-                # trace-time counter: fires once per (bucket) compilation
-                self.trace_counts[nb] = self.trace_counts.get(nb, 0) + 1
-                preds = self.apply(cparams, x)
-                return self._ops.committee_uq(
-                    preds, self.threshold, impl=self.impl,
-                    block_n=self.block_n)
-            # donation is a no-op (plus a warning) on CPU — only request it
-            # where XLA can actually alias the buffer
-            donate = self.donate and jax.default_backend() != "cpu"
-            fn = jax.jit(fused, donate_argnums=(1,)) if donate \
-                else jax.jit(fused)
-            self._cache[nb] = fn
-        return fn
-
-    def _compiled_stacked(self) -> Callable:
-        # one jit wrapper is enough: jit's own cache is keyed by input shape,
-        # and bucketing already quantizes the shapes it sees
-        if self._stacked is None:
-            self._stacked = jax.jit(self.apply)
-        return self._stacked
-
-    def _pad_batch(self, list_data: Sequence[np.ndarray]):
-        """Stack generator proposals into one padded (bucket, in_dim) batch."""
-        rows = [np.asarray(x, dtype=np.float32).reshape(-1)
-                for x in list_data]
-        n = len(rows)
-        nb = shape_bucket(n, self.min_bucket)
-        x = np.zeros((nb, rows[0].size), np.float32)
-        for i, r in enumerate(rows):
-            x[i] = r
-        return x, n, nb
-
-    # -------------------------------------------------------------- predict
-    def __call__(self, list_data: Sequence[np.ndarray]
-                 ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
-        """list of per-generator inputs -> host (mean, scalar_std, mask),
-        sliced to the true n_gen."""
-        x, n, nb = self._pad_batch(list_data)
-        self.bytes_to_device += x.nbytes
-        mean, sstd, mask = self._compiled(nb)(self.cparams, jnp.asarray(x))
-        mean, sstd, mask = (np.asarray(mean), np.asarray(sstd),
-                            np.asarray(mask))
-        self.bytes_to_host += mean.nbytes + sstd.nbytes + mask.nbytes
-        return mean[:n], sstd[:n], mask[:n]
-
-    def predict_stacked(self, list_data: Sequence[np.ndarray]) -> np.ndarray:
-        """Full (K, n, out_dim) predictions in one dispatch — the slow-lane
-        path for consumers that need per-member outputs (e.g. the manager's
-        dynamic oracle-buffer re-prioritization)."""
-        x, n, nb = self._pad_batch(list_data)
-        self.bytes_to_device += x.nbytes
-        preds = np.asarray(self._compiled_stacked()(self.cparams,
-                                                    jnp.asarray(x)))
-        self.bytes_to_host += preds.nbytes
-        return preds[:, :n]
-
-    # -------------------------------------------------------------- weights
-    def refresh_from(self, store) -> int:
-        """Refresh the stacked committee from a WeightStore if anything
-        newer exists.  Prediction member i replicates training member
-        ``i % store.n_members`` (paper: prediction models are replicas of
-        training models), so the committee size K is preserved even when
-        fewer trainers publish — shapes never change, so no retrace.
-        Returns the number of refreshed committees (0 or 1)."""
-        v = store.version()
-        if v <= self.version:
-            return 0
-        K = self.size
-        packs = [store.pull_packed(i % store.n_members) for i in range(K)]
-        if any(p is None for p in packs):
-            return 0              # not all trainers have published yet
-        members = [update(member(self.cparams, i), packs[i][0])
-                   for i in range(K)]
-        self.cparams = stack_members(members)
-        self.version = v
-        return 1

@@ -1,18 +1,20 @@
 """The controller kernel — two sub-controllers, as in the paper (Fig. 2):
 
 * ``Exchange``: the high-frequency generator<->prediction loop.  Gathers
-  proposals from every generator, runs the committee, applies the *central*
-  uncertainty check (prediction_check), queues uncertain samples for the
-  oracle, scatters committee means (with restart flags realized as ``None``,
-  the paper's first-iteration semantics) back to generators.  With a fused
-  engine (committee.FusedPredictSelect) installed on the PredictionPool the
-  whole predict+check becomes ONE device dispatch returning only
-  ``(mean, scalar_std, mask)`` — the seed path's K sequential member calls
-  and the float64 host std recompute disappear from the hot loop.
+  proposals from every generator, scores them through the ONE acquisition
+  engine (core/acquisition.UQEngine — committee forward, UQ statistics, and
+  the device-side selection-rule pipeline in a single dispatch on fused
+  backends), queues selected samples for the oracle, scatters committee
+  means (with restart flags realized as ``None``, the paper's
+  first-iteration semantics) back to generators.  There is no fast/legacy
+  branching here: every backend returns the same ``UQResult`` and the loop
+  body is identical.
 * ``Manager``: oracle dispatch (first-available, point-to-point), labeled
   data collection into the training buffer, retrain_size-block release to
-  trainers, dynamic oracle-buffer re-prioritization, fault handling
-  (timeout->requeue, dead-worker requeue), and AL-state checkpoints.
+  trainers, dynamic oracle-buffer re-prioritization (consuming the SAME
+  engine's ``UQResult`` — no stacked ``(K, n_buf, out_dim)`` host tensor,
+  no float64 recompute), fault handling (timeout->requeue, dead-worker
+  requeue), and AL-state checkpoints.
 
 Both are plain objects with ``step()`` methods — the threaded runtime
 (core/runtime.py) drives them, and tests drive them synchronously.
@@ -25,6 +27,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 
+from repro.core import acquisition as acq
 from repro.core import selection as sel
 from repro.core.buffers import OracleInputBuffer, TrainingDataBuffer
 from repro.core.fault import Heartbeat, TaskLedger
@@ -34,68 +37,88 @@ from repro.core.weight_sync import WeightStore
 
 
 class PredictionPool:
-    """The prediction kernel: a pool of committee members.
+    """The prediction kernel: committee members + their acquisition engine.
 
-    Default realization calls each ``UserModel(mode='predict').predict`` —
-    the paper's per-process structure.  A vmapped single-program committee
-    (core/committee.Committee) drops in via ``predict_all_override``, and a
-    fused single-dispatch engine (core/committee.FusedPredictSelect) via
-    ``fused_engine``: generator proposals are stacked into one padded
-    device batch, the committee forward + UQ run as one compiled program,
-    and only ``(mean, scalar_std, mask)`` transfer back to host.
-    Weights refresh from the WeightStore at pull cadence (paper §2.1).
+    All scoring flows through ``engine.score`` (core/acquisition.UQEngine).
+    The engine decides HOW: fused backends run one compiled device program
+    over the stacked committee; the legacy backend calls each
+    ``UserModel(mode='predict').predict`` — the paper's per-process
+    structure — via ``predict_all``.  A user ``predict_all_override``
+    replaces the raw committee predictions and therefore forces the legacy
+    backend (installed by the runtime / ``Exchange`` default).
+
+    Weights refresh from the WeightStore at pull cadence (paper §2.1):
+    fused engines refresh their stacked params directly; per-member models
+    are pulled only when the engine actually uses them.
     """
 
     def __init__(self, models: Sequence[Any], store: Optional[WeightStore],
                  monitor: Optional[Monitor] = None,
-                 predict_all_override: Optional[Callable] = None,
-                 fused_engine: Optional[Any] = None):
+                 engine: Optional[acq.UQEngine] = None,
+                 predict_all_override: Optional[Callable] = None):
         self.models = list(models)
         self.store = store
         self.monitor = monitor or Monitor()
         self._versions = [-1] * len(self.models)
         self._override = predict_all_override
-        self.fused = fused_engine
+        self._engine: Optional[acq.UQEngine] = None
+        self.engine = engine
 
     @property
-    def supports_fused_uq(self) -> bool:
-        # a predict_all_override takes precedence: the user controls the
-        # committee predictions, so the fused engine must not bypass it
-        return self.fused is not None and self._override is None
+    def engine(self) -> Optional[acq.UQEngine]:
+        return self._engine
+
+    @engine.setter
+    def engine(self, eng: Optional[acq.UQEngine]):
+        # invariant: a predict_all_override puts the user in control of the
+        # raw committee predictions, so only backends that consume
+        # predict_all (the legacy path) may score this pool — a fused
+        # engine would silently bypass the override
+        if (eng is not None and self._override is not None
+                and not eng.uses_models):
+            raise ValueError(
+                "predict_all_override requires a legacy (per-member) UQ "
+                "backend; a fused engine would bypass the override")
+        self._engine = eng
 
     def refresh_weights(self):
         if self.store is None:
             return 0
         n = 0
-        if self.fused is not None:
-            n = self.fused.refresh_from(self.store)
-        for i, m in enumerate(self.models):
-            # prediction member i replicates training member i % ml_process
-            # (paper: prediction models are replicas of training models)
-            packed = self.store.pull_packed(i % self.store.n_members,
-                                            newer_than=self._versions[i])
-            if packed is not None:
-                arr, v = packed
-                m.update(arr)
-                self._versions[i] = v
-                n += 1
+        if self.engine is not None:
+            n = self.engine.refresh_from(self.store)
+        if self.engine is None or self.engine.uses_models:
+            for i, m in enumerate(self.models):
+                # prediction member i replicates training member
+                # i % ml_process (paper: prediction models are replicas of
+                # training models)
+                packed = self.store.pull_packed(i % self.store.n_members,
+                                                newer_than=self._versions[i])
+                if packed is not None:
+                    arr, v = packed
+                    m.update(arr)
+                    self._versions[i] = v
+                    n += 1
         if n:
             self.monitor.incr("prediction.weight_refreshes", n)
         return n
 
-    def predict_uq(self, list_data_to_pred: List[np.ndarray]):
-        """Fused single-dispatch path -> host (mean, scalar_std, mask)."""
+    def predict_uq(self, list_data_to_pred: List[np.ndarray]) -> acq.UQResult:
+        """The one scoring call: engine -> UQResult (mean, scalar_std,
+        component_std, mask)."""
         with self.monitor.timer("exchange.predict"):
-            return self.fused(list_data_to_pred)
+            return self.engine.score(list_data_to_pred)
 
     def predict_all(self, list_data_to_pred: List[np.ndarray]) -> np.ndarray:
-        """-> (K, n_gen, out_dim) stacked committee predictions."""
-        with self.monitor.timer("exchange.predict"):
-            if self._override is not None:
-                return np.asarray(self._override(list_data_to_pred))
-            if self.fused is not None and not self.models:
-                return self.fused.predict_stacked(list_data_to_pred)
-            outs = [m.predict(list_data_to_pred) for m in self.models]
+        """-> (K, n_gen, out_dim) stacked committee predictions — the raw
+        input of the legacy backend (and of user overrides)."""
+        if self._override is not None:
+            return np.asarray(self._override(list_data_to_pred))
+        if not self.models:
+            raise RuntimeError(
+                "PredictionPool has no per-member models; fused engines "
+                "never materialize stacked predictions")
+        outs = [m.predict(list_data_to_pred) for m in self.models]
         return np.asarray(outs)
 
 
@@ -111,7 +134,14 @@ class ExchangeConfig:
 
 class Exchange:
     """High-frequency generator<->prediction loop (one dedicated
-    sub-controller in the paper)."""
+    sub-controller in the paper).
+
+    The loop body is backend-agnostic: gather -> ``engine.score`` ->
+    scatter.  If the PredictionPool arrives without an engine (direct
+    construction in tests/tools), a legacy per-member engine with the
+    config's threshold rule is installed — the runtime normally builds the
+    engine from ``PALRunConfig`` via ``acquisition.make_engine``.
+    """
 
     def __init__(
         self,
@@ -120,19 +150,15 @@ class Exchange:
         oracle_buffer: OracleInputBuffer,
         cfg: ExchangeConfig,
         monitor: Optional[Monitor] = None,
-        prediction_check: Optional[Callable] = None,
     ):
         self.generators = list(generators)
         self.prediction = prediction
         self.oracle_buffer = oracle_buffer
         self.cfg = cfg
         self.monitor = monitor or Monitor()
-        # a user-supplied check needs the stacked (K, n, d) preds, so it
-        # forces the legacy path; the fused fast path is default-check only
-        self._custom_check = prediction_check is not None
-        self.prediction_check = prediction_check or (
-            lambda inputs, preds: sel.prediction_check(
-                inputs, preds, cfg.std_threshold))
+        if self.prediction.engine is None:
+            self.prediction.engine = acq.LegacyEngine(
+                self.prediction.predict_all, cfg.std_threshold)
         n = len(self.generators)
         self.data_to_gene: List[Optional[np.ndarray]] = [None] * n
         self.patience = sel.PatienceTracker(n, cfg.patience)
@@ -150,22 +176,15 @@ class Exchange:
             inputs.append(np.asarray(x))
         t_gen = time.perf_counter() - t0
 
-        # 2. committee inference (+ periodic weight refresh)
+        # 2. committee inference + UQ + selection rules — one engine call
+        #    (one device dispatch on fused backends)
         if self.iteration % max(1, self.cfg.weight_pull_every) == 0:
             self.prediction.refresh_weights()
-        fast = (not self._custom_check
-                and getattr(self.prediction, "supports_fused_uq", False))
-        if fast:
-            mean, sstd, mask = self.prediction.predict_uq(inputs)
-        else:
-            preds = self.prediction.predict_all(inputs)
+        uq = self.prediction.predict_uq(inputs)
 
-        # 3. central uncertainty check; queue to oracle; scatter back
+        # 3. realize the selection; queue to oracle; scatter back
         t1 = time.perf_counter()
-        if fast:
-            res = sel.prediction_check_fast(inputs, mean, sstd, mask)
-        else:
-            res = self.prediction_check(inputs, preds)
+        res = sel.selection_from_uq(inputs, uq)
         if res.inputs_to_oracle:
             self.oracle_buffer.put(res.inputs_to_oracle)
             self.monitor.incr("exchange.queued_to_oracle",
@@ -200,6 +219,12 @@ class ManagerConfig:
     oracle_timeout: float = 30.0
     max_oracle_retries: int = 2
     heartbeat_interval: float = 5.0
+    # dynamic_oracle_list drop threshold: waiting inputs whose fresh
+    # max-component committee std fell to or below this are dropped (stale —
+    # the retrained committee is no longer uncertain about them).  The
+    # runtime plumbs PALRunConfig.std_threshold here; 0.0 keeps entries with
+    # any disagreement at all.
+    std_threshold: float = 0.0
 
 
 class OracleEndpoint:
@@ -222,8 +247,8 @@ class Manager:
         trainer_channels: Sequence[Channel],
         cfg: ManagerConfig,
         monitor: Optional[Monitor] = None,
-        adjust_fn: Optional[Callable] = None,   # dynamic_oracle_list hook
-        fresh_predict: Optional[Callable] = None,  # inputs -> (K,n,out)
+        adjust_fn: Optional[Callable] = None,   # (items, UQResult) -> items
+        fresh_score: Optional[Callable] = None,  # inputs -> UQResult
     ):
         self.oracle_buffer = oracle_buffer
         self.train_buffer = train_buffer
@@ -234,7 +259,7 @@ class Manager:
         self.heartbeat = Heartbeat(cfg.heartbeat_interval)
         self.endpoints: Dict[str, OracleEndpoint] = {}
         self.adjust_fn = adjust_fn
-        self.fresh_predict = fresh_predict
+        self.fresh_score = fresh_score
         self.releases = 0
         self._retrain_completions_seen = 0
 
@@ -336,16 +361,28 @@ class Manager:
 
     def _adjust_oracle_buffer(self):
         """dynamic_oracle_list: re-score waiting inputs with the freshest
-        committee and drop/reorder (paper SI Utilities)."""
-        if self.fresh_predict is None:
+        committee and drop/reorder (paper SI Utilities).
+
+        ``fresh_score`` is the SAME acquisition engine the exchange loop
+        uses — one ``UQResult`` (scalar_std for the drop decision,
+        component_std for the ranking) replaces the former stacked
+        ``(K, n_buf, out_dim)`` host tensor + float64 recompute."""
+        if self.fresh_score is None:
             return
-        items = self.oracle_buffer.snapshot()
+        items, enq0 = self.oracle_buffer.snapshot_for_adjust()
         if not items:
             return
-        preds = self.fresh_predict(items)
+        uq = self.fresh_score(items)
         if self.adjust_fn is not None:
-            new_items = self.adjust_fn(items, preds)
+            new_items = self.adjust_fn(items, uq)
         else:
-            new_items = sel.adjust_input_for_oracle(items, preds, 0.0)
-        self.oracle_buffer.restore(new_items)
+            # honor_selection: whatever the engine's rule pipeline just
+            # re-selected survives even below the drop threshold, so a
+            # custom policy (e.g. top-fraction) is never contradicted here
+            new_items = sel.adjust_input_for_oracle_uq(
+                items, uq, self.cfg.std_threshold, honor_selection=True)
+        # merge, don't restore: the Exchange thread kept enqueueing while
+        # the engine scored the snapshot — those must survive un-dropped
+        self.oracle_buffer.merge_adjusted(new_items, enq0,
+                                          snapshot_len=len(items))
         self.monitor.incr("manager.buffer_adjusts")

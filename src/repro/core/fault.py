@@ -86,6 +86,13 @@ class TaskLedger:
         with self._lock:
             return len(self._inflight)
 
+    def inflight_payloads(self) -> List[Any]:
+        """Payloads of every dispatched-but-unfinished task (checkpoint
+        path: in-flight oracle work is requeued into the snapshot so a
+        restore never silently loses dispatched-but-unlabeled inputs)."""
+        with self._lock:
+            return [t.payload for t in self._inflight.values()]
+
 
 class Heartbeat:
     """Worker liveness tracking (interval-based miss counting)."""

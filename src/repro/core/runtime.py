@@ -1,6 +1,17 @@
 """PAL runtime: wires the five kernels into a running, fault-tolerant,
 checkpointable system (paper Fig. 2 + DESIGN.md §2).
 
+Acquisition is config-driven: ``PAL.__init__`` builds ONE
+``core/acquisition.UQEngine`` from ``PALRunConfig`` (``uq_impl`` /
+``uq_block_n`` / ``uq_bucket`` / ``std_threshold``) via
+``acquisition.make_engine`` and installs it on the PredictionPool; the
+Exchange hot loop and the Manager's ``dynamic_oracle_list`` consume the
+same engine's ``UQResult``.  Pass ``committee=CommitteeSpec(apply_fn,
+cparams)`` to get the fused single-dispatch backends (custom selection via
+``rules=`` stays fused — rules compile into the dispatch); omit it and the
+engine falls back to per-member ``UserModel.predict`` (the paper's
+structure) with identical selection semantics.
+
 In-process realization: each kernel pool runs on threads (JAX releases the
 GIL inside compiled code, so committee inference / retraining / oracle calls
 genuinely overlap); the transport layer is MPI-shaped so the controller
@@ -8,7 +19,8 @@ logic matches the paper's process-based structure.  The ``task_per_node`` /
 ``gpu_*`` placement knobs of the paper map to ``placement`` here (recorded,
 applied as device hints where meaningful on this host).
 
-Beyond the paper: whole-state checkpoint/restart, oracle heartbeats with
+Beyond the paper: whole-state checkpoint/restart (including requeue of
+dispatched-but-unlabeled oracle work), oracle heartbeats with
 timeout->requeue, elastic pool resize, and monitoring (see core/fault.py,
 core/al_checkpoint.py, core/monitor.py).
 """
@@ -25,6 +37,7 @@ log = logging.getLogger(__name__)
 import numpy as np
 
 from repro.configs.pal_potential import PALRunConfig
+from repro.core import acquisition as acq
 from repro.core.al_checkpoint import ALCheckpointer
 from repro.core.buffers import OracleInputBuffer, TrainingDataBuffer
 from repro.core.controller import (
@@ -50,10 +63,10 @@ class PAL:
         make_generator: Callable[[int, str], Any],        # rank, result_dir
         make_model: Callable[[int, str, int, str], Any],  # rank, dir, dev, mode
         make_oracle: Callable[[int, str], Any],
-        prediction_check: Optional[Callable] = None,
+        committee: Optional[acq.CommitteeSpec] = None,
+        rules: Optional[Sequence[acq.SelectionRule]] = None,
         adjust_input_for_oracle: Optional[Callable] = None,
         predict_all_override: Optional[Callable] = None,
-        fused_engine: Optional[Any] = None,   # committee.FusedPredictSelect
         resume: bool = False,
     ):
         self.cfg = run_cfg
@@ -63,8 +76,15 @@ class PAL:
         # --- kernel instances (paper: one object per MPI process) ----------
         self.generators = [make_generator(i, rd)
                            for i in range(run_cfg.gene_process)]
+        # per-member prediction models exist only for the legacy backend
+        # without a predict_all_override; fused engines score the stacked
+        # committee directly (and an override supplies raw predictions
+        # itself), so pred_process full model instances would be dead weight
+        need_models = (predict_all_override is None
+                       and acq.wants_legacy(run_cfg, committee))
         self.predictors = [make_model(i, rd, i, "predict")
-                           for i in range(run_cfg.pred_process)]
+                           for i in range(run_cfg.pred_process)] \
+            if need_models else []
         self.trainers = [make_model(i, rd, i, "train")
                          for i in range(run_cfg.ml_process)]
         self._make_oracle = make_oracle
@@ -79,8 +99,16 @@ class PAL:
 
         self.prediction_pool = PredictionPool(
             self.predictors, self.store, self.monitor,
-            predict_all_override=predict_all_override,
-            fused_engine=fused_engine)
+            predict_all_override=predict_all_override)
+        # ONE acquisition engine from config — exchange hot loop and
+        # dynamic_oracle_list both consume its UQResult (a user
+        # predict_all_override controls the raw predictions, so it forces
+        # the legacy backend)
+        self.engine = acq.make_engine(
+            run_cfg, committee=committee, rules=rules,
+            predict_all=self.prediction_pool.predict_all,
+            force_legacy=predict_all_override is not None)
+        self.prediction_pool.engine = self.engine
         self.exchange = Exchange(
             self.generators, self.prediction_pool, self.oracle_buffer,
             ExchangeConfig(
@@ -90,12 +118,15 @@ class PAL:
                 progress_save_interval=run_cfg.progress_save_interval,
                 min_interval=run_cfg.exchange_min_interval,
             ),
-            self.monitor, prediction_check=prediction_check,
+            self.monitor,
         )
 
-        def fresh_predict(items):
-            return self.prediction_pool.predict_all(
-                [np.asarray(x) for x in items])
+        def fresh_score(items):
+            # own timer: buffer re-scoring (incl. first-time compiles of
+            # buffer-sized shape buckets) must not pollute the exchange
+            # hot-path metric
+            with self.monitor.timer("manager.fresh_score"):
+                return self.engine.score([np.asarray(x) for x in items])
 
         self.manager = Manager(
             self.oracle_buffer, self.train_buffer, self.trainer_channels,
@@ -104,10 +135,11 @@ class PAL:
                 dynamic_oracle_list=run_cfg.dynamic_oracle_list,
                 oracle_timeout=run_cfg.oracle_timeout,
                 max_oracle_retries=run_cfg.max_oracle_retries,
+                std_threshold=run_cfg.std_threshold,
             ),
             self.monitor,
             adjust_fn=adjust_input_for_oracle,
-            fresh_predict=fresh_predict,
+            fresh_score=fresh_score,
         )
 
         # --- runtime machinery ----------------------------------------------
@@ -253,11 +285,15 @@ class PAL:
 
     # ----------------------------------------------------------- checkpoint
     def checkpoint(self) -> str:
+        # in-flight oracle tasks (dispatched, not yet labeled) are requeued
+        # into the snapshot: a restore re-dispatches them instead of
+        # silently losing selected inputs whose labels never arrived
         state = {
             "weights": {i: w for i, w in
                         [(i, self.store.pull_packed(i)) for i in
                          range(self.cfg.ml_process)] if w is not None},
-            "oracle_buffer": self.oracle_buffer.snapshot(),
+            "oracle_buffer": (self.oracle_buffer.snapshot()
+                              + self.manager.ledger.inflight_payloads()),
             "train_buffer": self.train_buffer.snapshot(),
             "patience": self.exchange.patience.state_dict(),
             "iteration": self.exchange.iteration,

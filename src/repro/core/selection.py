@@ -1,9 +1,13 @@
 """Centralized uncertainty-driven selection (paper §2.5 + SI Utilities).
 
-``prediction_check`` is the controller-side function deciding (a) which
-generator proposals go to the oracle and (b) what each generator receives
-back.  ``adjust_input_for_oracle`` re-prioritizes the oracle buffer with the
-freshest committee (``dynamic_oracle_list``).  ``PatienceTracker`` implements
+``prediction_check`` is the paper's controller-side function deciding (a)
+which generator proposals go to the oracle and (b) what each generator
+receives back; on the unified path the acquisition engine
+(core/acquisition.py) makes that decision and ``selection_from_uq`` routes
+its ``UQResult`` into a ``SelectionResult``.  ``adjust_input_for_oracle``
+(and its ``_uq`` variant consuming engine statistics) re-prioritizes the
+oracle buffer with the freshest committee (``dynamic_oracle_list``).
+``PatienceTracker`` implements
 the generator-side "allow trajectories to propagate into regions of high
 uncertainty for a given number of steps" policy (§2.2) — decision logic is
 the generator's, UQ stays central, exactly as the paper splits it.
@@ -67,8 +71,8 @@ def prediction_check_fast(
 ) -> SelectionResult:
     """Fast-path ``prediction_check`` consuming precomputed device UQ.
 
-    The fused exchange engine (committee.FusedPredictSelect) already
-    computed mean / ddof-1 scalar std / threshold mask on device in the same
+    The fused acquisition engine (acquisition.FusedEngine) already computed
+    mean / ddof-1 scalar std / selection mask on device in the same
     dispatch as the committee forward; this just routes them — no float64
     recompute, no (K, n_gen, out_dim) host tensor.  Semantics match
     ``prediction_check`` exactly (same SelectionResult for the same
@@ -83,6 +87,22 @@ def prediction_check_fast(
         mean = mean.copy()
         mean[mask] = flag_value
     return SelectionResult(inputs_to_oracle, list(mean), mask, scalar_std)
+
+
+def selection_from_uq(
+    list_data_to_pred: Sequence[np.ndarray],
+    uq,                                         # acquisition.UQResult
+    flag_value: Optional[float] = None,
+) -> SelectionResult:
+    """Route an acquisition-engine ``UQResult`` into a SelectionResult.
+
+    The engine already computed mean / std statistics AND the final rule
+    mask (device-side on fused backends); this only materializes the
+    per-generator scatter lists.  Semantics match ``prediction_check``
+    exactly for the default threshold rule.
+    """
+    return prediction_check_fast(list_data_to_pred, uq.mean, uq.scalar_std,
+                                 uq.mask, flag_value)
 
 
 def adjust_input_for_oracle(
@@ -103,6 +123,35 @@ def adjust_input_for_oracle(
     keep = [int(i) for i in order
             if (std[i] > threshold).any()]
     return [to_orcl_buffer[i] for i in keep]
+
+
+def adjust_input_for_oracle_uq(
+    to_orcl_buffer: List[np.ndarray],
+    uq,                                         # acquisition.UQResult
+    threshold: float,
+    honor_selection: bool = False,
+) -> List[np.ndarray]:
+    """``adjust_input_for_oracle`` consuming an engine ``UQResult``: sort
+    waiting oracle inputs by mean-over-components committee std
+    (descending, ``uq.component_std``) and drop entries whose max-component
+    std no longer exceeds ``threshold`` (``(std > t).any(components) ==
+    scalar_std > t``).  Same kept-order semantics as the stacked-preds
+    port, with no ``(K, n_buf, out_dim)`` host tensor and no float64
+    recompute — the statistics come straight off the device pass.
+
+    ``honor_selection``: additionally keep every entry the engine's OWN
+    rule pipeline re-selected (``uq.mask``) even if below ``threshold`` —
+    under the default threshold rule this is a no-op (mask == scalar_std >
+    threshold for the same configured value), but with a custom pipeline
+    (e.g. top-fraction) it guarantees the re-prioritization never drops a
+    sample the active selection policy just chose."""
+    if not to_orcl_buffer:
+        return []
+    order = np.argsort(np.asarray(uq.component_std))[::-1]
+    keep_mask = np.asarray(uq.scalar_std) > threshold
+    if honor_selection:
+        keep_mask = keep_mask | np.asarray(uq.mask, dtype=bool)
+    return [to_orcl_buffer[int(i)] for i in order if keep_mask[int(i)]]
 
 
 class PatienceTracker:

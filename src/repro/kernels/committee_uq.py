@@ -1,11 +1,16 @@
 """Pallas TPU kernel for fused committee uncertainty quantification.
 
-One streaming pass over the committee axis computes everything the exchange
-loop's central ``prediction_check`` needs:
+One streaming pass over the committee axis computes everything the
+acquisition engine (core/acquisition.py) needs — for BOTH the exchange
+loop's central check and the Manager's ``dynamic_oracle_list``
+re-prioritization:
 
   * committee mean                       (n, d)  fp32
   * scalar disagreement per sample       (n,)    fp32  — max over output
     components of the ddof=1 std (the quantity the paper thresholds)
+  * component disagreement per sample    (n,)    fp32  — mean over output
+    components of the same std (the ``adjust_input_for_oracle`` ranking
+    score), finalized from the same Welford state at zero extra passes
   * uncertainty mask ``scalar_std > threshold``  (n,)  uint8
 
 The K axis is the sequential innermost grid dimension; per-row Welford
@@ -28,7 +33,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _kernel(preds_ref, mean_ref, sstd_ref, mask_ref, m2_ref,
+def _kernel(preds_ref, mean_ref, sstd_ref, cstd_ref, mask_ref, m2_ref,
             *, n_members: int, threshold: float):
     k = pl.program_id(1)
     x = preds_ref[0].astype(jnp.float32)               # (bn, d)
@@ -56,6 +61,7 @@ def _kernel(preds_ref, mean_ref, sstd_ref, mask_ref, m2_ref,
         std = jnp.sqrt(var)                            # (bn, d)
         sstd = jnp.max(std, axis=-1)                   # (bn,)
         sstd_ref[...] = sstd
+        cstd_ref[...] = jnp.mean(std, axis=-1)         # (bn,)
         mask_ref[...] = (sstd > threshold).astype(jnp.uint8)
 
 
@@ -66,9 +72,12 @@ def committee_uq(
     block_n: int = 128,
     interpret: bool = False,
 ):
-    """Fused mean / ddof-1 scalar std / threshold mask over the K axis.
+    """Fused mean / ddof=1 std statistics / threshold mask over the K axis.
 
-    Returns ``(mean (n, d) fp32, scalar_std (n,) fp32, mask (n,) bool)``.
+    Returns ``(mean (n, d) fp32, scalar_std (n,) fp32,
+    component_std (n,) fp32, mask (n,) bool)`` — scalar_std is the
+    max-over-components std (the exchange check quantity), component_std
+    the mean-over-components std (the oracle re-prioritization score).
     """
     K, n, d = preds.shape
     bn = min(block_n, n)
@@ -84,13 +93,14 @@ def committee_uq(
     mean_spec = pl.BlockSpec((bn, d), lambda i, k: (i, 0))
     row_spec = pl.BlockSpec((bn,), lambda i, k: (i,))
 
-    mean, sstd, mask = pl.pallas_call(
+    mean, sstd, cstd, mask = pl.pallas_call(
         kernel,
         grid=(nb, K),
         in_specs=[pspec],
-        out_specs=[mean_spec, row_spec, row_spec],
+        out_specs=[mean_spec, row_spec, row_spec, row_spec],
         out_shape=[
             jax.ShapeDtypeStruct((npad, d), jnp.float32),
+            jax.ShapeDtypeStruct((npad,), jnp.float32),
             jax.ShapeDtypeStruct((npad,), jnp.float32),
             jax.ShapeDtypeStruct((npad,), jnp.uint8),
         ],
@@ -98,5 +108,5 @@ def committee_uq(
         interpret=interpret,
     )(preds)
     if pad:
-        mean, sstd, mask = mean[:n], sstd[:n], mask[:n]
-    return mean, sstd, mask.astype(jnp.bool_)
+        mean, sstd, cstd, mask = mean[:n], sstd[:n], cstd[:n], mask[:n]
+    return mean, sstd, cstd, mask.astype(jnp.bool_)

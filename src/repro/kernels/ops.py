@@ -63,11 +63,14 @@ def attention(
 
 def committee_uq(preds, threshold: float, *, impl: str = _DEFAULT_IMPL,
                  block_n: int = 128):
-    """Fused committee-UQ for the PAL exchange loop.
+    """Fused committee-UQ for the PAL acquisition engine.
 
     preds: (K, n, d) stacked committee predictions (one vmapped forward).
-    Returns (mean (n, d) fp32, scalar_std (n,) fp32, mask (n,) bool) — the
-    ONLY tensors the controller ships back to host, replacing the seed
+    Returns (mean (n, d) fp32, scalar_std (n,) fp32, component_std (n,)
+    fp32, mask (n,) bool) — the ONLY tensors the controller ever ships back
+    to host.  scalar_std (max over components) feeds the exchange check;
+    component_std (mean over components, same Welford pass) feeds the
+    Manager's dynamic_oracle_list re-prioritization, replacing the seed
     path's full (K, n, d) round trip + float64 NumPy std recompute.
     """
     if impl in ("pallas", "pallas_interpret"):

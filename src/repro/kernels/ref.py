@@ -20,12 +20,15 @@ import jax.numpy as jnp
 
 
 def committee_uq_ref(preds: jnp.ndarray, threshold: float):
-    """Committee mean / ddof-1 scalar std / threshold mask in one program.
+    """Committee mean / ddof=1 std statistics / threshold mask in one program.
 
     preds: (K, n, d).  Returns (mean (n, d) fp32, scalar_std (n,) fp32,
-    mask (n,) bool).  scalar_std is the max over output components of the
-    per-component ddof=1 std — the quantity the paper's prediction_check
-    thresholds ((std > t).any over components == scalar_std > t).
+    component_std (n,) fp32, mask (n,) bool).  scalar_std is the max over
+    output components of the per-component ddof=1 std — the quantity the
+    paper's prediction_check thresholds ((std > t).any over components ==
+    scalar_std > t); component_std is the mean over components of the same
+    std — the ranking score of adjust_input_for_oracle
+    (dynamic_oracle_list), emitted from the same statistics pass.
     """
     p = preds.astype(jnp.float32)
     K = p.shape[0]
@@ -35,7 +38,8 @@ def committee_uq_ref(preds: jnp.ndarray, threshold: float):
     else:
         std = jnp.zeros_like(mean)
     scalar_std = jnp.max(std, axis=-1)
-    return mean, scalar_std, scalar_std > jnp.float32(threshold)
+    component_std = jnp.mean(std, axis=-1)
+    return mean, scalar_std, component_std, scalar_std > jnp.float32(threshold)
 
 
 # ---------------------------------------------------------------------------

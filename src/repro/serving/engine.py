@@ -44,6 +44,7 @@ class ServeEngine:
         self.temperature = temperature
         self.rng = jax.random.PRNGKey(seed)
         cfg = model.cfg
+        self._n_prefix = cfg.vision_tokens if cfg.family == "vlm" else 0
         self._prefill = jax.jit(model_zoo.make_prefill_fn(model))
         decode_fn = model_zoo.make_decode_fn(model)
         self._decode = jax.jit(decode_fn, donate_argnums=(2,))
@@ -59,8 +60,7 @@ class ServeEngine:
                  max_new_tokens: int) -> GenerationResult:
         tokens = jnp.asarray(batch_inputs["tokens"], jnp.int32)
         B, T = tokens.shape
-        cfg = self.model.cfg
-        n_prefix = cfg.vision_tokens if cfg.family == "vlm" else 0
+        n_prefix = self._n_prefix
         cache = self.model.init_cache(B, self.max_seq)
 
         t0 = time.perf_counter()

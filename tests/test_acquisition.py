@@ -1,0 +1,568 @@
+"""Unified acquisition engine tests: backend parity (fused Pallas /
+fused XLA / per-member legacy produce identical SelectionResults — incl.
+flag_value, patience restarts, and the component-std path), device-side
+rules vs their host equivalents (top_fraction, diversity_filter), the
+config-driven factory, and the Manager consuming UQResult for
+dynamic_oracle_list."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.pal_potential import PALRunConfig
+from repro.core import acquisition as acq
+from repro.core import committee as cmte
+from repro.core import selection as sel
+from repro.core.buffers import OracleInputBuffer, TrainingDataBuffer
+from repro.core.controller import Manager, ManagerConfig
+
+
+K, IN_DIM, OUT_DIM = 5, 6, 3
+
+
+def _committee(seed=0):
+    rng = np.random.RandomState(seed)
+    members = [{"w": jnp.asarray(rng.randn(IN_DIM, OUT_DIM)
+                                 .astype(np.float32) * 0.5)}
+               for _ in range(K)]
+    return members, cmte.stack_members(members), (lambda p, x: x @ p["w"])
+
+
+def _predict_all(members):
+    def predict_all(xs):
+        x = np.stack([np.asarray(v, np.float32) for v in xs])
+        return np.stack([x @ np.asarray(m["w"]) for m in members])
+    return predict_all
+
+
+def _inputs(n, seed=1):
+    rng = np.random.RandomState(seed)
+    return [rng.randn(IN_DIM).astype(np.float32) for _ in range(n)]
+
+
+def _safe_threshold(scores):
+    """A threshold in the widest gap of the score distribution, so fp32
+    device statistics and fp64 host statistics cannot disagree on the
+    selection near the boundary."""
+    s = np.sort(np.asarray(scores, dtype=np.float64))
+    gaps = np.diff(s)
+    i = int(np.argmax(gaps))
+    return float((s[i] + s[i + 1]) / 2.0)
+
+
+def _engines(members, cparams, apply_fn, threshold, rules=None):
+    return {
+        "fused_xla": acq.FusedEngine(apply_fn, cparams, threshold,
+                                     rules=rules, impl="xla"),
+        "fused_pallas": acq.FusedEngine(apply_fn, cparams, threshold,
+                                        rules=rules, impl="pallas_interpret"),
+        "legacy": acq.LegacyEngine(_predict_all(members), threshold,
+                                   rules=rules),
+    }
+
+
+# ---------------------------------------------------------------------------
+# backend parity
+# ---------------------------------------------------------------------------
+
+
+def test_backends_produce_identical_selection_results():
+    members, cparams, apply_fn = _committee()
+    inputs = _inputs(13)
+    probe = acq.LegacyEngine(_predict_all(members), 0.0).score(inputs)
+    t = _safe_threshold(probe.scalar_std)
+
+    results = {}
+    for name, eng in _engines(members, cparams, apply_fn, t).items():
+        uq = eng.score(inputs)
+        results[name] = (uq, sel.selection_from_uq(inputs, uq))
+    ref_uq, ref_res = results["legacy"]
+    assert ref_res.uncertain_mask.any() and not ref_res.uncertain_mask.all()
+    for name, (uq, res) in results.items():
+        np.testing.assert_array_equal(res.uncertain_mask,
+                                      ref_res.uncertain_mask, err_msg=name)
+        np.testing.assert_allclose(uq.scalar_std, ref_uq.scalar_std,
+                                   rtol=1e-4, atol=1e-5, err_msg=name)
+        np.testing.assert_allclose(uq.component_std, ref_uq.component_std,
+                                   rtol=1e-4, atol=1e-5, err_msg=name)
+        assert len(res.inputs_to_oracle) == len(ref_res.inputs_to_oracle)
+        for a, b in zip(res.inputs_to_oracle, ref_res.inputs_to_oracle):
+            np.testing.assert_array_equal(a, b, err_msg=name)
+        for a, b in zip(res.data_to_generators, ref_res.data_to_generators):
+            np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5,
+                                       err_msg=name)
+
+
+def test_backends_agree_on_flag_value():
+    members, cparams, apply_fn = _committee(seed=3)
+    inputs = _inputs(9, seed=4)
+    probe = acq.LegacyEngine(_predict_all(members), 0.0).score(inputs)
+    t = _safe_threshold(probe.scalar_std)
+    flagged = {}
+    for name, eng in _engines(members, cparams, apply_fn, t).items():
+        res = sel.selection_from_uq(inputs, eng.score(inputs),
+                                    flag_value=0.0)
+        flagged[name] = res
+    ref = flagged["legacy"]
+    assert ref.uncertain_mask.any()
+    for name, res in flagged.items():
+        for i, (a, b) in enumerate(zip(res.data_to_generators,
+                                       ref.data_to_generators)):
+            np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5,
+                                       err_msg=f"{name}[{i}]")
+        # flagged rows are exactly the selected rows, zeroed
+        for i in np.where(ref.uncertain_mask)[0]:
+            np.testing.assert_array_equal(res.data_to_generators[i], 0.0)
+
+
+def test_backends_agree_on_patience_restarts():
+    """Same committee, same deterministic generator stream -> identical
+    restart schedule under every backend."""
+    members, cparams, apply_fn = _committee(seed=5)
+    inputs_stream = [_inputs(6, seed=100 + s) for s in range(10)]
+    all_scores = np.concatenate([
+        acq.LegacyEngine(_predict_all(members), 0.0).score(b).scalar_std
+        for b in inputs_stream])
+    t = float(np.median(all_scores))        # roughly half uncertain per step
+
+    schedules = {}
+    for name, eng in _engines(members, cparams, apply_fn, t).items():
+        tracker = sel.PatienceTracker(6, patience=1)
+        restarts = []
+        for batch in inputs_stream:
+            res = sel.selection_from_uq(batch, eng.score(batch))
+            restarts.append(tracker.step(res.uncertain_mask).copy())
+        schedules[name] = (np.stack(restarts), tracker.restarts.copy())
+    ref_sched, ref_counts = schedules["legacy"]
+    assert ref_counts.sum() > 0             # the schedule actually restarts
+    for name, (sched, counts) in schedules.items():
+        np.testing.assert_array_equal(sched, ref_sched, err_msg=name)
+        np.testing.assert_array_equal(counts, ref_counts, err_msg=name)
+
+
+# ---------------------------------------------------------------------------
+# device rules vs host equivalents
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("fraction", [0.0, 0.1, 0.25, 0.3, 0.5, 0.7, 0.9,
+                                      1.0])
+def test_top_fraction_rule_matches_host(fraction):
+    members, cparams, apply_fn = _committee(seed=6)
+    inputs = _inputs(16, seed=7)
+    rules = (acq.TopFractionRule(fraction),)
+    host_uq = acq.LegacyEngine(_predict_all(members), 0.0).score(inputs)
+    want = np.zeros(len(inputs), bool)
+    want[sel.top_fraction(host_uq.scalar_std, fraction)] = True
+    for name, eng in _engines(members, cparams, apply_fn, 0.0,
+                              rules=rules).items():
+        got = eng.score(inputs).mask
+        np.testing.assert_array_equal(got, want, err_msg=name)
+
+
+def test_top_fraction_rule_invariant_to_bucket_padding():
+    """k is computed from the TRUE n (traced scalar), not the padded
+    bucket, and padding rows are never selected."""
+    members, cparams, apply_fn = _committee(seed=8)
+    eng = acq.FusedEngine(apply_fn, cparams, 0.0,
+                          rules=(acq.TopFractionRule(0.5),), impl="xla",
+                          min_bucket=32)          # heavy padding for n=6
+    inputs = _inputs(6, seed=9)
+    mask = eng.score(inputs).mask
+    assert mask.shape == (6,)
+    assert mask.sum() == 3                         # round(0.5 * 6)
+
+
+def test_diversity_rule_matches_host_filter():
+    members, cparams, apply_fn = _committee(seed=10)
+    rng = np.random.RandomState(11)
+    # clustered inputs so the min_dist filter actually bites
+    centers = rng.randn(4, IN_DIM) * 2.0
+    inputs = [np.asarray(centers[i % 4] + rng.randn(IN_DIM) * 1e-3,
+                         np.float32) for i in range(12)]
+    min_dist = 0.5
+    host_uq = acq.LegacyEngine(_predict_all(members), 0.0).score(inputs)
+    # host equivalent: visit candidates in descending-uncertainty order
+    order = np.argsort(-host_uq.scalar_std, kind="stable")
+    kept = sel.diversity_filter(inputs, order, min_dist)
+    want = np.zeros(len(inputs), bool)
+    want[kept] = True
+    rules = (acq.DiversityRule(min_dist),)
+    for name, eng in _engines(members, cparams, apply_fn, 0.0,
+                              rules=rules).items():
+        got = eng.score(inputs).mask
+        np.testing.assert_array_equal(got, want, err_msg=name)
+    assert 0 < want.sum() < len(inputs)            # the filter did something
+
+
+def test_diversity_rule_accurate_for_large_norm_inputs():
+    """Distances come from direct differences, not the fp32 Gram identity —
+    large-offset inputs (e.g. MD coordinates far from the origin) must not
+    flip keep/drop decisions near min_dist."""
+    members, cparams, apply_fn = _committee(seed=20)
+    rng = np.random.RandomState(21)
+    offset = np.full(IN_DIM, 1000.0, np.float32)
+    # pairs at true distance ~0.7 (> min_dist) and ~0.05 (< min_dist)
+    base = [offset + rng.randn(IN_DIM).astype(np.float32) * 5.0
+            for _ in range(5)]
+    inputs = []
+    for b in base:
+        inputs.append(b)
+        inputs.append((b + 0.7 / np.sqrt(IN_DIM)).astype(np.float32))
+        inputs.append((b + 0.05 / np.sqrt(IN_DIM)).astype(np.float32))
+    min_dist = 0.5
+    host_uq = acq.LegacyEngine(_predict_all(members), 0.0).score(inputs)
+    order = np.argsort(-host_uq.scalar_std, kind="stable")
+    want = np.zeros(len(inputs), bool)
+    want[sel.diversity_filter(inputs, order, min_dist)] = True
+    for name, eng in _engines(members, cparams, apply_fn, 0.0,
+                              rules=(acq.DiversityRule(min_dist),)).items():
+        np.testing.assert_array_equal(eng.score(inputs).mask, want,
+                                      err_msg=name)
+    assert 0 < want.sum() < len(inputs)
+
+
+@pytest.mark.parametrize("n,fraction", [
+    (5, 0.1),         # fp32 0.1*5 = 0.50000000745; host round(0.5) = 0
+    (5, 0.3),         # 1.5 rounds half-to-even -> 2 on both sides
+    (15, 0.1),        # 1.5 again, via an inexact fraction
+    (5, 0.5),         # exact half from an exact fraction: 2.5 -> 2
+    (45, 0.7),        # fp32 lands ON 31.5, float64 just below -> 31
+    (75, 0.14),       # fp32 just below a half, float64 just above -> 11
+    (90, 0.35),       # 31.5-boundary, float64 below -> 31
+    (100, 0.545),     # 54.5-boundary, float64 above -> 55
+])
+def test_top_fraction_rule_k_matches_host_round(n, fraction):
+    """k == int(round(n * fraction)) exactly for ANY (n, fraction) — the
+    device rule precomputes the host's float64 rounding at trace time, so
+    fp32 representation error can never flip a .5 boundary."""
+    members, cparams, apply_fn = _committee(seed=24)
+    inputs = _inputs(n, seed=25)
+    want_k = len(sel.top_fraction(np.arange(n, dtype=float), fraction))
+    assert want_k == int(round(n * fraction))
+    for name, eng in _engines(members, cparams, apply_fn, 0.0,
+                              rules=(acq.TopFractionRule(fraction),)).items():
+        assert int(eng.score(inputs).mask.sum()) == want_k, (name, fraction)
+
+
+def test_top_fraction_rule_exact_count_under_ties():
+    """Duplicate proposals (identical scores) must not push the selection
+    over the round(fraction * n) cap — the rule is an exact top-k."""
+    members, cparams, apply_fn = _committee(seed=22)
+    one = np.random.RandomState(23).randn(IN_DIM).astype(np.float32)
+    inputs = [one.copy() for _ in range(8)]       # all scores exactly equal
+    for name, eng in _engines(members, cparams, apply_fn, 0.0,
+                              rules=(acq.TopFractionRule(0.5),)).items():
+        mask = eng.score(inputs).mask
+        assert mask.sum() == 4, (name, mask)
+        # deterministic tie-break toward the lower index
+        np.testing.assert_array_equal(
+            mask, np.arange(8) < 4, err_msg=name)
+
+
+def test_threshold_rule_preserves_float64_on_host():
+    """The legacy backend thresholds in float64 (seed prediction_check
+    semantics) — the rule must not force a jnp fp32 downcast that merges
+    near-threshold values."""
+    sstd = np.array([0.25 + 1e-10, 0.25 - 1e-10], dtype=np.float64)
+    stats = acq.UQStats(x=None, mean=None, scalar_std=sstd,
+                        component_std=None, valid=np.ones(2, bool),
+                        n_valid=2)
+    mask = np.asarray(acq.ThresholdRule(0.25).apply(stats,
+                                                    np.ones(2, bool)))
+    assert list(mask) == [True, False]
+
+
+def test_fused_engine_concurrent_first_score_traces_once():
+    """Exchange and Manager threads share one engine: a fresh shape bucket
+    hit from both sides concurrently must still compile exactly once."""
+    import threading
+
+    members, cparams, apply_fn = _committee(seed=30)
+    eng = acq.FusedEngine(apply_fn, cparams, 0.1, impl="xla")
+    barrier = threading.Barrier(2)
+    errors = []
+
+    def worker(seed):
+        try:
+            barrier.wait()
+            for _ in range(5):
+                eng.score(_inputs(7, seed=seed))
+        except Exception as e:  # noqa: BLE001
+            errors.append(e)
+
+    threads = [threading.Thread(target=worker, args=(s,)) for s in (1, 2)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors
+    assert eng.trace_counts == {8: 1}
+
+
+def test_legacy_engine_skips_input_stack_without_diversity_rule():
+    members, _, _ = _committee(seed=31)
+    seen = {}
+
+    class Probe(acq.SelectionRule):
+        def apply(self, stats, mask):
+            seen["x"] = stats.x
+            return mask
+
+    acq.LegacyEngine(_predict_all(members), 0.1,
+                     rules=(acq.ThresholdRule(0.1), Probe())
+                     ).score(_inputs(4))
+    assert seen["x"] is None                   # nothing declared needs_inputs
+    acq.LegacyEngine(_predict_all(members), 0.1,
+                     rules=(acq.DiversityRule(0.1), Probe())
+                     ).score(_inputs(4))
+    assert seen["x"] is not None and seen["x"].shape == (4, IN_DIM)
+
+
+def test_rule_pipeline_composes_and_stays_single_trace():
+    """threshold -> top-fraction -> diversity, all inside one compiled
+    dispatch, one trace per bucket even as n varies."""
+    members, cparams, apply_fn = _committee(seed=12)
+    eng = acq.FusedEngine(
+        apply_fn, cparams, 0.0,
+        rules=(acq.ThresholdRule(0.0), acq.TopFractionRule(0.75),
+               acq.DiversityRule(0.05)),
+        impl="xla")
+    for n in (5, 8, 3, 7):
+        uq = eng.score(_inputs(n, seed=n))
+        assert uq.mask.shape == (n,)
+    assert eng.trace_counts == {8: 1}
+
+
+# ---------------------------------------------------------------------------
+# config-driven factory
+# ---------------------------------------------------------------------------
+
+
+def test_make_engine_auto_picks_fused_with_committee():
+    members, cparams, apply_fn = _committee()
+    cfg = PALRunConfig(std_threshold=0.3)
+    eng = acq.make_engine(cfg,
+                          committee=acq.CommitteeSpec(apply_fn, cparams))
+    assert isinstance(eng, acq.FusedEngine)
+    assert eng.impl == "xla" and not eng.uses_models
+
+
+def test_make_engine_auto_falls_back_to_legacy():
+    members, _, _ = _committee()
+    cfg = PALRunConfig(std_threshold=0.3)
+    eng = acq.make_engine(cfg, predict_all=_predict_all(members))
+    assert isinstance(eng, acq.LegacyEngine) and eng.uses_models
+
+
+def test_make_engine_honors_knobs():
+    members, cparams, apply_fn = _committee()
+    cfg = PALRunConfig(std_threshold=0.3, uq_impl="pallas_interpret",
+                       uq_block_n=64, uq_bucket=16)
+    eng = acq.make_engine(cfg,
+                          committee=acq.CommitteeSpec(apply_fn, cparams))
+    assert isinstance(eng, acq.FusedEngine)
+    assert eng.impl == "pallas_interpret"
+    assert eng.block_n == 64 and eng.min_bucket == 16
+    uq = eng.score(_inputs(3))
+    assert uq.mask.shape == (3,)
+    assert eng.trace_counts == {16: 1}             # floored at uq_bucket
+
+
+def test_make_engine_fused_impl_requires_committee():
+    cfg = PALRunConfig(uq_impl="pallas")
+    with pytest.raises(ValueError):
+        acq.make_engine(cfg, predict_all=lambda xs: np.zeros((2, 1, 1)))
+
+
+def test_make_engine_force_legacy_overrides_committee():
+    members, cparams, apply_fn = _committee()
+    cfg = PALRunConfig(uq_impl="xla")
+    eng = acq.make_engine(cfg,
+                          committee=acq.CommitteeSpec(apply_fn, cparams),
+                          predict_all=_predict_all(members),
+                          force_legacy=True)
+    assert isinstance(eng, acq.LegacyEngine)
+
+
+# ---------------------------------------------------------------------------
+# oracle re-prioritization on UQResult (dynamic_oracle_list)
+# ---------------------------------------------------------------------------
+
+
+def test_adjust_input_for_oracle_uq_matches_stacked_port():
+    rng = np.random.RandomState(13)
+    buf = [rng.randn(IN_DIM) for _ in range(9)]
+    preds = rng.randn(K, 9, OUT_DIM)
+    std = preds.std(axis=0, ddof=1)
+    t = _safe_threshold(std.max(axis=-1))
+    want = sel.adjust_input_for_oracle(buf, preds, t)
+    uq = acq.UQResult(preds.mean(axis=0), std.max(axis=-1),
+                      std.mean(axis=-1), std.max(axis=-1) > t)
+    got = sel.adjust_input_for_oracle_uq(buf, uq, t)
+    assert len(got) == len(want)
+    for a, b in zip(got, want):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_manager_drops_stale_entries_at_threshold():
+    """Satellite fix: ManagerConfig.std_threshold is actually used — stale
+    entries whose fresh committee std fell below it are DROPPED, not just
+    reordered (the old hard-coded 0.0 never dropped anything)."""
+    obuf = OracleInputBuffer()
+    tbuf = TrainingDataBuffer(retrain_size=1)
+    items = [np.full(2, float(i)) for i in range(4)]
+    obuf.put(items)
+    # fresh committee: items 0 and 2 confidently predicted now, 1 and 3 not
+    scalar_std = np.array([0.01, 0.9, 0.02, 0.5])
+    comp_std = scalar_std / 2
+
+    def fresh_score(xs):
+        return acq.UQResult(np.zeros((len(xs), 1)), scalar_std, comp_std,
+                            scalar_std > 0.1)
+
+    mgr = Manager(obuf, tbuf, [], ManagerConfig(std_threshold=0.1),
+                  fresh_score=fresh_score)
+    mgr.step(retrain_completions=1)
+    left = obuf.snapshot()
+    assert [int(x[0]) for x in left] == [1, 3]     # sorted by std desc
+    assert mgr.monitor.count("manager.buffer_adjusts") == 1
+
+
+def test_exchange_with_custom_rule_stays_single_dispatch():
+    """Acceptance: a user rule (top-fraction) runs through the fused path —
+    exchange.step() never materializes a (K, n_gen, out_dim) host tensor
+    (the engine's device->host traffic is exactly the four small UQ
+    arrays), and the manager's dynamic_oracle_list consumes the same
+    engine without ever calling the pool's stacked-prediction path."""
+    from repro.core.controller import (Exchange, ExchangeConfig,
+                                       PredictionPool)
+
+    members, cparams, apply_fn = _committee(seed=14)
+    eng = acq.FusedEngine(
+        apply_fn, cparams, 0.0,
+        rules=(acq.ThresholdRule(0.0), acq.TopFractionRule(0.5)),
+        impl="xla", min_bucket=8)
+
+    class Gene:
+        def __init__(self, rank):
+            self.rng = np.random.RandomState(rank)
+
+        def generate_new_data(self, data_to_gene):
+            return False, self.rng.randn(IN_DIM).astype(np.float32)
+
+        def save_progress(self):
+            pass
+
+    n_gen = 6
+    pool = PredictionPool([], None, engine=eng)
+    obuf = OracleInputBuffer()
+    ex = Exchange([Gene(i) for i in range(n_gen)], pool, obuf,
+                  ExchangeConfig(std_threshold=0.0, patience=10))
+    steps = 4
+    for _ in range(steps):
+        ex.step()
+    # top-fraction cap: exactly round(0.5 * 6) = 3 queued per step
+    assert len(obuf) == 3 * steps
+    # device->host bytes per step == the padded (mean, sstd, cstd, mask)
+    # arrays only: nb*(d*4 + 4 + 4 + 1) — nothing K-sized ever crosses
+    nb = 8
+    expected = steps * nb * (OUT_DIM * 4 + 4 + 4 + 1)
+    assert eng.bytes_to_host == expected
+    # dynamic_oracle_list on the SAME engine: stacked predict_all must
+    # never be touched (the pool has no members — it would raise)
+    tbuf = TrainingDataBuffer(retrain_size=1)
+    mgr = Manager(obuf, tbuf, [], ManagerConfig(std_threshold=0.0),
+                  fresh_score=lambda xs: eng.score(xs))
+    mgr.step(retrain_completions=1)
+    assert mgr.monitor.count("manager.buffer_adjusts") == 1
+    with pytest.raises(RuntimeError):
+        pool.predict_all([np.zeros(IN_DIM, np.float32)])
+
+
+def test_manager_adjust_keeps_items_enqueued_during_scoring():
+    """Items the Exchange thread enqueues WHILE the manager is re-scoring
+    the snapshot must survive the adjust — a blind restore would silently
+    drop freshly selected samples (AL data loss)."""
+    obuf = OracleInputBuffer()
+    tbuf = TrainingDataBuffer(retrain_size=1)
+    obuf.put([np.full(2, 0.0), np.full(2, 1.0)])
+    scalar_std = np.array([0.9, 0.8])
+
+    def fresh_score(xs):
+        # concurrent enqueue mid-scoring (the race window)
+        obuf.put([np.full(2, 42.0)])
+        return acq.UQResult(np.zeros((len(xs), 1)), scalar_std,
+                            scalar_std, scalar_std > 0.1)
+
+    mgr = Manager(obuf, tbuf, [], ManagerConfig(std_threshold=0.1),
+                  fresh_score=fresh_score)
+    mgr.step(retrain_completions=1)
+    left = [float(x[0]) for x in obuf.snapshot()]
+    assert left == [0.0, 1.0, 42.0]     # re-scored prefix + fresh suffix
+
+
+def test_manager_adjust_survives_bounded_buffer_trim():
+    """A max_size put-trim during scoring must neither drop the freshly
+    enqueued samples nor resurrect the trimmed stale ones — the appended
+    suffix is identified by enqueue generation, not list length."""
+    obuf = OracleInputBuffer(max_size=3)
+    tbuf = TrainingDataBuffer(retrain_size=1)
+    obuf.put([np.full(2, 0.0), np.full(2, 1.0), np.full(2, 2.0)])  # full
+    scalar_std = np.array([0.9, 0.8, 0.7])
+
+    def fresh_score(xs):
+        # concurrent enqueue trims item 0 out (buffer stays at max_size)
+        obuf.put([np.full(2, 42.0)])
+        assert [float(x[0]) for x in obuf.snapshot()] == [1.0, 2.0, 42.0]
+        return acq.UQResult(np.zeros((len(xs), 1)), scalar_std,
+                            scalar_std, scalar_std > 0.1)
+
+    mgr = Manager(obuf, tbuf, [], ManagerConfig(std_threshold=0.1),
+                  fresh_score=fresh_score)
+    mgr.step(retrain_completions=1)
+    left = [float(x[0]) for x in obuf.snapshot()]
+    # re-scored snapshot [0(.9), 1(.8), 2(.7)] + fresh [42]: overflow
+    # evicts the LOWEST-priority re-scored item (2, std .7) — never the
+    # most-uncertain head, never the fresh selection
+    assert left == [0.0, 1.0, 42.0]
+
+
+def test_manager_adjust_never_drops_policy_selected_items():
+    """Policy consistency: with a custom rule pipeline (e.g. top-fraction),
+    items the engine's OWN rules re-selected survive the re-prioritization
+    even when their absolute std sits below the manager's drop threshold."""
+    obuf = OracleInputBuffer()
+    tbuf = TrainingDataBuffer(retrain_size=1)
+    obuf.put([np.full(2, float(i)) for i in range(4)])
+    # all below the 0.5 drop threshold; a top-fraction policy re-selects
+    # the two most uncertain anyway
+    scalar_std = np.array([0.30, 0.10, 0.40, 0.20])
+    mask = np.zeros(4, bool)
+    mask[[2, 0]] = True                         # top-50% by scalar_std
+
+    def fresh_score(xs):
+        return acq.UQResult(np.zeros((len(xs), 1)), scalar_std,
+                            scalar_std / 2, mask)
+
+    mgr = Manager(obuf, tbuf, [], ManagerConfig(std_threshold=0.5),
+                  fresh_score=fresh_score)
+    mgr.step(retrain_completions=1)
+    left = [int(x[0]) for x in obuf.snapshot()]
+    assert left == [2, 0]       # policy picks kept (std-desc), rest dropped
+
+
+def test_manager_zero_threshold_keeps_any_disagreement():
+    obuf = OracleInputBuffer()
+    tbuf = TrainingDataBuffer(retrain_size=1)
+    obuf.put([np.zeros(2), np.ones(2)])
+    scalar_std = np.array([0.3, 0.6])
+
+    def fresh_score(xs):
+        return acq.UQResult(np.zeros((len(xs), 1)), scalar_std,
+                            scalar_std, scalar_std > 0.0)
+
+    mgr = Manager(obuf, tbuf, [], ManagerConfig(std_threshold=0.0),
+                  fresh_score=fresh_score)
+    mgr.step(retrain_completions=1)
+    assert len(obuf) == 2                          # reordered, none dropped
+    assert int(obuf.snapshot()[0][0]) == 1         # highest std first

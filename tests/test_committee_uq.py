@@ -1,12 +1,15 @@
-"""Fused committee-UQ engine tests: kernel parity (xla vs pallas_interpret
-vs NumPy ddof=1), K=1 edge case, the shape-bucketed jit cache (compiles at
-most once per bucket), fast-path prediction_check equivalence, vectorized
-diversity_filter semantics, and preallocated weight-pack buffers."""
+"""Fused committee-UQ tests: kernel parity (xla vs pallas_interpret vs
+NumPy ddof=1, incl. the component-std output), K=1 edge case, the
+shape-bucketed jit cache (compiles at most once per bucket), UQResult
+routing equivalence, vectorized diversity_filter semantics, and
+preallocated weight-pack buffers.  Engine backend/rule parity lives in
+tests/test_acquisition.py."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.core import acquisition as acq
 from repro.core import committee as cmte
 from repro.core import selection as sel
 from repro.core.buffers import OracleInputBuffer
@@ -31,14 +34,17 @@ def test_committee_uq_xla_vs_pallas_interpret(K, n, d):
     rng = np.random.RandomState(0)
     preds = jnp.asarray(rng.randn(K, n, d).astype(np.float32))
     t = 0.8
-    mx, sx, kx = ops.committee_uq(preds, t, impl="xla")
-    mp, sp, kp = ops.committee_uq(preds, t, impl="pallas_interpret")
+    mx, sx, cx, kx = ops.committee_uq(preds, t, impl="xla")
+    mp, sp, cp, kp = ops.committee_uq(preds, t, impl="pallas_interpret")
     np.testing.assert_allclose(np.asarray(mp), np.asarray(mx),
                                rtol=1e-5, atol=1e-6)
     np.testing.assert_allclose(np.asarray(sp), np.asarray(sx),
                                rtol=1e-4, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(cp), np.asarray(cx),
+                               rtol=1e-4, atol=1e-6)
     np.testing.assert_array_equal(np.asarray(kp), np.asarray(kx))
-    assert mx.shape == (n, d) and sx.shape == (n,) and kx.shape == (n,)
+    assert mx.shape == (n, d) and sx.shape == (n,)
+    assert cx.shape == (n,) and kx.shape == (n,)
 
 
 @pytest.mark.parametrize("impl", ["xla", "pallas_interpret"])
@@ -47,13 +53,18 @@ def test_committee_uq_matches_numpy_ddof1(impl):
     K, n, d = 6, 24, 3
     preds = rng.randn(K, n, d).astype(np.float32)
     t = 0.7
-    mean, sstd, mask = ops.committee_uq(jnp.asarray(preds), t, impl=impl)
-    want_std = preds.astype(np.float64).std(axis=0, ddof=1).max(axis=-1)
+    mean, sstd, cstd, mask = ops.committee_uq(jnp.asarray(preds), t,
+                                              impl=impl)
+    std64 = preds.astype(np.float64).std(axis=0, ddof=1)
+    want_sstd = std64.max(axis=-1)
+    want_cstd = std64.mean(axis=-1)
     np.testing.assert_allclose(np.asarray(mean), preds.mean(axis=0),
                                rtol=1e-5, atol=1e-6)
-    np.testing.assert_allclose(np.asarray(sstd), want_std,
+    np.testing.assert_allclose(np.asarray(sstd), want_sstd,
                                rtol=1e-4, atol=1e-6)
-    np.testing.assert_array_equal(np.asarray(mask), want_std > t)
+    np.testing.assert_allclose(np.asarray(cstd), want_cstd,
+                               rtol=1e-4, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(mask), want_sstd > t)
 
 
 @pytest.mark.parametrize("impl", ["xla", "pallas_interpret"])
@@ -61,10 +72,11 @@ def test_committee_uq_k1_zero_std(impl):
     """A single-member committee has zero disagreement by definition."""
     preds = jnp.asarray(np.random.RandomState(2).randn(1, 16, 4)
                         .astype(np.float32))
-    mean, sstd, mask = ops.committee_uq(preds, 1e-9, impl=impl)
+    mean, sstd, cstd, mask = ops.committee_uq(preds, 1e-9, impl=impl)
     np.testing.assert_allclose(np.asarray(mean), np.asarray(preds[0]),
                                rtol=1e-6)
     assert (np.asarray(sstd) == 0).all()
+    assert (np.asarray(cstd) == 0).all()
     assert not np.asarray(mask).any()
 
 
@@ -73,7 +85,7 @@ def test_committee_uq_mask_equals_anycomponent_semantics():
     rng = np.random.RandomState(3)
     preds = rng.randn(5, 20, 6).astype(np.float32)
     t = 0.9
-    _, _, mask = ops.committee_uq(jnp.asarray(preds), t, impl="xla")
+    _, _, _, mask = ops.committee_uq(jnp.asarray(preds), t, impl="xla")
     want = (preds.std(axis=0, ddof=1) > t).any(axis=-1)
     np.testing.assert_array_equal(np.asarray(mask), want)
 
@@ -91,16 +103,17 @@ def _mlp():
 
 def test_bucketed_jit_cache_compiles_once_per_bucket():
     _, cparams, apply_fn = _mlp()
-    eng = cmte.FusedPredictSelect(apply_fn, cparams, 0.3, impl="xla")
+    eng = acq.FusedEngine(apply_fn, cparams, 0.3, impl="xla")
     rng = np.random.RandomState(0)
     gen = lambda n: [rng.randn(6).astype(np.float32) for _ in range(n)]
     for n in (5, 8, 3, 7, 8, 1):          # all land in the n=8 bucket
-        mean, sstd, mask = eng(gen(n))
-        assert mean.shape == (n, 3) and sstd.shape == (n,)
+        uq = eng.score(gen(n))
+        assert uq.mean.shape == (n, 3) and uq.scalar_std.shape == (n,)
+        assert uq.component_std.shape == (n,)
     assert eng.trace_counts == {8: 1}
-    eng(gen(20))                           # new bucket: 32
-    eng(gen(32))
-    eng(gen(9))                            # new bucket: 16
+    eng.score(gen(20))                     # new bucket: 32
+    eng.score(gen(32))
+    eng.score(gen(9))                      # new bucket: 16
     assert eng.trace_counts == {8: 1, 32: 1, 16: 1}
     assert all(c == 1 for c in eng.trace_counts.values())
 
@@ -115,34 +128,34 @@ def test_shape_bucket_power_of_two():
 
 def test_fused_engine_matches_reference_uq():
     members, cparams, apply_fn = _mlp()
-    eng = cmte.FusedPredictSelect(apply_fn, cparams, 0.3, impl="xla")
+    eng = acq.FusedEngine(apply_fn, cparams, 0.3, impl="xla")
     rng = np.random.RandomState(4)
     inputs = [rng.randn(6).astype(np.float32) for _ in range(7)]
-    mean, sstd, mask = eng(inputs)
+    uq = eng.score(inputs)
     x = np.stack(inputs)
     preds = np.stack([np.asarray(x @ np.asarray(m["w"])) for m in members])
-    np.testing.assert_allclose(mean, preds.mean(axis=0), rtol=1e-4,
+    std = preds.std(axis=0, ddof=1)
+    np.testing.assert_allclose(uq.mean, preds.mean(axis=0), rtol=1e-4,
                                atol=1e-5)
-    np.testing.assert_allclose(
-        sstd, preds.std(axis=0, ddof=1).max(axis=-1), rtol=1e-4, atol=1e-5)
-    np.testing.assert_array_equal(
-        mask, preds.std(axis=0, ddof=1).max(axis=-1) > 0.3)
-    # predict_stacked: per-member outputs in one dispatch
-    np.testing.assert_allclose(eng.predict_stacked(inputs), preds,
+    np.testing.assert_allclose(uq.scalar_std, std.max(axis=-1),
                                rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(uq.component_std, std.mean(axis=-1),
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_array_equal(uq.mask, std.max(axis=-1) > 0.3)
 
 
-def test_fast_path_prediction_check_equivalence():
-    """prediction_check_fast(precomputed UQ) == prediction_check(preds)."""
+def test_selection_from_uq_equals_prediction_check():
+    """selection_from_uq(engine UQResult) == prediction_check(preds)."""
     rng = np.random.RandomState(5)
     inputs = [rng.randn(4) for _ in range(12)]
     preds = rng.randn(5, 12, 3)
     t = 0.8
     legacy = sel.prediction_check(inputs, preds, t)
-    mean, sstd, mask = ops.committee_uq(
+    mean, sstd, cstd, mask = ops.committee_uq(
         jnp.asarray(preds, dtype=jnp.float32), t, impl="xla")
-    fast = sel.prediction_check_fast(inputs, np.asarray(mean),
-                                     np.asarray(sstd), np.asarray(mask))
+    uq = acq.UQResult(np.asarray(mean), np.asarray(sstd), np.asarray(cstd),
+                      np.asarray(mask))
+    fast = sel.selection_from_uq(inputs, uq)
     np.testing.assert_array_equal(fast.uncertain_mask, legacy.uncertain_mask)
     np.testing.assert_allclose(fast.std, legacy.std, rtol=1e-4, atol=1e-5)
     assert len(fast.inputs_to_oracle) == len(legacy.inputs_to_oracle)
@@ -155,7 +168,7 @@ def test_fast_path_prediction_check_equivalence():
 def test_exchange_fused_path_matches_legacy():
     """Full Exchange loop: fused single-dispatch == sequential members."""
     members, cparams, apply_fn = _mlp()
-    eng = cmte.FusedPredictSelect(apply_fn, cparams, 0.3, impl="xla")
+    eng = acq.FusedEngine(apply_fn, cparams, 0.3, impl="xla")
 
     class Gene:
         def __init__(self, rank):
@@ -179,10 +192,11 @@ def test_exchange_fused_path_matches_legacy():
     cfg = ExchangeConfig(std_threshold=0.3, patience=2)
     ga, gb = [Gene(i) for i in range(5)], [Gene(i) for i in range(5)]
     oa, ob = OracleInputBuffer(), OracleInputBuffer()
+    # legacy pool: Exchange installs the per-member default engine
     ex_legacy = Exchange(ga, PredictionPool([Member(m) for m in members],
                                             None), oa, cfg)
-    ex_fused = Exchange(gb, PredictionPool([], None, fused_engine=eng),
-                        ob, cfg)
+    ex_fused = Exchange(gb, PredictionPool([], None, engine=eng), ob, cfg)
+    assert isinstance(ex_legacy.prediction.engine, acq.LegacyEngine)
     for _ in range(8):
         ex_legacy.step()
         ex_fused.step()
@@ -278,7 +292,7 @@ def test_fused_engine_refresh_replicates_members():
     """K=4 prediction committee fed by 2 trainers: member i replicates
     trainer i % 2, committee shape (and jit cache) preserved."""
     _, cparams, apply_fn = _mlp()                     # K = 4, w: (6, 3)
-    eng = cmte.FusedPredictSelect(apply_fn, cparams, 0.3, impl="xla")
+    eng = acq.FusedEngine(apply_fn, cparams, 0.3, impl="xla")
     store = WeightStore(2)
     w0 = np.full((6, 3), 2.0, np.float32)
     w1 = np.full((6, 3), 5.0, np.float32)
@@ -295,15 +309,27 @@ def test_fused_engine_refresh_replicates_members():
     assert eng.refresh_from(store) == 0               # nothing newer
 
 
-def test_fused_pool_with_override_falls_back_to_legacy():
-    """predict_all_override takes precedence over an installed fused
-    engine — the fast path must not bypass user-controlled predictions."""
+def test_pool_with_override_forces_legacy_engine():
+    """predict_all_override puts the user in control of raw predictions, so
+    the factory must route it through the legacy backend — and the pool
+    itself refuses a fused engine that would bypass the override."""
+    from repro.configs.pal_potential import PALRunConfig
+
     _, cparams, apply_fn = _mlp()
-    eng = cmte.FusedPredictSelect(apply_fn, cparams, 0.3, impl="xla")
-    pool = PredictionPool([], None, fused_engine=eng,
+    pool = PredictionPool([], None,
                           predict_all_override=lambda xs: np.zeros(
                               (4, len(xs), 3)))
-    assert not pool.supports_fused_uq
+    with pytest.raises(ValueError):
+        pool.engine = acq.FusedEngine(apply_fn, cparams, 0.3, impl="xla")
+    eng = acq.make_engine(
+        PALRunConfig(std_threshold=0.3),
+        committee=acq.CommitteeSpec(apply_fn, cparams),
+        predict_all=pool.predict_all, force_legacy=True)
+    assert isinstance(eng, acq.LegacyEngine)
+    pool.engine = eng
+    uq = pool.predict_uq([np.zeros(6, np.float32)])
+    assert uq.mean.shape == (1, 3)
+    assert not uq.mask.any()                   # zero preds -> zero std
     assert pool.predict_all([np.zeros(6, np.float32)]).shape == (4, 1, 3)
 
 

@@ -130,6 +130,31 @@ def test_pal_checkpoint_and_restore():
     assert pal2.monitor.count("runtime.restores") == 1
 
 
+def test_pal_checkpoint_requeues_inflight_oracle_work():
+    """Dispatched-but-unlabeled oracle inputs are part of the snapshot: a
+    restore re-queues them instead of silently losing selected samples."""
+    tmp = tempfile.mkdtemp()
+    pal = PAL(_cfg(tmp, orcl_process=0), make_generator=ToyGene,
+              make_model=ToyModel, make_oracle=ToyOracle)
+    # simulate the manager having dispatched work that never completed:
+    # two payloads in flight on the ledger, one still waiting in the buffer
+    waiting = np.full(4, 7.0, np.float32)
+    inflight_a = np.full(4, 8.0, np.float32)
+    inflight_b = np.full(4, 9.0, np.float32)
+    pal.oracle_buffer.put([waiting])
+    pal.manager.ledger.dispatch(inflight_a, "oracle0")
+    pal.manager.ledger.dispatch(inflight_b, "oracle0")
+    pal.checkpoint()
+
+    pal2 = PAL(_cfg(tmp, orcl_process=0), make_generator=ToyGene,
+               make_model=ToyModel, make_oracle=ToyOracle, resume=True)
+    restored = pal2.oracle_buffer.snapshot()
+    assert len(restored) == 3
+    got = sorted(float(x[0]) for x in restored)
+    assert got == [7.0, 8.0, 9.0]
+    assert pal2.manager.ledger.inflight_count() == 0   # requeued, not stuck
+
+
 def test_pal_elastic_oracle_resize():
     tmp = tempfile.mkdtemp()
 
