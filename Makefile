@@ -1,22 +1,28 @@
-# Tier-1 verification + fused-exchange benchmark smoke.
+# Tier-1 verification + fused-exchange benchmark smoke + docs checks.
 # `make check` is what CI runs (see .github/workflows/ci.yml).
 
 PY := python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: check test bench-smoke bench
+.PHONY: check test bench-smoke bench docs-check
 
-check: test bench-smoke
+check: test bench-smoke docs-check
 
 test:
 	$(PY) -m pytest -x -q
 
-# hot-path + example-rot smoke: quick fused-engine benchmark (writes
-# BENCH_committee_uq.json, uploaded as a CI artifact) and a short-budget
-# quickstart run through the full PAL loop
+# hot-path + example-rot smoke: quick fused-engine + budget-controller
+# benchmarks (write BENCH_*.json, uploaded as CI artifacts) and a
+# short-budget quickstart run through the full PAL loop
 bench-smoke:
 	$(PY) benchmarks/committee_uq.py --quick
+	$(PY) benchmarks/budget_controller.py --quick
 	$(PY) examples/quickstart.py --timeout 20
+
+# docs smoke: run every ```python snippet in README.md / docs/*.md and
+# verify intra-repo markdown links resolve
+docs-check:
+	$(PY) tools/check_docs.py
 
 bench:
 	$(PY) -m benchmarks.run

@@ -4,6 +4,8 @@
   overhead     — §3.1 exchange-loop overhead vs committee inference
   scaling      — §2 oracle/generator pool scaling
   committee_uq — fused single-dispatch exchange path vs sequential members
+  budget       — cross-round oracle-rate controller: budget tracking under
+                 std drift + hot-path overhead vs the default rule
   kernels      — Pallas-path microbenchmarks (XLA schedule, host timing)
 
 ``python -m benchmarks.run`` runs everything; ``--only <name>`` filters.
@@ -44,6 +46,12 @@ def bench_committee_uq(smoke: bool):
     from benchmarks import committee_uq
     _section("Fused committee-UQ exchange hot path (single dispatch)")
     committee_uq.main(["--smoke"] if smoke else [])
+
+
+def bench_budget(smoke: bool):
+    from benchmarks import budget_controller
+    _section("Cross-round budgeted acquisition (oracle-rate controller)")
+    budget_controller.main(["--smoke"] if smoke else [])
 
 
 def bench_kernels():
@@ -94,7 +102,7 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     choices=["speedup", "overhead", "scaling", "kernels",
-                             "committee_uq"])
+                             "committee_uq", "budget"])
     ap.add_argument("--simulate", action="store_true",
                     help="run the measured PAL-runtime speedup simulation")
     ap.add_argument("--smoke", action="store_true",
@@ -110,6 +118,8 @@ def main():
         bench_scaling()
     if args.only in (None, "committee_uq"):
         bench_committee_uq(args.smoke)
+    if args.only in (None, "budget"):
+        bench_budget(args.smoke)
     if args.only in (None, "kernels"):
         bench_kernels()
     print(f"\n# total benchmark wall time: {time.time() - t0:.1f}s")

@@ -10,7 +10,17 @@ Protocol:
      number of geometries without uncertainty-driven selection — the AL
      advantage the paper's workflow exists to deliver.
 
+``--oracle-budget F`` switches the run to FIXED-BUDGET exploration: the
+static std threshold is replaced by the cross-round oracle-rate controller
+(core/budget.BudgetRule via ``PALRunConfig.oracle_budget``), which steers
+the effective threshold so that a fraction F of each exchange round's MD
+proposals goes to the oracle — labeling cost is set up front instead of
+drifting with wherever the trajectories wander.  The run prints the
+realized oracle rate and the controller's final effective threshold next
+to the same MAE validation.
+
   PYTHONPATH=src python examples/potential_md.py [--budget 160]
+  PYTHONPATH=src python examples/potential_md.py --oracle-budget 0.2
 """
 import argparse
 import sys
@@ -85,12 +95,16 @@ class _Never:
 SEED_N = 48
 
 
-def run_al(budget: int, seed: int = 0):
+def run_al(budget: int, seed: int = 0, oracle_budget: float = 0.0):
     cfg = PALRunConfig(
         result_dir=tempfile.mkdtemp(prefix="pal_md_"),
         gene_process=8, orcl_process=4, pred_process=4, ml_process=4,
         retrain_size=16, std_threshold=0.3, patience=5,
-        weight_sync_every=1)
+        weight_sync_every=1,
+        # >0: cross-round PI control of the effective threshold toward
+        # oracle_budget selected-per-round (fixed labeling cost; the
+        # static threshold above only seeds the controller)
+        oracle_budget=oracle_budget, budget_horizon=16)
     pal = PAL(cfg, make_generator=MDGenerator,
               make_model=CommitteePotential, make_oracle=LJOracle,
               committee=make_committee_spec(PCFG.committee_size))
@@ -118,7 +132,14 @@ def run_al(budget: int, seed: int = 0):
             t.retrain(_Never(), max_steps=1600)
     members = [t.params for t in pal.trainers]
     labeled = pal.train_buffer.total_labeled
-    return cmte.stack_members(members), labeled, pal.report()
+    rep = pal.report()
+    if oracle_budget > 0:
+        # surface what the controller actually did with the budget
+        state = pal.engine.state_dict()
+        ctrl = state[-1] if state else {}
+        rep["budget_controller"] = {
+            k: float(np.asarray(v)) for k, v in dict(ctrl).items()}
+    return cmte.stack_members(members), labeled, rep
 
 
 def run_random_baseline(budget: int, seed: int = 1):
@@ -145,16 +166,31 @@ def run_random_baseline(budget: int, seed: int = 1):
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--budget", type=int, default=160)
+    ap.add_argument("--budget", type=int, default=160,
+                    help="total oracle-call budget (run stop criterion)")
+    ap.add_argument("--oracle-budget", type=float, default=0.0,
+                    help=">0: per-round selected fraction held by the "
+                         "cross-round budget controller (fixed-rate "
+                         "exploration instead of a static threshold)")
     args = ap.parse_args()
 
     coords_test, forces_test = make_test_set()
-    print(f"label budget: {args.budget} oracle calls")
+    print(f"label budget: {args.budget} oracle calls"
+          + (f", controlled at {args.oracle_budget:.0%}/round"
+             if args.oracle_budget > 0 else ""))
 
-    cparams_al, labeled, rep = run_al(args.budget)
+    cparams_al, labeled, rep = run_al(args.budget,
+                                      oracle_budget=args.oracle_budget)
     mae_al = force_mae(cparams_al, coords_test, forces_test)
     print(f"[PAL active learning] labeled={labeled} "
           f"force MAE={mae_al:.4f}")
+    if args.oracle_budget > 0:
+        ctrl = rep.get("budget_controller", {})
+        print(f"[budget controller ] realized rate="
+              f"{rep.get('oracle_rate') or 0:.3f} "
+              f"(target {args.oracle_budget}), "
+              f"effective threshold={ctrl.get('threshold', 0):.4f} "
+              f"(seed 0.3), rounds={int(ctrl.get('rounds', 0))}")
 
     cparams_rnd = run_random_baseline(labeled or args.budget)
     mae_rnd = force_mae(cparams_rnd, coords_test, forces_test)

@@ -55,6 +55,24 @@ class PALRunConfig:
                                      # given, per-member legacy otherwise
     uq_block_n: int = 128            # Pallas kernel row-block size
     uq_bucket: int = 8               # min power-of-two n_gen jit bucket
+    # --- cross-round budgeted acquisition (core/budget.py) ---------------
+    oracle_budget: float = 0.0       # >0: target oracle-selected fraction
+                                     # per exchange round — installs the
+                                     # BudgetRule PI controller (seeded at
+                                     # std_threshold) instead of the static
+                                     # threshold rule; 0 disables
+    budget_horizon: int = 16         # controller window (rounds): integral
+                                     # leak + realized-rate EMA
+    reweight_buckets: int = 0        # >0: RollingReweightRule region
+                                     # buckets (SI Use Case 2 analog);
+                                     # 0 disables
+    reweight_decay: float = 0.9      # per-round bucket-score decay
+    reweight_boost: float = 1.0      # max relative acquisition-score boost
+    serve_uq: bool = False           # serving: build a CommitteeServer on
+                                     # the SAME engine (batch-level UQResult
+                                     # per request; uncertain requests route
+                                     # to the oracle buffer through the
+                                     # same budget controller)
 
 
 DEFAULT = PotentialConfig()

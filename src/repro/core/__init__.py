@@ -14,6 +14,12 @@ Public surface:
                   UserModel.predict), composable rules (ThresholdRule /
                   TopFractionRule / DiversityRule), and the config-driven
                   make_engine factory
+  budget        — cross-round budgeted acquisition: OracleBudgetController
+                  (PI control of the effective threshold toward a target
+                  oracle rate), the stateful BudgetRule carrying that
+                  control on device through the fused dispatch, and the
+                  RollingReweightRule (SI Use Case 2 analog: decayed
+                  per-region score boost)
   selection     — prediction_check (paper port) / selection_from_uq /
                   adjust_input_for_oracle(_uq) / patience
   weight_sync   — versioned training->prediction weight publication with
@@ -28,6 +34,10 @@ from repro.core.acquisition import (  # noqa: F401
     ThresholdRule, TopFractionRule, UQEngine, UQResult, make_engine,
 )
 from repro.core.api import UserGene, UserModel, UserOracle  # noqa: F401
+from repro.core.budget import (  # noqa: F401
+    BudgetRule, OracleBudgetController, RollingReweightRule,
+    rules_from_config,
+)
 from repro.core.runtime import PAL  # noqa: F401
 from repro.core.speedup import WorkloadParams  # noqa: F401
 # NOTE: the speedup() function is NOT re-exported here -- it would shadow the

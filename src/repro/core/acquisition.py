@@ -19,9 +19,16 @@ parallel throughput.  This module is that contract:
     backend traces them INSIDE its compiled dispatch, so custom selection
     runs device-side and never forfeits fusion; the legacy backend executes
     the very same functions eagerly on host statistics, so both backends
-    select identically by construction.
+    select identically by construction.  Rules may be STATEFUL
+    (``stateful = True`` + ``init_state`` / ``apply_stateful``): their
+    small carried state is threaded through the compiled dispatch and
+    stays device-resident across rounds — ``core/budget.py`` builds the
+    cross-round oracle-rate controller (``BudgetRule``) and the rolling
+    re-weighting rule (``RollingReweightRule``) on this protocol.
   * ``make_engine`` — config-driven factory (``PALRunConfig.uq_impl`` /
-    ``uq_block_n`` / ``uq_bucket``): the runtime never hand-threads engines.
+    ``uq_block_n`` / ``uq_bucket``, plus the ``oracle_budget`` /
+    ``budget_horizon`` / ``reweight_*`` budget knobs): the runtime never
+    hand-threads engines.
 
 The pre-engine escape hatches (``prediction_check=`` host callables,
 manual ``fused_engine=`` threading, ``predict_stacked`` host round trips)
@@ -30,9 +37,13 @@ are gone: every scenario — examples, benchmarks, the Manager's
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
+import logging
 import threading
 from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+log = logging.getLogger(__name__)
 
 import jax
 import jax.numpy as jnp
@@ -104,11 +115,34 @@ class SelectionRule:
     host arrays for the legacy backend.  Set ``needs_inputs`` when the rule
     reads ``stats.x`` — the legacy backend only stacks the input batch
     (which the fused path gets for free) for rules that declare it.
+
+    STATEFUL rules (``stateful = True``) carry a small jax-pytree state
+    across scoring rounds — the cross-round budget controller and the
+    rolling re-weighting rule in ``core/budget.py``.  They implement
+    ``init_state()`` and ``apply_stateful(stats, mask, state) ->
+    (stats, mask, new_state)`` instead of ``apply``; returning ``stats``
+    lets a rule transform the statistics downstream rules consume (e.g.
+    re-weighted scores) without touching the raw ``UQResult`` the engine
+    reports.  On the fused backend the state is an input/output of the
+    compiled dispatch and stays device-resident between rounds; the engine
+    snapshots it to host only for checkpoints (``UQEngine.state_dict``).
     """
 
     needs_inputs: bool = False
+    stateful: bool = False
 
     def apply(self, stats: UQStats, mask: jnp.ndarray) -> jnp.ndarray:
+        raise NotImplementedError
+
+    def init_state(self) -> Any:
+        """Initial carried state (stateful rules only): a jax pytree of
+        small arrays/scalars."""
+        raise NotImplementedError
+
+    def apply_stateful(self, stats: UQStats, mask: jnp.ndarray,
+                       state: Any) -> Tuple[UQStats, jnp.ndarray, Any]:
+        """Stateful fold step: ``(stats, mask, state) -> (stats', mask',
+        state')`` in pure jnp (traced into the fused dispatch)."""
         raise NotImplementedError
 
 
@@ -211,15 +245,70 @@ class UQEngine:
     controller makes on the hot path; ``refresh_from`` pulls fresh weights
     from a WeightStore (no-op for backends whose members refresh
     themselves); ``uses_models`` tells the PredictionPool whether the
-    per-member ``UserModel`` instances are part of this engine's path."""
+    per-member ``UserModel`` instances are part of this engine's path.
+
+    ``rule_state`` carries the state of stateful rules (``BudgetRule``,
+    ``RollingReweightRule``) across rounds — one pytree per stateful rule,
+    in pipeline order.  ``score(..., advance=False)`` evaluates the
+    pipeline against the current state WITHOUT advancing it: the Manager's
+    ``dynamic_oracle_list`` re-scoring and read-only serving traffic use
+    this so they never consume exchange-round budget.  ``state_dict`` /
+    ``load_state_dict`` snapshot the carried state to host numpy for
+    ``PAL.checkpoint`` and restore it on resume."""
 
     uses_models: bool = False
+    rule_state: Tuple[Any, ...] = ()
 
-    def score(self, list_data: Sequence[np.ndarray]) -> UQResult:
+    def score(self, list_data: Sequence[np.ndarray], *,
+              advance: bool = True) -> UQResult:
         raise NotImplementedError
 
     def refresh_from(self, store) -> int:
         return 0
+
+    def _init_rule_state(self):
+        """Shared stateful-rule plumbing: one state pytree per stateful
+        rule (pipeline order) plus the lock that makes an ADVANCING
+        round's read-state -> score -> store-state cycle atomic."""
+        self.rule_state = tuple(r.init_state() for r in self.rules
+                                if r.stateful)
+        self._state_lock = threading.Lock()
+
+    def _state_guard(self, advance: bool):
+        """Lock held by advancing scorers (exchange loop, serving with
+        advance=True): without it, concurrent rounds would both update
+        from the same base state and the second store would silently drop
+        the first round's controller/re-weighting update.  advance=False
+        scorers (Manager re-scoring) stay lock-free — they only snapshot
+        the state tuple."""
+        if advance and self.rule_state:
+            return self._state_lock
+        return contextlib.nullcontext()
+
+    def state_dict(self) -> Tuple[Any, ...]:
+        """Host-numpy snapshot of the carried cross-round rule state."""
+        return jax.tree.map(np.asarray, tuple(self.rule_state))
+
+    def load_state_dict(self, state: Sequence[Any]):
+        """Restore a ``state_dict`` snapshot — if it structurally matches
+        the CURRENT rule pipeline.  A snapshot taken under a different
+        budget/re-weighting configuration (different rule count, state
+        keys, or array shapes) is skipped with a warning and the freshly
+        initialized state is kept: the controller re-converges instead of
+        crashing at trace time inside the fused dispatch."""
+        restored = jax.tree.map(jnp.asarray, tuple(state))
+        cur_leaves, cur_def = jax.tree.flatten(tuple(self.rule_state))
+        new_leaves, new_def = jax.tree.flatten(restored)
+        if cur_def != new_def or any(
+                np.shape(a) != np.shape(b)
+                for a, b in zip(cur_leaves, new_leaves)):
+            log.warning(
+                "engine rule-state snapshot does not match the current "
+                "rule pipeline (%s vs %s) — skipping restore, carried "
+                "acquisition state re-converges from scratch",
+                new_def, cur_def)
+            return
+        self.rule_state = restored
 
 
 class FusedEngine(UQEngine):
@@ -256,6 +345,10 @@ class FusedEngine(UQEngine):
         self.threshold = float(threshold)
         self.rules = tuple(rules) if rules is not None \
             else default_rules(threshold)
+        # carried state of stateful rules (budget controller, rolling
+        # re-weighting), device-resident between rounds — an input/output
+        # of the compiled dispatch, never a host round trip
+        self._init_rule_state()
         self.impl = impl
         self.min_bucket = min_bucket
         self.donate = donate
@@ -283,7 +376,7 @@ class FusedEngine(UQEngine):
         # caller holds self._compile_lock
         fn = self._cache.get(nb)
         if fn is None:
-            def fused(cparams, x, n_valid):
+            def fused(cparams, x, n_valid, rstate):
                 # trace-time counter: fires once per (bucket) compilation
                 self.trace_counts[nb] = self.trace_counts.get(nb, 0) + 1
                 preds = self.apply(cparams, x)
@@ -295,9 +388,17 @@ class FusedEngine(UQEngine):
                                 component_std=cstd, valid=valid,
                                 n_valid=n_valid)
                 mask = valid
+                new_state, si = [], 0
                 for rule in self.rules:
-                    mask = jnp.asarray(rule.apply(stats, mask)) & valid
-                return mean, sstd, cstd, mask
+                    if rule.stateful:
+                        stats, mask, ns = rule.apply_stateful(
+                            stats, mask, rstate[si])
+                        mask = jnp.asarray(mask) & valid
+                        new_state.append(ns)
+                        si += 1
+                    else:
+                        mask = jnp.asarray(rule.apply(stats, mask)) & valid
+                return mean, sstd, cstd, mask, tuple(new_state)
             # donation is a no-op (plus a warning) on CPU — only request it
             # where XLA can actually alias the buffer
             donate = self.donate and jax.default_backend() != "cpu"
@@ -318,19 +419,29 @@ class FusedEngine(UQEngine):
         return x, n, nb
 
     # -------------------------------------------------------------- score
-    def score(self, list_data: Sequence[np.ndarray]) -> UQResult:
-        x, n, nb = self._pad_batch(list_data)
-        args = (self.cparams, jnp.asarray(x), np.int32(n))
+    def _dispatch(self, nb: int, args):
         if nb in self._warmed:                 # steady state: lock-free call
-            out = self._cache[nb](*args)
-        else:
-            # first call per bucket traces lazily inside jit — hold the
-            # lock across it so concurrent Exchange/Manager scoring can't
-            # double-trace the same bucket
-            with self._compile_lock:
-                out = self._compiled_locked(nb)(*args)
-                self._warmed.add(nb)
-        mean, sstd, cstd, mask = (np.asarray(o) for o in out)
+            return self._cache[nb](*args)
+        # first call per bucket traces lazily inside jit — hold the
+        # lock across it so concurrent Exchange/Manager scoring can't
+        # double-trace the same bucket
+        with self._compile_lock:
+            out = self._compiled_locked(nb)(*args)
+            self._warmed.add(nb)
+            return out
+
+    def score(self, list_data: Sequence[np.ndarray], *,
+              advance: bool = True) -> UQResult:
+        x, n, nb = self._pad_batch(list_data)
+        head = (self.cparams, jnp.asarray(x), np.int32(n))
+        # advancing rounds are semantically sequential (_state_guard); the
+        # state itself advances on device — only the compiled program's
+        # output handle moves, no host transfer
+        with self._state_guard(advance):
+            out = self._dispatch(nb, head + (self.rule_state,))
+            if advance:
+                self.rule_state = out[4]
+        mean, sstd, cstd, mask = (np.asarray(o) for o in out[:4])
         with self._counter_lock:
             self.bytes_to_device += x.nbytes
             self.bytes_to_host += (mean.nbytes + sstd.nbytes + cstd.nbytes
@@ -380,8 +491,15 @@ class LegacyEngine(UQEngine):
         self.threshold = float(threshold)
         self.rules = tuple(rules) if rules is not None \
             else default_rules(threshold)
+        self._init_rule_state()
 
-    def score(self, list_data: Sequence[np.ndarray]) -> UQResult:
+    def score(self, list_data: Sequence[np.ndarray], *,
+              advance: bool = True) -> UQResult:
+        with self._state_guard(advance):
+            return self._score(list_data, advance=advance)
+
+    def _score(self, list_data: Sequence[np.ndarray], *,
+               advance: bool) -> UQResult:
         preds = np.asarray(self.predict_all(list_data), dtype=np.float64)
         k = preds.shape[0]
         mean = preds.mean(axis=0)
@@ -397,8 +515,18 @@ class LegacyEngine(UQEngine):
             x=x, mean=mean, scalar_std=sstd, component_std=cstd,
             valid=np.ones(n, bool), n_valid=n)
         mask = np.ones(n, bool)
+        states, si = list(self.rule_state), 0
         for rule in self.rules:
-            mask = np.asarray(rule.apply(stats, mask), dtype=bool)
+            if rule.stateful:
+                # the SAME jnp code the fused backend traces, run eagerly
+                stats, mask, states[si] = rule.apply_stateful(
+                    stats, mask, states[si])
+                mask = np.asarray(mask, dtype=bool)
+                si += 1
+            else:
+                mask = np.asarray(rule.apply(stats, mask), dtype=bool)
+        if advance:
+            self.rule_state = tuple(states)
         return UQResult(mean, sstd, cstd, mask)
 
 
@@ -449,9 +577,19 @@ def make_engine(
 
     ``force_legacy`` overrides everything (used when a
     ``predict_all_override`` puts the user in control of raw predictions).
+
+    When no explicit ``rules=`` are given, the pipeline comes from the
+    config's budget knobs (``core/budget.rules_from_config``):
+    ``oracle_budget > 0`` installs the cross-round oracle-rate controller
+    (``BudgetRule``) in place of the static threshold rule, and
+    ``reweight_buckets > 0`` prepends the rolling re-weighting rule.
     """
     impl = getattr(run_cfg, "uq_impl", "auto")
     threshold = run_cfg.std_threshold
+    if rules is None:
+        from repro.core import budget as _budget
+
+        rules = _budget.rules_from_config(run_cfg)
     if wants_legacy(run_cfg, committee, force_legacy):
         if predict_all is None:
             raise ValueError(

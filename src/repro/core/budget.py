@@ -1,0 +1,254 @@
+"""Cross-round budgeted acquisition (ROADMAP: global oracle-rate controller
++ the rolling-buffer Use Case 2 re-weighting, on device).
+
+The PR-2 rule pipeline is stateless per dispatch: every exchange round makes
+its selection in isolation, so the realized oracle rate drifts with the
+committee's current disagreement level — exactly the failure mode the paper's
+whole-workflow cost argument warns about (oracle labeling pays off only when
+its rate is controlled across the run, not per batch).  This module adds the
+two *stateful* rules that close that gap, both carried on device and threaded
+through the fused single-dispatch hot path (core/acquisition.FusedEngine):
+
+  * ``OracleBudgetController`` — the pure-jnp proportional/integral update
+    that steers an effective ``ThresholdRule`` threshold toward a target
+    oracle-queries-per-round rate.
+  * ``BudgetRule``             — the controller as a ``SelectionRule``: one
+    extra compare + a handful of scalar ops inside the compiled dispatch;
+    its state (effective threshold, leaky integral, EMA rate, round count)
+    never round-trips to host between rounds.
+  * ``RollingReweightRule``    — the device-side analog of the paper's
+    SI Use Case 2 rolling buffer: input space is hashed into buckets (fixed
+    random projection, locality-sensitive), each bucket carries an
+    exponentially-decayed score of the highest committee std recently seen
+    there, and samples from recently-uncertain regions get their acquisition
+    score boosted for downstream threshold/budget/top-fraction rules.
+  * ``rules_from_config``      — builds the pipeline from ``PALRunConfig``
+    knobs (``oracle_budget`` / ``budget_horizon`` / ``reweight_*``) so the
+    runtime stays config-driven (acquisition.make_engine calls this when no
+    explicit ``rules=`` are passed).
+
+Both rules run identically (eagerly, same jnp code) on the legacy per-member
+backend — fused-vs-legacy parity is tested in tests/test_budget.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.acquisition import SelectionRule, ThresholdRule, UQStats
+
+
+# ---------------------------------------------------------------------------
+# Oracle-rate controller (pure jnp — traceable into the fused dispatch)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class OracleBudgetController:
+    """Proportional/integral control of a selection threshold toward a
+    target per-round oracle rate.
+
+    The realized rate of round t is ``r_t = selected / n_valid``; the
+    controller moves the effective threshold *multiplicatively*::
+
+        err_t      = r_t - target
+        integral_t = integral_{t-1} * (1 - 1/horizon) + err_t      (leaky)
+        thr_{t+1}  = clip(thr_t * exp(kp*err_t + ki*integral_t),
+                          thr_min, thr_max)
+
+    Multiplicative-exponential updates make the gains scale-free: the same
+    ``kp``/``ki`` work whether committee std lives at 1e-3 or 1e+1, because
+    the step is a *relative* change of the threshold.  ``horizon`` (rounds)
+    sets both the integral leak and the EMA window of the reported
+    ``ema_rate`` — the controller forgets errors older than roughly one
+    horizon, so a transient std spike cannot wind up the integral forever.
+
+    State is a flat dict of f32/int32 scalars (a valid jax pytree), so it
+    threads through a jitted dispatch as-is and pickles via ``numpy`` for
+    checkpoints.
+    """
+
+    target: float                 # oracle-selected fraction per round
+    kp: float = 0.8               # proportional gain (per unit rate error)
+    ki: float = 0.15              # integral gain
+    horizon: int = 16             # rounds: integral leak + EMA window
+
+    def init_state(self, thr_init: float) -> Dict[str, Any]:
+        return {
+            "threshold": jnp.float32(max(float(thr_init), 1e-6)),
+            "integral": jnp.float32(0.0),
+            "ema_rate": jnp.float32(self.target),
+            "rounds": jnp.int32(0),
+        }
+
+    def update(self, state: Dict[str, Any], rate,
+               thr_min: float, thr_max: float) -> Dict[str, Any]:
+        """One control step.  ``rate`` is the realized selected fraction of
+        this round (traced f32 scalar inside the fused dispatch)."""
+        rate = jnp.asarray(rate, jnp.float32)
+        err = rate - jnp.float32(self.target)
+        leak = jnp.float32(1.0 - 1.0 / max(self.horizon, 1))
+        integral = state["integral"] * leak + err
+        thr = jnp.clip(
+            state["threshold"] * jnp.exp(jnp.float32(self.kp) * err
+                                         + jnp.float32(self.ki) * integral),
+            jnp.float32(thr_min), jnp.float32(thr_max))
+        alpha = jnp.float32(1.0 / max(self.horizon, 1))
+        ema = state["ema_rate"] + (rate - state["ema_rate"]) * alpha
+        return {"threshold": thr, "integral": integral, "ema_rate": ema,
+                "rounds": state["rounds"] + 1}
+
+
+# ---------------------------------------------------------------------------
+# Stateful selection rules
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class BudgetRule(SelectionRule):
+    """Budgeted threshold selection: ``scalar_std > thr_t`` where ``thr_t``
+    is steered by an :class:`OracleBudgetController` toward ``target``
+    selected-per-round rate.
+
+    Drop-in replacement for the static ``ThresholdRule`` on the fused path:
+    the compare, the rate measurement, and the PI update all trace into the
+    same compiled dispatch, and the carried state never leaves the device
+    between rounds.  ``thr_init`` seeds the effective threshold (typically
+    ``PALRunConfig.std_threshold``); ``thr_min``/``thr_max`` default to
+    1e-3x / 1e+3x of it, bounding the controller's authority so a long
+    all-certain (or all-uncertain) stretch cannot push the threshold to a
+    value it takes hundreds of rounds to recover from.
+
+    The rate is measured against this rule's OWN selection (after ANDing
+    with the incoming mask), over the TRUE ``n_valid`` — bucket padding
+    rows never count toward the budget.
+    """
+
+    target: float
+    thr_init: float
+    kp: float = 0.8
+    ki: float = 0.15
+    horizon: int = 16
+    thr_min: Optional[float] = None     # default: thr_init * 1e-3
+    thr_max: Optional[float] = None     # default: thr_init * 1e+3
+
+    stateful = True
+
+    @property
+    def controller(self) -> OracleBudgetController:
+        return OracleBudgetController(self.target, self.kp, self.ki,
+                                      self.horizon)
+
+    def _bounds(self) -> Tuple[float, float]:
+        base = max(float(self.thr_init), 1e-6)
+        lo = base * 1e-3 if self.thr_min is None else float(self.thr_min)
+        hi = base * 1e+3 if self.thr_max is None else float(self.thr_max)
+        return lo, hi
+
+    def init_state(self) -> Dict[str, Any]:
+        return self.controller.init_state(self.thr_init)
+
+    def apply_stateful(self, stats: UQStats, mask, state):
+        thr = state["threshold"]
+        sel = mask & (stats.scalar_std > thr)
+        n = jnp.maximum(jnp.asarray(stats.n_valid, jnp.int32), 1)
+        rate = jnp.sum(sel).astype(jnp.float32) / n.astype(jnp.float32)
+        lo, hi = self._bounds()
+        return stats, sel, self.controller.update(state, rate, lo, hi)
+
+
+@dataclasses.dataclass(frozen=True)
+class RollingReweightRule(SelectionRule):
+    """Device-side rolling re-weighting of acquisition scores (the SI Use
+    Case 2 analog): regions of input space that recently produced high
+    committee std get a boosted score for a while.
+
+    Mechanics (all inside the fused dispatch):
+
+      * inputs are hashed to ``n_buckets`` region buckets with a fixed
+        random projection (seeded, generated at trace time):
+        ``bucket = floor(x @ proj / bucket_width) mod n_buckets``;
+      * each bucket carries an exponentially-decayed score — the running
+        max committee std seen there:
+        ``scores_t = max(decay * scores_{t-1}, scatter_max(std_t))``;
+      * every sample's ``scalar_std`` is re-weighted
+        ``std * (1 + boost * scores[bucket]/max(scores))`` for DOWNSTREAM
+        rules in the pipeline.
+
+    The rule itself never selects anything — it transforms the stats that a
+    following ``ThresholdRule`` / ``BudgetRule`` / ``TopFractionRule``
+    consumes, so the pipeline order is ``(RollingReweightRule(...),
+    BudgetRule(...))``.  The carried ``(n_buckets,)`` score vector stays on
+    device across rounds; the ``UQResult`` the engine reports to host keeps
+    the RAW statistics (re-weighting only biases selection, not the
+    committee mean/std the generators and Manager consume).
+    """
+
+    n_buckets: int = 64
+    decay: float = 0.9            # per-round score decay
+    boost: float = 1.0            # max relative score boost
+    bucket_width: float = 1.0     # projection quantization step
+    seed: int = 0
+
+    stateful = True
+    needs_inputs = True
+
+    def init_state(self) -> Dict[str, Any]:
+        return {"scores": jnp.zeros(self.n_buckets, jnp.float32)}
+
+    def _bucket_ids(self, x):
+        x = jnp.asarray(x, jnp.float32)
+        in_dim = int(x.shape[-1])          # static under jit
+        proj = np.random.RandomState(self.seed).randn(in_dim) \
+            .astype(np.float32)            # trace-time constant
+        z = x @ jnp.asarray(proj)
+        idx = jnp.floor(z / jnp.float32(self.bucket_width)).astype(jnp.int32)
+        return jnp.mod(idx, self.n_buckets)
+
+    def apply_stateful(self, stats: UQStats, mask, state):
+        idx = self._bucket_ids(stats.x)
+        sstd = jnp.asarray(stats.scalar_std, jnp.float32)
+        valid = jnp.asarray(stats.valid)
+        cur = jnp.zeros(self.n_buckets, jnp.float32).at[idx].max(
+            jnp.where(valid, sstd, 0.0))
+        scores = jnp.maximum(state["scores"] * jnp.float32(self.decay), cur)
+        norm = scores / (jnp.max(scores) + jnp.float32(1e-12))
+        weight = 1.0 + jnp.float32(self.boost) * norm[idx]
+        boosted = jnp.where(valid, sstd * weight, 0.0)
+        stats = dataclasses.replace(stats, scalar_std=boosted)
+        return stats, mask, {"scores": scores}
+
+
+# ---------------------------------------------------------------------------
+# Config-driven pipeline construction
+# ---------------------------------------------------------------------------
+
+
+def rules_from_config(run_cfg) -> Optional[Tuple[SelectionRule, ...]]:
+    """Selection-rule pipeline from ``PALRunConfig`` budget knobs.
+
+    Returns ``None`` when no budget/re-weighting knob is set (the engine
+    then installs its default static ``ThresholdRule``); otherwise the
+    pipeline is ``(RollingReweightRule?, BudgetRule | ThresholdRule)`` —
+    re-weighting first so the controller sees the boosted scores.
+    Explicit ``rules=`` passed to ``PAL`` / ``make_engine`` always win over
+    these knobs.
+    """
+    rules = []
+    n_buckets = int(getattr(run_cfg, "reweight_buckets", 0) or 0)
+    if n_buckets > 0:
+        rules.append(RollingReweightRule(
+            n_buckets=n_buckets,
+            decay=float(getattr(run_cfg, "reweight_decay", 0.9)),
+            boost=float(getattr(run_cfg, "reweight_boost", 1.0))))
+    budget = float(getattr(run_cfg, "oracle_budget", 0.0) or 0.0)
+    if budget > 0.0:
+        rules.append(BudgetRule(
+            target=budget, thr_init=run_cfg.std_threshold,
+            horizon=int(getattr(run_cfg, "budget_horizon", 16))))
+    elif rules:
+        rules.append(ThresholdRule(run_cfg.std_threshold))
+    return tuple(rules) if rules else None

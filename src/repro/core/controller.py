@@ -185,6 +185,10 @@ class Exchange:
         # 3. realize the selection; queue to oracle; scatter back
         t1 = time.perf_counter()
         res = sel.selection_from_uq(inputs, uq)
+        # acquisition accounting: queued_to_oracle/proposals is the
+        # realized oracle rate the cross-round budget controller
+        # (core/budget.BudgetRule) steers toward PALRunConfig.oracle_budget
+        self.monitor.incr("exchange.proposals", len(inputs))
         if res.inputs_to_oracle:
             self.oracle_buffer.put(res.inputs_to_oracle)
             self.monitor.incr("exchange.queued_to_oracle",

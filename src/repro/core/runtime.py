@@ -124,9 +124,14 @@ class PAL:
         def fresh_score(items):
             # own timer: buffer re-scoring (incl. first-time compiles of
             # buffer-sized shape buckets) must not pollute the exchange
-            # hot-path metric
+            # hot-path metric.  advance=False: re-scoring the waiting
+            # buffer is a read-only query — it must not advance the
+            # cross-round budget controller / re-weighting state, or every
+            # retrain completion would charge a phantom exchange round
+            # against the oracle budget
             with self.monitor.timer("manager.fresh_score"):
-                return self.engine.score([np.asarray(x) for x in items])
+                return self.engine.score([np.asarray(x) for x in items],
+                                         advance=False)
 
         self.manager = Manager(
             self.oracle_buffer, self.train_buffer, self.trainer_channels,
@@ -141,6 +146,17 @@ class PAL:
             adjust_fn=adjust_input_for_oracle,
             fresh_score=fresh_score,
         )
+
+        # --- serving (ROADMAP: batch-level UQ for served ensembles) --------
+        # the SAME engine serves online requests: served batches get a
+        # UQResult and high-uncertainty requests feed the oracle buffer
+        # through the same budget controller as the exchange loop
+        self.server = None
+        if getattr(run_cfg, "serve_uq", False):
+            from repro.serving.engine import CommitteeServer
+
+            self.server = CommitteeServer(
+                self.engine, self.oracle_buffer, monitor=self.monitor)
 
         # --- runtime machinery ----------------------------------------------
         self.stop_event = threading.Event()
@@ -298,6 +314,11 @@ class PAL:
             "patience": self.exchange.patience.state_dict(),
             "iteration": self.exchange.iteration,
             "labeled_total": self.train_buffer.total_labeled,
+            # cross-round acquisition state (budget controller threshold/
+            # integral, rolling re-weight bucket scores) — without it a
+            # restored run would re-converge from scratch and overshoot
+            # the oracle budget for a whole horizon
+            "engine_state": self.engine.state_dict(),
         }
         return self.checkpointer.save(self.exchange.iteration, state)
 
@@ -312,6 +333,8 @@ class PAL:
         self.train_buffer.restore(state.get("train_buffer", []))
         if "patience" in state:
             self.exchange.patience.load_state_dict(state["patience"])
+        if state.get("engine_state"):
+            self.engine.load_state_dict(state["engine_state"])
         self.exchange.iteration = int(state.get("iteration", 0))
         self.monitor.incr("runtime.restores")
 
@@ -323,5 +346,17 @@ class PAL:
         r["train_buffer"] = len(self.train_buffer)
         r["labeled_total"] = self.train_buffer.total_labeled
         r["weight_publishes"] = self.store.publishes
+        # realized oracle rate: queued / scored over the whole run, the
+        # quantity the budget controller steers toward oracle_budget.
+        # Serving traffic counts too — with serve_uq the server shares the
+        # controller (advance=True), so the metered demand is exchange
+        # selections PLUS uncertain served requests routed to the buffer;
+        # an exchange-only rate would read as under-spending whenever
+        # serving consumes part of the budget
+        c = r["counters"]
+        scored = c.get("exchange.proposals", 0) + c.get("serve.requests", 0)
+        queued = (c.get("exchange.queued_to_oracle", 0)
+                  + c.get("serve.routed_to_oracle", 0))
+        r["oracle_rate"] = queued / scored if scored else None
         r["stop"] = repr(self.stop_token)
         return r

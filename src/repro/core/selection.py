@@ -11,6 +11,13 @@ oracle buffer with the freshest committee (``dynamic_oracle_list``).
 the generator-side "allow trajectories to propagate into regions of high
 uncertainty for a given number of steps" policy (§2.2) — decision logic is
 the generator's, UQ stays central, exactly as the paper splits it.
+
+This module is the HOST-side realization layer: the selection decision
+itself is made inside the acquisition engine (device-side rule pipeline —
+``acquisition.ThresholdRule`` & friends, plus the cross-round stateful
+rules in ``core/budget.py``); the functions here turn the resulting
+``UQResult`` into oracle-queue entries and per-generator scatter lists,
+and provide the float64 reference ports the parity tests compare against.
 """
 from __future__ import annotations
 

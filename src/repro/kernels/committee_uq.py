@@ -35,6 +35,32 @@ from jax.experimental.pallas import tpu as pltpu
 
 def _kernel(preds_ref, mean_ref, sstd_ref, cstd_ref, mask_ref, m2_ref,
             *, n_members: int, threshold: float):
+    """One grid step: fold committee member ``k`` into the Welford state
+    of one row block.
+
+    Refs (shapes per block, bn = row-block size, d = output components):
+
+      ``preds_ref``  (1, bn, d) in   — member k's predictions for the block
+      ``mean_ref``   (bn, d)   out  — running mean; after k = K-1 the
+                                      committee mean (Welford: ``mean +=
+                                      (x - mean) / (k+1)``)
+      ``m2_ref``     (bn, d)   VMEM — running sum of squared deviations
+                                      (``M2 += delta * (x - new_mean)``);
+                                      scratch only, never leaves the chip
+      ``sstd_ref``   (bn,)     out  — finalized at k = K-1: MAX over d of
+                                      ``sqrt(M2 / (K-1))`` (ddof=1)
+      ``cstd_ref``   (bn,)     out  — MEAN over d of the same std, from
+                                      the same state at zero extra passes
+      ``mask_ref``   (bn,)     out  — ``scalar_std > threshold`` as uint8
+                                      (bool is not a legal Pallas output
+                                      dtype; the wrapper casts back)
+
+    K is the sequential innermost grid dimension, so output refs persist
+    across the k steps and double as carried state — the classic
+    streaming-statistics trick that keeps the (K, n, d) tensor out of
+    memory.  ``@pl.when`` guards split init (k=0) / accumulate (k>0) /
+    finalize (k=K-1); with K=1 the k=0 branch also finalizes to std 0.
+    """
     k = pl.program_id(1)
     x = preds_ref[0].astype(jnp.float32)               # (bn, d)
 
@@ -74,10 +100,24 @@ def committee_uq(
 ):
     """Fused mean / ddof=1 std statistics / threshold mask over the K axis.
 
-    Returns ``(mean (n, d) fp32, scalar_std (n,) fp32,
+    Returns the 4-tuple ``(mean (n, d) fp32, scalar_std (n,) fp32,
     component_std (n,) fp32, mask (n,) bool)`` — scalar_std is the
     max-over-components std (the exchange check quantity), component_std
-    the mean-over-components std (the oracle re-prioritization score).
+    the mean-over-components std (the oracle re-prioritization score);
+    both finalize from the SAME single Welford pass, so the Manager's
+    ``dynamic_oracle_list`` score costs no extra reduction.
+
+    Row blocking: the n axis is processed in blocks of ``block_n``
+    (clamped to n) and padded up to a whole number of blocks; padding rows
+    carry zeros through the Welford state (std 0, mask 0) and are sliced
+    off before returning, so callers always see exactly n rows.  This
+    internal padding is independent of the acquisition engine's
+    power-of-two shape bucketing (``committee.shape_bucket``), which
+    quantizes n itself to bound jit recompiles — by construction n is
+    usually already a bucket size here and the kernel pad is a no-op.
+    ``interpret=True`` runs the same kernel under the Pallas interpreter
+    (CPU validation; tests/test_committee_uq.py checks parity against
+    ``ref.committee_uq_ref``).
     """
     K, n, d = preds.shape
     bn = min(block_n, n)

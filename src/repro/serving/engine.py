@@ -1,17 +1,26 @@
-"""Batched serving engine: prefill + decode loop over the model zoo's
-uniform cache API (KV caches for attention archs, recurrent states for
-rwkv6/mamba — the engine is agnostic).
+"""Batched serving engines.
 
-``ServeEngine.generate`` runs greedy / temperature sampling with jitted
-prefill and decode-step closures; used by examples/serve_lm.py and the
-serving smoke tests.  The decode step is the same function the decode/long
-dry-run cells lower at the production mesh.
+``ServeEngine`` — LM prefill + decode loop over the model zoo's uniform
+cache API (KV caches for attention archs, recurrent states for rwkv6/mamba
+— the engine is agnostic).  ``generate`` runs greedy / temperature sampling
+with jitted prefill and decode-step closures; used by examples/serve_lm.py
+and the serving smoke tests.  The decode step is the same function the
+decode/long dry-run cells lower at the production mesh.
+
+``CommitteeServer`` — served committee ensembles with batch-level UQ
+(ROADMAP: "wire the acquisition engine into the serving engine's committee
+path").  Every request batch is scored through the SAME unified
+``core/acquisition.UQEngine`` the exchange loop uses (one fused dispatch:
+committee forward + Welford statistics + rule pipeline), so serving returns
+a ``UQResult`` per batch and — when given an oracle buffer — routes
+high-uncertainty requests to labeling through the same cross-round budget
+controller (``core/budget.BudgetRule``) that meters the exchange loop.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -32,6 +41,57 @@ class GenerationResult:
         if self.decode_seconds == 0:
             return float("inf")
         return self.tokens.shape[0] * self.steps / self.decode_seconds
+
+
+class CommitteeServer:
+    """Serve a committee ensemble through the unified acquisition engine.
+
+    ``predict(batch) -> (mean, UQResult)``: the committee mean is the
+    served answer; the ``UQResult`` (scalar/component std + selection mask)
+    is the per-request reliability signal — nothing larger than the four
+    small UQ arrays ever crosses to host, exactly as on the exchange hot
+    path, because it IS the exchange hot path (same engine, same compiled
+    dispatch, same shape-bucketed jit cache).
+
+    ``oracle_buffer``: when given, requests the engine's rule pipeline
+    selects (``uq.mask``) are queued for labeling — online serving traffic
+    becomes acquisition.  ``advance`` controls whether served batches
+    advance cross-round rule state (the budget controller): True (default)
+    means serving shares the oracle budget with the exchange loop — the
+    controller sees and meters the TOTAL labeling demand; False makes
+    serving a read-only consumer of the current threshold (it still routes,
+    but never spends controller rounds).
+    """
+
+    def __init__(self, engine, oracle_buffer=None, *,
+                 route_uncertain: bool = True, advance: bool = True,
+                 monitor=None):
+        self.engine = engine
+        self.oracle_buffer = oracle_buffer
+        self.route_uncertain = route_uncertain
+        self.advance = advance
+        self.monitor = monitor
+        self.requests = 0
+        self.routed = 0
+
+    def predict(self, batch_inputs: Sequence[np.ndarray]
+                ) -> Tuple[np.ndarray, Any]:
+        """Score one request batch: rows of shape (in_dim,) (or anything
+        the engine's ``apply_fn`` flattens).  Returns ``(mean, UQResult)``.
+        """
+        rows = [np.asarray(r) for r in batch_inputs]
+        uq = self.engine.score(rows, advance=self.advance)
+        self.requests += len(rows)
+        if self.monitor is not None:
+            self.monitor.incr("serve.requests", len(rows))
+        if (self.oracle_buffer is not None and self.route_uncertain
+                and uq.mask.any()):
+            picked = [rows[int(i)] for i in np.where(uq.mask)[0]]
+            self.oracle_buffer.put(picked)
+            self.routed += len(picked)
+            if self.monitor is not None:
+                self.monitor.incr("serve.routed_to_oracle", len(picked))
+        return uq.mean, uq
 
 
 class ServeEngine:

@@ -1,0 +1,533 @@
+"""Cross-round budgeted acquisition tests: BudgetRule convergence to the
+target oracle rate under synthetic std drift, fused-vs-legacy parity for
+the stateful rules (budget controller + rolling re-weighting), carried
+state surviving PAL.checkpoint/restore, true-n rate accounting under bucket
+padding, read-only scoring (advance=False), the config-driven pipeline
+factory, and the CommitteeServer serving path (batch-level UQResult +
+oracle routing through the same controller)."""
+import tempfile
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.pal_potential import PALRunConfig
+from repro.core import PAL, UserGene, UserModel, UserOracle
+from repro.core import acquisition as acq
+from repro.core import budget as bud
+from repro.core import committee as cmte
+from repro.core.buffers import OracleInputBuffer
+from repro.serving.engine import CommitteeServer
+
+
+K, IN_DIM, OUT_DIM = 5, 6, 3
+
+
+def _committee(seed=0):
+    rng = np.random.RandomState(seed)
+    members = [{"w": jnp.asarray(rng.randn(IN_DIM, OUT_DIM)
+                                 .astype(np.float32) * 0.5)}
+               for _ in range(K)]
+    return members, cmte.stack_members(members), (lambda p, x: x @ p["w"])
+
+
+def _predict_all(members):
+    def predict_all(xs):
+        x = np.stack([np.asarray(v, np.float32) for v in xs])
+        return np.stack([x @ np.asarray(m["w"]) for m in members])
+    return predict_all
+
+
+def _drift_batches(n_rounds, n, *, seed=1, scale0=0.5, scale1=2.0):
+    """Input batches whose committee disagreement drifts: the linear
+    committee's std scales with |x|, so ramping the input scale ramps the
+    std distribution a static threshold would mis-rate."""
+    rng = np.random.RandomState(seed)
+    out = []
+    for r in range(n_rounds):
+        s = scale0 + (scale1 - scale0) * r / max(n_rounds - 1, 1)
+        out.append([(rng.randn(IN_DIM) * s).astype(np.float32)
+                    for _ in range(n)])
+    return out
+
+
+def _engines(members, cparams, apply_fn, threshold, rules):
+    return {
+        "fused_xla": acq.FusedEngine(apply_fn, cparams, threshold,
+                                     rules=rules, impl="xla"),
+        "fused_pallas": acq.FusedEngine(apply_fn, cparams, threshold,
+                                        rules=rules, impl="pallas_interpret"),
+        "legacy": acq.LegacyEngine(_predict_all(members), threshold,
+                                   rules=rules),
+    }
+
+
+# ---------------------------------------------------------------------------
+# controller convergence
+# ---------------------------------------------------------------------------
+
+
+def test_budget_rule_converges_to_target_rate_under_drift():
+    """With the input-std distribution drifting 4x over the run, the
+    realized selected-per-round rate must settle at the configured target
+    (a static threshold would drift from near-0 to near-1)."""
+    members, cparams, apply_fn = _committee()
+    target = 0.25
+    eng = acq.FusedEngine(
+        apply_fn, cparams, 0.5,
+        rules=(bud.BudgetRule(target=target, thr_init=0.5, horizon=8),),
+        impl="xla")
+    batches = _drift_batches(80, 32)
+    rates = [float(eng.score(b).mask.mean()) for b in batches]
+    settled = np.mean(rates[40:])
+    assert abs(settled - target) < 0.05, (settled, rates[40:])
+    # the carried EMA agrees with the realized rate
+    ema = float(np.asarray(eng.rule_state[0]["ema_rate"]))
+    assert abs(ema - target) < 0.1
+    assert int(np.asarray(eng.rule_state[0]["rounds"])) == len(batches)
+
+
+def test_static_threshold_drifts_where_budget_holds():
+    """Sanity for the premise: same drifting stream, static ThresholdRule
+    — realized rate swings far outside the band the controller holds."""
+    members, cparams, apply_fn = _committee()
+    batches = _drift_batches(80, 32)
+    probe = acq.LegacyEngine(_predict_all(members), 0.0).score(batches[0])
+    t = float(np.quantile(probe.scalar_std, 0.9))   # rate ~0.1 at scale0
+    eng = acq.FusedEngine(apply_fn, cparams, t, impl="xla")
+    rates = [float(eng.score(b).mask.mean()) for b in batches]
+    assert np.mean(rates[60:]) - np.mean(rates[:5]) > 0.5
+
+
+def test_budget_threshold_bounded():
+    """A long all-certain stretch cannot push the threshold below thr_min
+    (controller authority is clamped)."""
+    members, cparams, apply_fn = _committee()
+    rule = bud.BudgetRule(target=0.5, thr_init=0.5, horizon=4)
+    eng = acq.FusedEngine(apply_fn, cparams, 0.5, rules=(rule,), impl="xla")
+    rng = np.random.RandomState(3)
+    for _ in range(200):    # tiny inputs -> std ~ 0 -> nothing selectable
+        eng.score([(rng.randn(IN_DIM) * 1e-4).astype(np.float32)
+                   for _ in range(8)])
+    thr = float(np.asarray(eng.rule_state[0]["threshold"]))
+    lo, hi = rule._bounds()
+    assert lo <= thr <= hi
+    assert thr == pytest.approx(lo)
+
+
+# ---------------------------------------------------------------------------
+# fused-vs-legacy parity for the stateful rules
+# ---------------------------------------------------------------------------
+
+
+def test_budget_rule_parity_across_backends():
+    members, cparams, apply_fn = _committee(seed=2)
+    rules = (bud.BudgetRule(target=0.3, thr_init=0.4, horizon=8),)
+    engines = _engines(members, cparams, apply_fn, 0.4, rules)
+    for r, batch in enumerate(_drift_batches(25, 12, seed=5)):
+        masks = {n: e.score(batch).mask for n, e in engines.items()}
+        ref = masks["legacy"]
+        for name, m in masks.items():
+            np.testing.assert_array_equal(m, ref, err_msg=f"{name} @ {r}")
+    thr = {n: float(np.asarray(e.rule_state[0]["threshold"]))
+           for n, e in engines.items()}
+    for name, t in thr.items():
+        assert t == pytest.approx(thr["legacy"], rel=1e-4), (name, thr)
+    assert any(float(np.asarray(e.rule_state[0]["rounds"])) == 25
+               for e in engines.values())
+
+
+def test_reweight_rule_parity_across_backends():
+    members, cparams, apply_fn = _committee(seed=4)
+    def rules():
+        return (bud.RollingReweightRule(n_buckets=16, decay=0.8, boost=1.0),
+                acq.ThresholdRule(0.4))
+    engines = _engines(members, cparams, apply_fn, 0.4, rules())
+    for r, batch in enumerate(_drift_batches(15, 10, seed=6)):
+        masks = {n: e.score(batch).mask for n, e in engines.items()}
+        for name, m in masks.items():
+            np.testing.assert_array_equal(m, masks["legacy"],
+                                          err_msg=f"{name} @ {r}")
+    scores = {n: np.asarray(e.rule_state[0]["scores"])
+              for n, e in engines.items()}
+    for name, s in scores.items():
+        np.testing.assert_allclose(s, scores["legacy"], rtol=1e-4,
+                                   atol=1e-6, err_msg=name)
+    assert scores["legacy"].max() > 0
+
+
+def test_budget_pipeline_single_trace_per_bucket():
+    """Stateful rules ride the same shape-bucketed jit cache: varying n
+    compiles once per bucket, state threads through without retraces."""
+    members, cparams, apply_fn = _committee(seed=7)
+    eng = acq.FusedEngine(
+        apply_fn, cparams, 0.4,
+        rules=(bud.RollingReweightRule(n_buckets=8),
+               bud.BudgetRule(target=0.3, thr_init=0.4)),
+        impl="xla")
+    rng = np.random.RandomState(8)
+    for n in (5, 8, 3, 7, 6):
+        eng.score([rng.randn(IN_DIM).astype(np.float32) for _ in range(n)])
+    assert eng.trace_counts == {8: 1}
+    assert int(np.asarray(eng.rule_state[1]["rounds"])) == 5
+
+
+# ---------------------------------------------------------------------------
+# semantics
+# ---------------------------------------------------------------------------
+
+
+def test_budget_rate_uses_true_n_not_bucket_padding():
+    """An all-uncertain round of n=8 in a 32-wide bucket is rate 1.0, not
+    8/32: over-budget, so the threshold must RISE."""
+    members, cparams, apply_fn = _committee(seed=9)
+    eng = acq.FusedEngine(
+        apply_fn, cparams, 1e-6,
+        rules=(bud.BudgetRule(target=0.5, thr_init=1e-3, horizon=4),),
+        impl="xla", min_bucket=32)
+    rng = np.random.RandomState(10)
+    uq = eng.score([(rng.randn(IN_DIM) * 5).astype(np.float32)
+                    for _ in range(8)])
+    assert uq.mask.all()                       # everything over thr_init
+    thr = float(np.asarray(eng.rule_state[0]["threshold"]))
+    assert thr > 1e-3                          # rate 1.0 > target: raise
+    ema = float(np.asarray(eng.rule_state[0]["ema_rate"]))
+    # EMA initialized at target, one step toward rate 1.0 with alpha=1/4
+    assert ema == pytest.approx(0.5 + (1.0 - 0.5) / 4)
+
+
+def test_reweight_boosts_recently_uncertain_region():
+    """Use Case 2 semantics: after a round of high std in region A, a
+    borderline sample in A outranks an identical-raw-std sample in a cold
+    region for downstream rules."""
+    rule = bud.RollingReweightRule(n_buckets=32, decay=0.9, boost=1.0,
+                                   bucket_width=0.5, seed=0)
+    state = rule.init_state()
+    a, b = np.float32(0.3), np.float32(7.7)    # distinct buckets (1-D x)
+    ids = np.asarray(rule._bucket_ids(np.array([[a], [b]], np.float32)))
+    assert ids[0] != ids[1]
+
+    def stats(xs, stds):
+        n = len(xs)
+        return acq.UQStats(
+            x=np.asarray(xs, np.float32).reshape(n, 1), mean=None,
+            scalar_std=np.asarray(stds, np.float32),
+            component_std=None, valid=np.ones(n, bool), n_valid=n)
+
+    # round 1: region A very uncertain, region B quiet
+    _, _, state = rule.apply_stateful(stats([a, b], [1.0, 0.05]),
+                                      np.ones(2, bool), state)
+    # round 2: equal raw std in both regions — A must come out boosted
+    st2, _, state = rule.apply_stateful(stats([a, b], [0.4, 0.4]),
+                                        np.ones(2, bool), state)
+    boosted = np.asarray(st2.scalar_std)
+    assert boosted[0] > boosted[1]
+    assert boosted[0] == pytest.approx(0.8, rel=1e-5)   # full boost: 2x
+
+
+def test_advance_false_is_read_only():
+    """Manager re-scoring / read-only serving must not consume controller
+    rounds: advance=False evaluates against current state untouched."""
+    members, cparams, apply_fn = _committee(seed=11)
+    rules = (bud.BudgetRule(target=0.3, thr_init=0.4, horizon=8),)
+    for eng in _engines(members, cparams, apply_fn, 0.4, rules).values():
+        batch = _drift_batches(1, 10, seed=12)[0]
+        eng.score(batch)
+        before = jax.tree.map(np.asarray, eng.rule_state)
+        eng.score(batch, advance=False)
+        after = jax.tree.map(np.asarray, eng.rule_state)
+        for x, y in zip(jax.tree.leaves(before), jax.tree.leaves(after)):
+            np.testing.assert_array_equal(x, y)
+
+
+def test_concurrent_advancing_scorers_never_lose_rounds():
+    """Exchange + serving (advance=True) share one engine: the read-state
+    -> dispatch -> store-state cycle is atomic, so N concurrent advancing
+    calls advance the controller by exactly N rounds (a lost update would
+    under-integrate the PI controller under serving load)."""
+    import threading
+
+    members, cparams, apply_fn = _committee(seed=30)
+    eng = acq.FusedEngine(
+        apply_fn, cparams, 0.4,
+        rules=(bud.BudgetRule(target=0.3, thr_init=0.4, horizon=8),),
+        impl="xla")
+    per_thread, n_threads = 25, 4
+    barrier = threading.Barrier(n_threads)
+    errors = []
+
+    def worker(seed):
+        try:
+            barrier.wait()
+            rng = np.random.RandomState(seed)
+            for _ in range(per_thread):
+                eng.score([rng.randn(IN_DIM).astype(np.float32)
+                           for _ in range(8)])
+        except Exception as e:  # noqa: BLE001
+            errors.append(e)
+
+    threads = [threading.Thread(target=worker, args=(s,))
+               for s in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors
+    assert int(np.asarray(eng.rule_state[0]["rounds"])) \
+        == per_thread * n_threads
+
+
+def test_uqresult_reports_raw_std_not_boosted():
+    """Re-weighting biases selection only: the UQResult statistics the
+    generators/Manager consume stay the raw committee std."""
+    members, cparams, apply_fn = _committee(seed=13)
+    batch = _drift_batches(1, 9, seed=14)[0]
+    raw = acq.FusedEngine(apply_fn, cparams, 0.4, impl="xla").score(batch)
+    eng = acq.FusedEngine(
+        apply_fn, cparams, 0.4,
+        rules=(bud.RollingReweightRule(n_buckets=8, boost=5.0),
+               acq.ThresholdRule(0.4)),
+        impl="xla")
+    uq = eng.score(batch)
+    np.testing.assert_allclose(uq.scalar_std, raw.scalar_std, rtol=1e-6)
+    np.testing.assert_allclose(uq.component_std, raw.component_std,
+                               rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# state checkpoint / restore
+# ---------------------------------------------------------------------------
+
+
+def test_engine_state_dict_roundtrip():
+    members, cparams, apply_fn = _committee(seed=15)
+    rules = (bud.RollingReweightRule(n_buckets=8),
+             bud.BudgetRule(target=0.2, thr_init=0.4))
+    eng = acq.FusedEngine(apply_fn, cparams, 0.4, rules=rules, impl="xla")
+    for batch in _drift_batches(5, 8, seed=16):
+        eng.score(batch)
+    snap = eng.state_dict()
+    assert all(isinstance(x, np.ndarray) for x in jax.tree.leaves(snap))
+    eng2 = acq.FusedEngine(apply_fn, cparams, 0.4, rules=rules, impl="xla")
+    eng2.load_state_dict(snap)
+    for x, y in zip(jax.tree.leaves(eng.rule_state),
+                    jax.tree.leaves(eng2.rule_state)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y))
+    # restored engine continues identically
+    nxt = _drift_batches(1, 8, seed=17)[0]
+    np.testing.assert_array_equal(eng.score(nxt).mask, eng2.score(nxt).mask)
+
+
+class _Gene(UserGene):
+    def __init__(self, rank, rd):
+        super().__init__(rank, rd)
+        self.rng = np.random.RandomState(rank)
+
+    def generate_new_data(self, data_to_gene):
+        return False, self.rng.randn(IN_DIM).astype(np.float32)
+
+
+class _Model(UserModel):
+    def __init__(self, rank, rd, dev, mode):
+        super().__init__(rank, rd, dev, mode)
+        self.w = np.random.RandomState(rank).randn(IN_DIM, OUT_DIM) * 0.5
+
+    def predict(self, xs):
+        return [np.asarray(x) @ self.w for x in xs]
+
+    def update(self, warr):
+        self.w = warr.reshape(IN_DIM, OUT_DIM)
+
+    def get_weight(self):
+        return self.w.reshape(-1).astype(np.float32)
+
+    def get_weight_size(self):
+        return IN_DIM * OUT_DIM
+
+    def add_trainingset(self, dps):
+        pass
+
+    def retrain(self, req):
+        return False
+
+
+class _Oracle(UserOracle):
+    def run_calc(self, inp):
+        return inp, np.zeros(OUT_DIM, np.float32)
+
+
+def test_budget_state_survives_pal_checkpoint_restore():
+    tmp = tempfile.mkdtemp()
+    members, cparams, apply_fn = _committee(seed=21)
+    cfg = PALRunConfig(result_dir=tmp, gene_process=2, orcl_process=0,
+                       pred_process=1, ml_process=1, std_threshold=0.4,
+                       oracle_budget=0.3, budget_horizon=8,
+                       reweight_buckets=16)
+    pal = PAL(cfg, make_generator=_Gene, make_model=_Model,
+              make_oracle=_Oracle,
+              committee=acq.CommitteeSpec(apply_fn, cparams))
+    # config knobs built the budgeted pipeline on the fused engine
+    assert isinstance(pal.engine, acq.FusedEngine)
+    kinds = tuple(type(r).__name__ for r in pal.engine.rules)
+    assert kinds == ("RollingReweightRule", "BudgetRule")
+    # drive some exchange rounds so the carried state moves
+    for _ in range(10):
+        pal.exchange.step()
+    moved = pal.engine.state_dict()
+    assert int(moved[1]["rounds"]) == 10
+    pal.checkpoint()
+
+    pal2 = PAL(cfg, make_generator=_Gene, make_model=_Model,
+               make_oracle=_Oracle,
+               committee=acq.CommitteeSpec(apply_fn, cparams), resume=True)
+    restored = pal2.engine.state_dict()
+    for x, y in zip(jax.tree.leaves(moved), jax.tree.leaves(restored)):
+        np.testing.assert_allclose(x, y)
+    assert int(restored[1]["rounds"]) == 10
+
+
+def test_load_state_dict_skips_mismatched_pipeline():
+    """Resuming under a CHANGED budget/re-weighting config must not crash
+    at trace time: a structurally mismatched snapshot is skipped (warning)
+    and the fresh state keeps working."""
+    members, cparams, apply_fn = _committee(seed=31)
+    donor = acq.FusedEngine(
+        apply_fn, cparams, 0.4,
+        rules=(bud.RollingReweightRule(n_buckets=8),
+               bud.BudgetRule(target=0.2, thr_init=0.4)),
+        impl="xla")
+    donor.score(_drift_batches(1, 8, seed=32)[0])
+    snap = donor.state_dict()                  # (reweight, budget) 2-tuple
+
+    eng = acq.FusedEngine(                     # budget-only pipeline now
+        apply_fn, cparams, 0.4,
+        rules=(bud.BudgetRule(target=0.2, thr_init=0.4),), impl="xla")
+    fresh = eng.state_dict()
+    eng.load_state_dict(snap)                  # mismatch: skipped
+    for x, y in zip(jax.tree.leaves(eng.state_dict()),
+                    jax.tree.leaves(fresh)):
+        np.testing.assert_array_equal(x, y)
+    uq = eng.score(_drift_batches(1, 8, seed=33)[0])    # still scores
+    assert uq.mask.shape == (8,)
+    # matching snapshot still restores
+    eng.load_state_dict(snap[1:])
+    assert float(eng.state_dict()[0]["rounds"]) == 1
+
+
+def test_manager_fresh_score_does_not_consume_budget():
+    """The runtime's fresh_score closure (dynamic_oracle_list) re-scores
+    through the same engine WITHOUT advancing the controller."""
+    tmp = tempfile.mkdtemp()
+    members, cparams, apply_fn = _committee(seed=22)
+    cfg = PALRunConfig(result_dir=tmp, gene_process=2, orcl_process=0,
+                       pred_process=1, ml_process=1, std_threshold=0.4,
+                       oracle_budget=0.3)
+    pal = PAL(cfg, make_generator=_Gene, make_model=_Model,
+              make_oracle=_Oracle,
+              committee=acq.CommitteeSpec(apply_fn, cparams))
+    pal.exchange.step()
+    before = pal.engine.state_dict()
+    rng = np.random.RandomState(0)
+    pal.manager.fresh_score([rng.randn(IN_DIM) for _ in range(4)])
+    after = pal.engine.state_dict()
+    for x, y in zip(jax.tree.leaves(before), jax.tree.leaves(after)):
+        np.testing.assert_array_equal(x, y)
+
+
+# ---------------------------------------------------------------------------
+# config-driven pipeline factory
+# ---------------------------------------------------------------------------
+
+
+def test_rules_from_config_combinations():
+    assert bud.rules_from_config(PALRunConfig()) is None
+    r = bud.rules_from_config(PALRunConfig(oracle_budget=0.2,
+                                           budget_horizon=32,
+                                           std_threshold=0.7))
+    assert len(r) == 1 and isinstance(r[0], bud.BudgetRule)
+    assert r[0].target == 0.2 and r[0].horizon == 32
+    assert r[0].thr_init == 0.7
+    r = bud.rules_from_config(PALRunConfig(reweight_buckets=8,
+                                           std_threshold=0.7))
+    assert [type(x) for x in r] == [bud.RollingReweightRule,
+                                    acq.ThresholdRule]
+    assert r[1].threshold == 0.7
+    r = bud.rules_from_config(PALRunConfig(reweight_buckets=8,
+                                           oracle_budget=0.2))
+    assert [type(x) for x in r] == [bud.RollingReweightRule, bud.BudgetRule]
+
+
+def test_explicit_rules_override_config_budget():
+    members, cparams, apply_fn = _committee(seed=23)
+    cfg = PALRunConfig(oracle_budget=0.2)
+    eng = acq.make_engine(cfg,
+                          committee=acq.CommitteeSpec(apply_fn, cparams),
+                          rules=(acq.ThresholdRule(0.1),))
+    assert [type(r) for r in eng.rules] == [acq.ThresholdRule]
+
+
+# ---------------------------------------------------------------------------
+# serving: batch-level UQ through the same engine + controller
+# ---------------------------------------------------------------------------
+
+
+def test_committee_server_returns_uq_and_routes_to_oracle():
+    members, cparams, apply_fn = _committee(seed=24)
+    eng = acq.FusedEngine(
+        apply_fn, cparams, 0.4,
+        rules=(bud.BudgetRule(target=0.25, thr_init=0.4, horizon=8),),
+        impl="xla")
+    obuf = OracleInputBuffer()
+    server = CommitteeServer(eng, obuf)
+    rng = np.random.RandomState(25)
+    batch = [(rng.randn(IN_DIM) * 2).astype(np.float32) for _ in range(12)]
+    mean, uq = server.predict(batch)
+    assert isinstance(uq, acq.UQResult)
+    assert mean.shape == (12, OUT_DIM)
+    np.testing.assert_allclose(mean, uq.mean)
+    assert uq.mask.sum() > 0
+    assert len(obuf) == int(uq.mask.sum())     # selected rows were routed
+    routed = obuf.snapshot()
+    want = [batch[int(i)] for i in np.where(uq.mask)[0]]
+    for a, b in zip(routed, want):
+        np.testing.assert_array_equal(a, b)
+    assert server.requests == 12 and server.routed == len(routed)
+    # served traffic advanced the shared controller (one round consumed)
+    assert int(np.asarray(eng.rule_state[0]["rounds"])) == 1
+
+
+def test_committee_server_read_only_mode():
+    members, cparams, apply_fn = _committee(seed=26)
+    eng = acq.FusedEngine(
+        apply_fn, cparams, 0.4,
+        rules=(bud.BudgetRule(target=0.25, thr_init=0.4),), impl="xla")
+    server = CommitteeServer(eng, None, advance=False)
+    rng = np.random.RandomState(27)
+    for _ in range(3):
+        server.predict([(rng.randn(IN_DIM) * 2).astype(np.float32)
+                        for _ in range(6)])
+    assert int(np.asarray(eng.rule_state[0]["rounds"])) == 0
+
+
+def test_pal_serve_uq_builds_server_on_shared_engine():
+    tmp = tempfile.mkdtemp()
+    members, cparams, apply_fn = _committee(seed=28)
+    cfg = PALRunConfig(result_dir=tmp, gene_process=2, orcl_process=0,
+                       pred_process=1, ml_process=1, std_threshold=0.4,
+                       oracle_budget=0.3, serve_uq=True)
+    pal = PAL(cfg, make_generator=_Gene, make_model=_Model,
+              make_oracle=_Oracle,
+              committee=acq.CommitteeSpec(apply_fn, cparams))
+    assert pal.server is not None
+    assert pal.server.engine is pal.engine
+    assert pal.server.oracle_buffer is pal.oracle_buffer
+    rng = np.random.RandomState(29)
+    _, uq = pal.server.predict([(rng.randn(IN_DIM) * 2).astype(np.float32)
+                                for _ in range(5)])
+    assert uq.mask.shape == (5,)
+    assert len(pal.oracle_buffer) == int(uq.mask.sum())
+    # served traffic shares the controller, so it counts toward the
+    # reported realized rate (total metered demand, not exchange-only)
+    assert pal.report()["oracle_rate"] == \
+        pytest.approx(int(uq.mask.sum()) / 5)

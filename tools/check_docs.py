@@ -1,0 +1,86 @@
+"""Docs smoke-checker (CI `docs` job; `make docs-check`).
+
+Two guarantees for README.md and docs/*.md:
+
+* every fenced ```python code block actually runs — each block is
+  exec'd in its own namespace with src/ importable, so API drift in the
+  docs fails CI instead of rotting silently.  Blocks whose first line is
+  ``# doc: no-run`` are skipped (illustrative shell-output, pseudo-code).
+* every intra-repo markdown link ([text](relative/path)) resolves to an
+  existing file, anchors stripped.  http(s) links are not checked.
+
+Usage:  PYTHONPATH=src python tools/check_docs.py [files...]
+Exit status: number of failures (0 = clean).
+"""
+from __future__ import annotations
+
+import glob
+import os
+import re
+import sys
+import traceback
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+
+BLOCK_RE = re.compile(r"```python[^\n]*\n(.*?)```", re.DOTALL)
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)]+)\)")
+
+
+def default_files():
+    files = [os.path.join(REPO, "README.md")]
+    files += sorted(glob.glob(os.path.join(REPO, "docs", "*.md")))
+    return [f for f in files if os.path.exists(f)]
+
+
+def check_snippets(path: str) -> int:
+    failures = 0
+    text = open(path).read()
+    for i, m in enumerate(BLOCK_RE.finditer(text), 1):
+        code = m.group(1)
+        first = code.lstrip().splitlines()[0] if code.strip() else ""
+        if first.strip().startswith("# doc: no-run"):
+            continue
+        line = text[:m.start()].count("\n") + 1
+        try:
+            exec(compile(code, f"{path}:block{i}", "exec"), {})  # noqa: S102
+            print(f"  ok   snippet {i} (line {line})")
+        except BaseException:  # noqa: BLE001
+            failures += 1
+            print(f"  FAIL snippet {i} (line {line}):")
+            traceback.print_exc()
+    return failures
+
+
+def check_links(path: str) -> int:
+    failures = 0
+    base = os.path.dirname(os.path.abspath(path))
+    for m in LINK_RE.finditer(open(path).read()):
+        target = m.group(1).strip()
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        rel = target.split("#", 1)[0]
+        if not rel:
+            continue
+        resolved = os.path.normpath(os.path.join(base, rel))
+        if not os.path.exists(resolved):
+            failures += 1
+            print(f"  FAIL broken link: ({target}) -> {resolved}")
+    return failures
+
+
+def main(argv):
+    if SRC not in sys.path:
+        sys.path.insert(0, SRC)
+    files = [os.path.abspath(a) for a in argv] or default_files()
+    total = 0
+    for f in files:
+        print(f"== {os.path.relpath(f, REPO)}")
+        total += check_snippets(f)
+        total += check_links(f)
+    print(f"docs check: {'OK' if total == 0 else f'{total} failure(s)'}")
+    return min(total, 99)
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
