@@ -4,20 +4,33 @@
 PY := python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: check test bench-smoke bench docs-check
+.PHONY: check test bench-smoke bench bench-check docs-check
 
-check: test bench-smoke docs-check
+# sequential by construction (recipe lines, not prerequisites): under
+# `make -j` prerequisite targets run concurrently, and bench-check must
+# not read BENCH_*.json while bench-smoke is still writing them
+check:
+	$(MAKE) test
+	$(MAKE) bench-smoke
+	$(MAKE) bench-check
+	$(MAKE) docs-check
 
 test:
 	$(PY) -m pytest -x -q
 
-# hot-path + example-rot smoke: quick fused-engine + budget-controller
-# benchmarks (write BENCH_*.json, uploaded as CI artifacts) and a
-# short-budget quickstart run through the full PAL loop
+# hot-path + example-rot smoke: quick fused-engine + budget-controller +
+# serving-queue benchmarks (write BENCH_*.json, uploaded as CI artifacts)
+# and a short-budget quickstart run through the full PAL loop
 bench-smoke:
 	$(PY) benchmarks/committee_uq.py --quick
 	$(PY) benchmarks/budget_controller.py --quick
+	$(PY) benchmarks/serving_queue.py --quick
 	$(PY) examples/quickstart.py --timeout 20
+
+# regression gate: headline BENCH_*.json metrics vs the committed
+# benchmarks/baselines/ (fails CI when a speedup/ratio regresses)
+bench-check:
+	$(PY) tools/check_bench.py
 
 # docs smoke: run every ```python snippet in README.md / docs/*.md and
 # verify intra-repo markdown links resolve

@@ -6,6 +6,8 @@
   committee_uq — fused single-dispatch exchange path vs sequential members
   budget       — cross-round oracle-rate controller: budget tracking under
                  std drift + hot-path overhead vs the default rule
+  serving      — queue-batched + mesh-sharded committee serving vs
+                 per-call CommitteeServer.predict at request size 1
   kernels      — Pallas-path microbenchmarks (XLA schedule, host timing)
 
 ``python -m benchmarks.run`` runs everything; ``--only <name>`` filters.
@@ -52,6 +54,12 @@ def bench_budget(smoke: bool):
     from benchmarks import budget_controller
     _section("Cross-round budgeted acquisition (oracle-rate controller)")
     budget_controller.main(["--smoke"] if smoke else [])
+
+
+def bench_serving(smoke: bool):
+    from benchmarks import serving_queue
+    _section("Queue-batched, mesh-sharded committee serving")
+    serving_queue.main(["--smoke"] if smoke else [])
 
 
 def bench_kernels():
@@ -102,7 +110,7 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     choices=["speedup", "overhead", "scaling", "kernels",
-                             "committee_uq", "budget"])
+                             "committee_uq", "budget", "serving"])
     ap.add_argument("--simulate", action="store_true",
                     help="run the measured PAL-runtime speedup simulation")
     ap.add_argument("--smoke", action="store_true",
@@ -120,6 +128,8 @@ def main():
         bench_committee_uq(args.smoke)
     if args.only in (None, "budget"):
         bench_budget(args.smoke)
+    if args.only in (None, "serving"):
+        bench_serving(args.smoke)
     if args.only in (None, "kernels"):
         bench_kernels()
     print(f"\n# total benchmark wall time: {time.time() - t0:.1f}s")

@@ -1,0 +1,195 @@
+"""Benchmark: queue-batched, mesh-sharded committee serving at request
+scale (serving/queue.ServingQueue + the sharded FusedEngine) vs per-call
+``CommitteeServer.predict``.
+
+The request-scale workload the ROADMAP north-star names: many concurrent
+clients, each asking for ONE committee prediction + UQ.  Per-call serving
+pays a full engine dispatch (pad to bucket, launch, sync) per request;
+the queue accumulates requests into microbatches on a size-or-deadline
+trigger and pays one dispatch per ``max_batch`` requests, through the
+SAME fused acquisition dispatch — and, with ``mesh=``, the same dispatch
+laid out over the device mesh (committee over 'model', requests over
+'data'; degenerate on a 1-device host, where sharded parity is what's
+being exercised).
+
+Metrics, written to ``BENCH_serving_queue.json``:
+
+* requests/s — per-call baseline (serial caller loop at request size 1)
+  vs queued (N submitter threads driving the microbatcher);
+* per-request latency p50/p99 (submit -> result) for both paths;
+* ``queued_vs_percall_speedup`` — the headline ratio
+  (acceptance: >= 3x on CPU at request size 1);
+* amortization — requests per dispatch the queue realized.
+
+Usage:  PYTHONPATH=src python benchmarks/serving_queue.py [--quick] [--out F]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import threading
+import time
+
+import jax
+import numpy as np
+
+from repro.core import acquisition as acq
+from repro.core import committee as cmte
+from repro.launch.mesh import make_host_mesh
+from repro.serving import CommitteeServer, QueueConfig, ServingQueue
+
+try:        # `python -m benchmarks.run` (package) vs direct script run
+    from benchmarks.committee_uq import (
+        K, N_GEN, IN_DIM, HIDDEN, OUT_DIM, THRESHOLD, _inputs, _make_members,
+        _mlp_apply,
+    )
+except ImportError:
+    from committee_uq import (
+        K, N_GEN, IN_DIM, HIDDEN, OUT_DIM, THRESHOLD, _inputs, _make_members,
+        _mlp_apply,
+    )
+
+MAX_BATCH = 64          # = one engine shape bucket: queue adds no traces
+MAX_WAIT_MS = 5.0
+SUBMITTERS = 8          # client threads
+WINDOW = 16             # outstanding requests per client (bounded pipeline):
+                        # 8 x 16 = 128 in flight keeps full microbatches
+                        # reachable without unbounded backlog latency
+
+
+def _percentiles(lat_s):
+    lat_ms = np.asarray(lat_s) * 1e3
+    return (float(np.percentile(lat_ms, 50)),
+            float(np.percentile(lat_ms, 99)))
+
+
+def bench_percall(server, requests):
+    """Baseline: one CommitteeServer.predict per size-1 request."""
+    lat = []
+    t0 = time.perf_counter()
+    for row in requests:
+        t1 = time.perf_counter()
+        server.predict([row])
+        lat.append(time.perf_counter() - t1)
+    wall = time.perf_counter() - t0
+    return wall, lat
+
+
+def bench_queued(queue, requests, submitters=SUBMITTERS, window=WINDOW):
+    """N client threads each drive a bounded pipeline of size-1 requests:
+    up to ``window`` outstanding futures per client (requests keep arriving
+    while earlier ones are in flight — the many-tiny-clients shape), with
+    per-request latency stamped submit -> resolve."""
+    chunks = [requests[i::submitters] for i in range(submitters)]
+    lat_chunks = [[] for _ in range(submitters)]
+
+    def client(rows, lat):
+        gate = threading.Semaphore(window)
+
+        def done(t1, fut):
+            lat.append(time.perf_counter() - t1)
+            gate.release()
+            fut.result()        # surface dispatch errors
+
+        futs = []
+        for row in rows:
+            gate.acquire()
+            t1 = time.perf_counter()
+            fut = queue.submit([row])
+            fut.add_done_callback(lambda f, t1=t1: done(t1, f))
+            futs.append(fut)
+        for f in futs:
+            f.result()
+
+    threads = [threading.Thread(target=client, args=(c, l))
+               for c, l in zip(chunks, lat_chunks)]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    wall = time.perf_counter() - t0
+    return wall, [v for l in lat_chunks for v in l]
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", "--quick", dest="smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=None)
+    ap.add_argument("--out", default="BENCH_serving_queue.json")
+    args = ap.parse_args(argv)
+    # smoke still needs a few hundred ms of steady state: thread startup
+    # and the first deadline-paced dispatches dominate shorter runs
+    n_requests = args.requests or (1024 if args.smoke else 4096)
+
+    rng = np.random.RandomState(0)
+    members = _make_members(rng)
+    cparams = cmte.stack_members(members)
+    requests = _inputs(rng, n_requests)
+
+    # --- per-call baseline: unsharded engine, one dispatch per request ----
+    eng_base = acq.FusedEngine(_mlp_apply, cparams, THRESHOLD, impl="xla")
+    server_base = CommitteeServer(eng_base, None)
+    server_base.predict([requests[0]])          # warm the size-1 bucket
+    pc_wall, pc_lat = bench_percall(server_base, requests)
+    pc_rps = n_requests / pc_wall
+    pc_p50, pc_p99 = _percentiles(pc_lat)
+
+    # --- queued + sharded: mesh-parallel engine behind the microbatcher ---
+    eng_mesh = acq.FusedEngine(_mlp_apply, cparams, THRESHOLD, impl="xla",
+                               mesh=make_host_mesh())
+    server_mesh = CommitteeServer(eng_mesh, None)
+    # warm every bucket a partial microbatch can land in, so measured
+    # latency is steady-state serving, not first-call compiles
+    b = 8
+    while b <= MAX_BATCH:
+        server_mesh.predict(requests[:b])
+        b *= 2
+    with ServingQueue(server_mesh,
+                      QueueConfig(max_batch=MAX_BATCH,
+                                  max_wait_ms=MAX_WAIT_MS)) as queue:
+        q_wall, q_lat = bench_queued(queue, requests)
+        dispatches = queue.dispatches
+        batched = queue.batched_requests
+    q_rps = n_requests / q_wall
+    q_p50, q_p99 = _percentiles(q_lat)
+    speedup = q_rps / pc_rps
+    amortization = batched / max(dispatches, 1)
+
+    # queue must reuse the engine's power-of-two buckets: traces only at
+    # bucket sizes, never one per microbatch size
+    trace_buckets = sorted(eng_mesh.trace_counts)
+    traces_ok = all(c == 1 for c in eng_mesh.trace_counts.values())
+
+    report = {
+        "config": {"K": K, "in_dim": IN_DIM, "hidden": HIDDEN,
+                   "out_dim": OUT_DIM, "threshold": THRESHOLD,
+                   "n_requests": n_requests, "request_size": 1,
+                   "max_batch": MAX_BATCH, "max_wait_ms": MAX_WAIT_MS,
+                   "submitters": SUBMITTERS, "mesh": "host (1x1)",
+                   "backend": jax.default_backend()},
+        "percall": {"requests_per_s": pc_rps, "p50_ms": pc_p50,
+                    "p99_ms": pc_p99},
+        "queued_sharded": {"requests_per_s": q_rps, "p50_ms": q_p50,
+                           "p99_ms": q_p99, "dispatches": dispatches,
+                           "requests_per_dispatch": amortization},
+        "queued_vs_percall_speedup": speedup,
+        "queue_reuses_engine_buckets": bool(traces_ok),
+        "trace_buckets": [int(b) for b in trace_buckets],
+    }
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2)
+
+    print(f"per-call     : {pc_rps:8.0f} req/s   "
+          f"p50 {pc_p50:.2f} ms  p99 {pc_p99:.2f} ms")
+    print(f"queued+shard : {q_rps:8.0f} req/s   "
+          f"p50 {q_p50:.2f} ms  p99 {q_p99:.2f} ms   "
+          f"({amortization:.1f} req/dispatch)")
+    print(f"speedup {speedup:.2f}x  (acceptance >= 3x)   "
+          f"bucket traces once: {traces_ok} {trace_buckets}")
+    print(f"wrote {args.out}")
+    return report
+
+
+if __name__ == "__main__":
+    main()

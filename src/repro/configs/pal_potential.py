@@ -55,6 +55,13 @@ class PALRunConfig:
                                      # given, per-member legacy otherwise
     uq_block_n: int = 128            # Pallas kernel row-block size
     uq_bucket: int = 8               # min power-of-two n_gen jit bucket
+    uq_mesh: str = ""                # '' (single device) | 'host'
+                                     # (degenerate 1x1 mesh, CI parity) |
+                                     # 'production' (16x16 data x model):
+                                     # mesh-parallel fused dispatch —
+                                     # committee over 'model' via the
+                                     # COMMITTEE sharding rules, request
+                                     # batch over 'data'
     # --- cross-round budgeted acquisition (core/budget.py) ---------------
     oracle_budget: float = 0.0       # >0: target oracle-selected fraction
                                      # per exchange round — installs the
@@ -68,11 +75,34 @@ class PALRunConfig:
                                      # 0 disables
     reweight_decay: float = 0.9      # per-round bucket-score decay
     reweight_boost: float = 1.0      # max relative acquisition-score boost
+    oracle_budget_exchange: float = 0.0  # per-stream target for exchange
+                                     # rounds; 0 falls back to the shared
+                                     # oracle_budget
+    oracle_budget_serve: float = 0.0     # per-stream target for served
+                                     # (STREAM_SERVE) rounds; 0 falls back
+                                     # to the shared oracle_budget.  Both
+                                     # streams steer ONE effective
+                                     # threshold (joint control), each
+                                     # against its own target;
+                                     # PAL.report() breaks out the
+                                     # per-stream realized rates
     serve_uq: bool = False           # serving: build a CommitteeServer on
                                      # the SAME engine (batch-level UQResult
                                      # per request; uncertain requests route
                                      # to the oracle buffer through the
                                      # same budget controller)
+    # --- queue-batched serving (serving/queue.py) -------------------------
+    serve_max_batch: int = 0         # >0 (with serve_uq): build
+                                     # PAL.serve_queue — a ServingQueue
+                                     # that fuses many small requests into
+                                     # one microbatched engine dispatch;
+                                     # best as a power of two matching the
+                                     # engine's shape buckets (no new
+                                     # traces).  0 disables
+    serve_max_wait_ms: float = 2.0   # queue deadline: a pending request is
+                                     # dispatched at the latest this many
+                                     # ms after it was enqueued, even if
+                                     # the microbatch is not full
 
 
 DEFAULT = PotentialConfig()

@@ -59,6 +59,15 @@ from repro.core.committee import (
 # Results and statistics
 # ---------------------------------------------------------------------------
 
+# Scoring-stream tags: every ``UQEngine.score`` round is attributed to the
+# traffic stream that produced it — the exchange hot loop or the serving
+# path.  The tag enters the fused dispatch as a TRACED scalar (part of
+# ``UQStats``), so stream-aware rules (``core/budget.BudgetRule`` with a
+# distinct ``target_serve``) meter both streams through ONE compiled
+# program per shape bucket instead of doubling the trace cache.
+STREAM_EXCHANGE = 0
+STREAM_SERVE = 1
+
 
 @dataclasses.dataclass
 class UQResult:
@@ -99,6 +108,7 @@ class UQStats:
     component_std: Any          # (nb,)
     valid: Any                  # (nb,) bool
     n_valid: Any                # scalar int
+    stream: Any = STREAM_EXCHANGE  # scalar int: STREAM_EXCHANGE | STREAM_SERVE
 
 
 # ---------------------------------------------------------------------------
@@ -260,7 +270,8 @@ class UQEngine:
     rule_state: Tuple[Any, ...] = ()
 
     def score(self, list_data: Sequence[np.ndarray], *,
-              advance: bool = True) -> UQResult:
+              advance: bool = True,
+              stream: int = STREAM_EXCHANGE) -> UQResult:
         raise NotImplementedError
 
     def refresh_from(self, store) -> int:
@@ -331,16 +342,41 @@ class FusedEngine(UQEngine):
 
     ``apply_fn(params, x)`` must map a single member's params over a batch
     ``x: (n, in_dim) -> (n, out_dim)``.
+
+    MESH-PARALLEL PATH (``mesh=``): the same single compiled dispatch, laid
+    out over a device mesh.  The stacked committee parameters are placed
+    over the mesh via the ``COMMITTEE`` logical-axis rules
+    (``sharding/rules.py``: ``COMMITTEE -> ('model',)``, with the standard
+    divisibility fallback — a K=4 committee on a 16-way model axis simply
+    replicates), the padded request batch is sharded over the ``data`` axis
+    (``BATCH`` rules), and the compiled program is constructed with
+    ``jax.jit``'s ``in_shardings``/``out_shardings`` so the vmapped
+    forward, the Welford UQ kernel, and the rule pipeline stay inside ONE
+    dispatch — XLA inserts the collectives.  Carried rule state and the
+    ``n_valid``/``stream`` scalars are replicated.  On the degenerate
+    ``launch.mesh.make_host_mesh()`` (1x1) every sharding resolves to the
+    single device and the program is the SAME computation as the
+    unsharded path — bit-identical results (tested).
     """
 
     def __init__(self, apply_fn: Callable, cparams: Any, threshold: float,
                  *, rules: Optional[Sequence[SelectionRule]] = None,
                  impl: str = "xla", min_bucket: int = 8,
-                 donate: bool = True, block_n: int = 128):
+                 donate: bool = True, block_n: int = 128,
+                 mesh=None, sharding_rules=None):
         from repro.kernels import ops as _ops
 
         self._ops = _ops
         self.apply = make_committee_apply(apply_fn)
+        self.mesh = mesh
+        self._mesh_rules = None
+        self._x_shardings: Dict[int, Any] = {}
+        if mesh is not None:
+            from repro.sharding.rules import MeshRules
+
+            self._mesh_rules = MeshRules(mesh, sharding_rules)
+            cparams = jax.device_put(
+                cparams, self._cparams_shardings(cparams))
         self.cparams = cparams
         self.threshold = float(threshold)
         self.rules = tuple(rules) if rules is not None \
@@ -371,12 +407,57 @@ class FusedEngine(UQEngine):
     def size(self) -> int:
         return committee_size(self.cparams)
 
+    # ------------------------------------------------------------ sharding
+    def _cparams_shardings(self, cparams):
+        """NamedShardings laying the stacked committee over the mesh: the
+        leading K axis follows the COMMITTEE logical-axis rules, every
+        other dimension is replicated (per-member params are small; it is
+        the K-way ensemble that scales out)."""
+        from repro.sharding.rules import committee_shardings
+
+        return committee_shardings(self._mesh_rules, cparams)
+
+    def _batch_sharding(self, nb: int):
+        """Request-batch sharding for one shape bucket: rows over the BATCH
+        rules' mesh axes (divisibility fallback applies — an 8-row bucket
+        on a 16-way data axis replicates), features replicated.  The spec
+        depends only on the bucket size: the feature dim's logical axis is
+        None (never mapped), so its concrete size is irrelevant — cached
+        per nb alongside the jit cache."""
+        from repro.configs import base as axes
+
+        sh = self._x_shardings.get(nb)
+        if sh is None:
+            sh = self._mesh_rules.sharding(
+                (axes.BATCH, None), (nb, 1), name="uq_batch")
+            self._x_shardings[nb] = sh
+        return sh
+
+    def _jit_shardings(self, nb: int):
+        """(in_shardings, out_shardings) for one bucket's compiled dispatch.
+        Row-wise outputs inherit the batch's row partitioning; scalars and
+        carried rule state are replicated."""
+        from jax.sharding import NamedSharding
+        from jax.sharding import PartitionSpec as P
+
+        mesh = self._mesh_rules.mesh
+        rep = NamedSharding(mesh, P())
+        x_sh = self._batch_sharding(nb)
+        row_axes = x_sh.spec[0] if len(x_sh.spec) else None
+        vec_sh = NamedSharding(mesh, P(row_axes))
+        mat_sh = NamedSharding(mesh, P(row_axes, None))
+        state_sh = jax.tree.map(lambda _: rep, tuple(self.rule_state))
+        cp_sh = self._cparams_shardings(self.cparams)
+        in_sh = (cp_sh, x_sh, rep, rep, state_sh)
+        out_sh = (mat_sh, vec_sh, vec_sh, vec_sh, state_sh)
+        return in_sh, out_sh
+
     # ------------------------------------------------------------- compile
     def _compiled_locked(self, nb: int) -> Callable:
         # caller holds self._compile_lock
         fn = self._cache.get(nb)
         if fn is None:
-            def fused(cparams, x, n_valid, rstate):
+            def fused(cparams, x, n_valid, stream, rstate):
                 # trace-time counter: fires once per (bucket) compilation
                 self.trace_counts[nb] = self.trace_counts.get(nb, 0) + 1
                 preds = self.apply(cparams, x)
@@ -386,7 +467,7 @@ class FusedEngine(UQEngine):
                 valid = jnp.arange(nb) < n_valid
                 stats = UQStats(x=x, mean=mean, scalar_std=sstd,
                                 component_std=cstd, valid=valid,
-                                n_valid=n_valid)
+                                n_valid=n_valid, stream=stream)
                 mask = valid
                 new_state, si = [], 0
                 for rule in self.rules:
@@ -402,8 +483,11 @@ class FusedEngine(UQEngine):
             # donation is a no-op (plus a warning) on CPU — only request it
             # where XLA can actually alias the buffer
             donate = self.donate and jax.default_backend() != "cpu"
-            fn = jax.jit(fused, donate_argnums=(1,)) if donate \
-                else jax.jit(fused)
+            kw: Dict[str, Any] = {"donate_argnums": (1,)} if donate else {}
+            if self._mesh_rules is not None:
+                kw["in_shardings"], kw["out_shardings"] = \
+                    self._jit_shardings(nb)
+            fn = jax.jit(fused, **kw)
             self._cache[nb] = fn
         return fn
 
@@ -431,9 +515,14 @@ class FusedEngine(UQEngine):
             return out
 
     def score(self, list_data: Sequence[np.ndarray], *,
-              advance: bool = True) -> UQResult:
+              advance: bool = True,
+              stream: int = STREAM_EXCHANGE) -> UQResult:
         x, n, nb = self._pad_batch(list_data)
-        head = (self.cparams, jnp.asarray(x), np.int32(n))
+        if self._mesh_rules is not None:
+            xd = jax.device_put(x, self._batch_sharding(nb))
+        else:
+            xd = jnp.asarray(x)
+        head = (self.cparams, xd, np.int32(n), np.int32(stream))
         # advancing rounds are semantically sequential (_state_guard); the
         # state itself advances on device — only the compiled program's
         # output handle moves, no host transfer
@@ -465,7 +554,14 @@ class FusedEngine(UQEngine):
             return 0              # not all trainers have published yet
         members = [update(member(self.cparams, i), packs[i][0])
                    for i in range(K)]
-        self.cparams = stack_members(members)
+        cparams = stack_members(members)
+        if self._mesh_rules is not None:
+            # fresh weights land replicated on the default device; put them
+            # back on the committee layout so the next dispatch doesn't
+            # reshard inside the compiled program's prologue every round
+            cparams = jax.device_put(
+                cparams, self._cparams_shardings(cparams))
+        self.cparams = cparams
         self.version = v
         return 1
 
@@ -494,12 +590,13 @@ class LegacyEngine(UQEngine):
         self._init_rule_state()
 
     def score(self, list_data: Sequence[np.ndarray], *,
-              advance: bool = True) -> UQResult:
+              advance: bool = True,
+              stream: int = STREAM_EXCHANGE) -> UQResult:
         with self._state_guard(advance):
-            return self._score(list_data, advance=advance)
+            return self._score(list_data, advance=advance, stream=stream)
 
     def _score(self, list_data: Sequence[np.ndarray], *,
-               advance: bool) -> UQResult:
+               advance: bool, stream: int = STREAM_EXCHANGE) -> UQResult:
         preds = np.asarray(self.predict_all(list_data), dtype=np.float64)
         k = preds.shape[0]
         mean = preds.mean(axis=0)
@@ -513,7 +610,7 @@ class LegacyEngine(UQEngine):
             if any(r.needs_inputs for r in self.rules) else None
         stats = UQStats(
             x=x, mean=mean, scalar_std=sstd, component_std=cstd,
-            valid=np.ones(n, bool), n_valid=n)
+            valid=np.ones(n, bool), n_valid=n, stream=stream)
         mask = np.ones(n, bool)
         states, si = list(self.rule_state), 0
         for rule in self.rules:
@@ -557,6 +654,30 @@ def wants_legacy(run_cfg, committee: Optional[CommitteeSpec],
                                                 and committee is None)
 
 
+def resolve_mesh(run_cfg):
+    """``PALRunConfig.uq_mesh`` -> a concrete mesh (or None).
+
+    '' (default) — no mesh: single-device dispatch, today's path.
+    'host'       — ``launch.mesh.make_host_mesh()``: the degenerate 1x1
+                   ('data', 'model') mesh; same computation, sharded
+                   construction exercised (CI parity).
+    'production' — ``launch.mesh.make_production_mesh()``: the 16x16
+                   ('data', 'model') pod mesh (committee over 'model',
+                   request batch over 'data').
+    """
+    name = getattr(run_cfg, "uq_mesh", "") or ""
+    if not name:
+        return None
+    from repro.launch import mesh as mesh_mod
+
+    if name == "host":
+        return mesh_mod.make_host_mesh()
+    if name == "production":
+        return mesh_mod.make_production_mesh()
+    raise ValueError(f"uq_mesh={name!r}: expected '', 'host' or "
+                     "'production'")
+
+
 def make_engine(
     run_cfg,
     *,
@@ -564,6 +685,8 @@ def make_engine(
     predict_all: Optional[Callable] = None,
     rules: Optional[Sequence[SelectionRule]] = None,
     force_legacy: bool = False,
+    mesh=None,
+    sharding_rules=None,
 ) -> UQEngine:
     """Build the acquisition engine from ``PALRunConfig`` knobs.
 
@@ -577,6 +700,12 @@ def make_engine(
 
     ``force_legacy`` overrides everything (used when a
     ``predict_all_override`` puts the user in control of raw predictions).
+
+    ``mesh`` / ``sharding_rules`` select the mesh-parallel fused dispatch
+    (committee over the ``model`` axis, request batch over ``data``); when
+    ``mesh`` is None it is resolved from ``run_cfg.uq_mesh``
+    (:func:`resolve_mesh`).  Meshes are a fused-backend feature — the
+    legacy per-member path ignores them.
 
     When no explicit ``rules=`` are given, the pipeline comes from the
     config's budget knobs (``core/budget.rules_from_config``):
@@ -601,10 +730,14 @@ def make_engine(
             f"uq_impl={impl!r} is a fused backend and needs a CommitteeSpec "
             "(apply_fn + stacked cparams); pass committee=... to PAL or use "
             "uq_impl='legacy'")
+    if mesh is None:
+        mesh = resolve_mesh(run_cfg)
     return FusedEngine(
         committee.apply_fn, committee.cparams, threshold,
         rules=rules,
         impl=("xla" if impl == "auto" else impl),
         block_n=getattr(run_cfg, "uq_block_n", 128),
         min_bucket=getattr(run_cfg, "uq_bucket", 8),
+        mesh=mesh,
+        sharding_rules=sharding_rules,
     )

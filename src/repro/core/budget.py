@@ -38,7 +38,9 @@ from typing import Any, Dict, Optional, Tuple
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.acquisition import SelectionRule, ThresholdRule, UQStats
+from repro.core.acquisition import (
+    STREAM_SERVE, SelectionRule, ThresholdRule, UQStats,
+)
 
 
 # ---------------------------------------------------------------------------
@@ -85,11 +87,19 @@ class OracleBudgetController:
         }
 
     def update(self, state: Dict[str, Any], rate,
-               thr_min: float, thr_max: float) -> Dict[str, Any]:
+               thr_min: float, thr_max: float,
+               target=None) -> Dict[str, Any]:
         """One control step.  ``rate`` is the realized selected fraction of
-        this round (traced f32 scalar inside the fused dispatch)."""
+        this round (traced f32 scalar inside the fused dispatch).
+
+        ``target``: per-round override of the configured target — a traced
+        f32 scalar when the round's target depends on which traffic stream
+        produced it (``BudgetRule`` with a distinct ``target_serve``);
+        None uses ``self.target``."""
         rate = jnp.asarray(rate, jnp.float32)
-        err = rate - jnp.float32(self.target)
+        tgt = jnp.float32(self.target) if target is None \
+            else jnp.asarray(target, jnp.float32)
+        err = rate - tgt
         leak = jnp.float32(1.0 - 1.0 / max(self.horizon, 1))
         integral = state["integral"] * leak + err
         thr = jnp.clip(
@@ -125,6 +135,18 @@ class BudgetRule(SelectionRule):
     The rate is measured against this rule's OWN selection (after ANDing
     with the incoming mask), over the TRUE ``n_valid`` — bucket padding
     rows never count toward the budget.
+
+    PER-STREAM TARGETS: ``target`` meters exchange-loop rounds;
+    ``target_serve`` (when set and different) meters rounds tagged
+    ``STREAM_SERVE`` — queued serving traffic scored through the same
+    engine.  The two streams steer the SAME effective threshold (control
+    is joint: total labeling demand is what the oracle pool feels), but
+    each round's error is measured against its own stream's target, so a
+    serving-heavy phase converges to the serving budget while exchange
+    rounds keep tracking the exchange budget.  The stream tag is a traced
+    scalar inside ``UQStats`` — one compiled program per shape bucket
+    regardless.  When ``target_serve`` is unset (or equal), the update is
+    literally the single-target PR-3 code path.
     """
 
     target: float
@@ -134,6 +156,7 @@ class BudgetRule(SelectionRule):
     horizon: int = 16
     thr_min: Optional[float] = None     # default: thr_init * 1e-3
     thr_max: Optional[float] = None     # default: thr_init * 1e+3
+    target_serve: Optional[float] = None  # default: target (shared budget)
 
     stateful = True
 
@@ -157,7 +180,15 @@ class BudgetRule(SelectionRule):
         n = jnp.maximum(jnp.asarray(stats.n_valid, jnp.int32), 1)
         rate = jnp.sum(sel).astype(jnp.float32) / n.astype(jnp.float32)
         lo, hi = self._bounds()
-        return stats, sel, self.controller.update(state, rate, lo, hi)
+        t_serve = self.target if self.target_serve is None \
+            else float(self.target_serve)
+        if t_serve == self.target:      # shared budget: single-target path
+            return stats, sel, self.controller.update(state, rate, lo, hi)
+        target = jnp.where(
+            jnp.asarray(stats.stream, jnp.int32) == STREAM_SERVE,
+            jnp.float32(t_serve), jnp.float32(self.target))
+        return stats, sel, self.controller.update(state, rate, lo, hi,
+                                                  target=target)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -236,6 +267,12 @@ def rules_from_config(run_cfg) -> Optional[Tuple[SelectionRule, ...]]:
     re-weighting first so the controller sees the boosted scores.
     Explicit ``rules=`` passed to ``PAL`` / ``make_engine`` always win over
     these knobs.
+
+    Per-stream budgets: ``oracle_budget_exchange`` / ``oracle_budget_serve``
+    meter the exchange loop and the serving path separately; either knob
+    defaults to the shared ``oracle_budget`` when unset (0), and a stream
+    whose own knob AND the shared budget are both unset inherits the other
+    stream's target (one controller, one threshold — control stays joint).
     """
     rules = []
     n_buckets = int(getattr(run_cfg, "reweight_buckets", 0) or 0)
@@ -244,11 +281,16 @@ def rules_from_config(run_cfg) -> Optional[Tuple[SelectionRule, ...]]:
             n_buckets=n_buckets,
             decay=float(getattr(run_cfg, "reweight_decay", 0.9)),
             boost=float(getattr(run_cfg, "reweight_boost", 1.0))))
-    budget = float(getattr(run_cfg, "oracle_budget", 0.0) or 0.0)
-    if budget > 0.0:
+    shared = float(getattr(run_cfg, "oracle_budget", 0.0) or 0.0)
+    t_ex = float(getattr(run_cfg, "oracle_budget_exchange", 0.0) or 0.0) \
+        or shared
+    t_sv = float(getattr(run_cfg, "oracle_budget_serve", 0.0) or 0.0) \
+        or shared
+    if t_ex > 0.0 or t_sv > 0.0:
         rules.append(BudgetRule(
-            target=budget, thr_init=run_cfg.std_threshold,
-            horizon=int(getattr(run_cfg, "budget_horizon", 16))))
+            target=(t_ex or t_sv), thr_init=run_cfg.std_threshold,
+            horizon=int(getattr(run_cfg, "budget_horizon", 16)),
+            target_serve=(t_sv or t_ex)))
     elif rules:
         rules.append(ThresholdRule(run_cfg.std_threshold))
     return tuple(rules) if rules else None

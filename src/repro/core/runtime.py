@@ -67,6 +67,8 @@ class PAL:
         rules: Optional[Sequence[acq.SelectionRule]] = None,
         adjust_input_for_oracle: Optional[Callable] = None,
         predict_all_override: Optional[Callable] = None,
+        mesh=None,
+        sharding_rules=None,
         resume: bool = False,
     ):
         self.cfg = run_cfg
@@ -107,7 +109,8 @@ class PAL:
         self.engine = acq.make_engine(
             run_cfg, committee=committee, rules=rules,
             predict_all=self.prediction_pool.predict_all,
-            force_legacy=predict_all_override is not None)
+            force_legacy=predict_all_override is not None,
+            mesh=mesh, sharding_rules=sharding_rules)
         self.prediction_pool.engine = self.engine
         self.exchange = Exchange(
             self.generators, self.prediction_pool, self.oracle_buffer,
@@ -152,11 +155,24 @@ class PAL:
         # UQResult and high-uncertainty requests feed the oracle buffer
         # through the same budget controller as the exchange loop
         self.server = None
+        self.serve_queue = None
         if getattr(run_cfg, "serve_uq", False):
             from repro.serving.engine import CommitteeServer
 
             self.server = CommitteeServer(
                 self.engine, self.oracle_buffer, monitor=self.monitor)
+            # queue-batched serving: many small requests -> one fused
+            # dispatch (serving/queue.py); size-or-deadline trigger
+            if getattr(run_cfg, "serve_max_batch", 0) > 0:
+                from repro.serving.queue import QueueConfig, ServingQueue
+
+                self.serve_queue = ServingQueue(
+                    self.server,
+                    QueueConfig(
+                        max_batch=int(run_cfg.serve_max_batch),
+                        max_wait_ms=float(getattr(
+                            run_cfg, "serve_max_wait_ms", 2.0))),
+                    monitor=self.monitor)
 
         # --- runtime machinery ----------------------------------------------
         self.stop_event = threading.Event()
@@ -288,6 +304,10 @@ class PAL:
 
     def shutdown(self):
         self.stop_event.set()
+        if self.serve_queue is not None:
+            # flush pending served requests — bounded like every other
+            # join here, so a wedged dispatch can't hang shutdown
+            self.serve_queue.close(timeout=10.0)
         self.oracle_pool.shutdown()
         for th in self._threads:
             th.join(timeout=10.0)
@@ -354,9 +374,22 @@ class PAL:
         # an exchange-only rate would read as under-spending whenever
         # serving consumes part of the budget
         c = r["counters"]
-        scored = c.get("exchange.proposals", 0) + c.get("serve.requests", 0)
-        queued = (c.get("exchange.queued_to_oracle", 0)
-                  + c.get("serve.routed_to_oracle", 0))
+        ex_scored = c.get("exchange.proposals", 0)
+        ex_queued = c.get("exchange.queued_to_oracle", 0)
+        sv_scored = c.get("serve.requests", 0)
+        sv_queued = c.get("serve.routed_to_oracle", 0)
+        scored = ex_scored + sv_scored
+        queued = ex_queued + sv_queued
         r["oracle_rate"] = queued / scored if scored else None
+        # per-stream breakout: the controller is joint, but each stream's
+        # realized rate is observable against its own target
+        # (oracle_budget_exchange / oracle_budget_serve)
+        r["oracle_rate_exchange"] = (ex_queued / ex_scored if ex_scored
+                                     else None)
+        r["oracle_rate_serve"] = sv_queued / sv_scored if sv_scored else None
+        if self.serve_queue is not None:
+            r["serve_queue_dispatches"] = self.serve_queue.dispatches
+            r["serve_queue_batched_requests"] = \
+                self.serve_queue.batched_requests
         r["stop"] = repr(self.stop_token)
         return r

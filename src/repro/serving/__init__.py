@@ -1,1 +1,4 @@
-from repro.serving.engine import ServeEngine, GenerationResult  # noqa: F401
+from repro.serving.engine import (  # noqa: F401
+    CommitteeServer, GenerationResult, ServeEngine,
+)
+from repro.serving.queue import QueueConfig, ServingQueue  # noqa: F401

@@ -65,7 +65,7 @@ class CommitteeServer:
 
     def __init__(self, engine, oracle_buffer=None, *,
                  route_uncertain: bool = True, advance: bool = True,
-                 monitor=None):
+                 monitor=None, out_dim: int = 0):
         self.engine = engine
         self.oracle_buffer = oracle_buffer
         self.route_uncertain = route_uncertain
@@ -73,14 +73,37 @@ class CommitteeServer:
         self.monitor = monitor
         self.requests = 0
         self.routed = 0
+        # output width for EMPTY results: the committee's width is only
+        # observable from a scored batch, so before any non-empty traffic
+        # an empty predict returns (0, out_dim) with this seed — pass
+        # ``out_dim=`` if callers vstack a stream that may START empty
+        self._out_dim = int(out_dim)
 
     def predict(self, batch_inputs: Sequence[np.ndarray]
                 ) -> Tuple[np.ndarray, Any]:
         """Score one request batch: rows of shape (in_dim,) (or anything
         the engine's ``apply_fn`` flattens).  Returns ``(mean, UQResult)``.
+
+        An empty batch short-circuits to an empty result — no engine
+        dispatch (a zero-row score would still pad to a full shape bucket
+        and pay a device program), no request/routing counters, and no
+        budget-controller round.  The empty mean keeps the 2-D (0, d)
+        shape of non-empty results, with d from the last non-empty batch
+        — so aggregating callers can vstack across batches once any real
+        traffic has flowed.  Before that, d falls back to the ``out_dim``
+        constructor seed (0 if unset: the width is simply unknown).
         """
+        from repro.core import acquisition as acq
+
         rows = [np.asarray(r) for r in batch_inputs]
-        uq = self.engine.score(rows, advance=self.advance)
+        if not rows:
+            zf = np.zeros(0, np.float32)
+            mean = np.zeros((0, self._out_dim), np.float32)
+            return mean, acq.UQResult(mean, zf, zf.copy(),
+                                      np.zeros(0, bool))
+        uq = self.engine.score(rows, advance=self.advance,
+                               stream=acq.STREAM_SERVE)
+        self._out_dim = int(uq.mean.shape[-1])
         self.requests += len(rows)
         if self.monitor is not None:
             self.monitor.incr("serve.requests", len(rows))

@@ -1,0 +1,253 @@
+"""Queue-batched committee serving (ROADMAP: "Serving at scale").
+
+``CommitteeServer.predict`` scores whatever batch each caller happens to
+hand in — at request scale (many clients, tiny batches) that caps served
+throughput at one engine dispatch per request, with the per-dispatch
+overhead (host->device transfer, program launch, result sync) dominating
+the actual committee math.  ``ServingQueue`` turns N tiny requests into
+ONE fused dispatch:
+
+  * callers ``submit(rows) -> Future[(mean, UQResult)]`` (or the blocking
+    ``predict``) from any number of threads;
+  * a dispatcher thread accumulates pending requests into a microbatch and
+    fires on a size-OR-deadline trigger — ``max_batch`` rows ready, or the
+    OLDEST pending request has waited ``max_wait_ms``;
+  * the merged rows go through ``CommitteeServer.predict`` — i.e. the same
+    unified acquisition engine dispatch as the exchange hot loop, padded
+    into the engine's power-of-two shape buckets (pick ``max_batch`` as a
+    bucket size and steady-state traffic compiles exactly once) — and the
+    per-request slices of ``(mean, UQResult)`` are scattered back onto the
+    callers' futures.
+
+Request boundaries are never split across dispatches (a request's rows
+stay contiguous in one microbatch), and the scatter is by construction
+order-preserving: every caller gets exactly its own rows back, in the
+order it submitted them, no matter how many submitters race.  Uncertain-
+request routing to the oracle buffer and the budget controller metering
+(``STREAM_SERVE`` rounds) happen inside the wrapped ``CommitteeServer``,
+once per microbatch instead of once per request.
+
+Latency/throughput trade-off: ``max_wait_ms`` bounds the extra latency a
+sparse request can pay (it never waits longer than the deadline);
+``max_batch`` bounds how much traffic one dispatch amortizes.  Under load
+the queue fills ``max_batch`` before the deadline and the deadline never
+fires; at low traffic requests ride the deadline and pay at most
+``max_wait_ms`` over the bare per-call path.  ``benchmarks/serving_queue.py``
+measures both ends (requests/s, p50/p99).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import threading
+import time
+from concurrent.futures import Future
+from typing import Any, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class QueueConfig:
+    """Size-or-deadline dispatch trigger.
+
+    ``max_batch``   rows per microbatch; a flush takes whole pending
+                    requests while they fit (a single request larger than
+                    ``max_batch`` is dispatched alone — the engine's shape
+                    buckets absorb it).  Best chosen as a power of two
+                    matching ``FusedEngine``'s buckets so the queue creates
+                    no new traces.
+    ``max_wait_ms`` deadline: the oldest pending request is dispatched at
+                    the latest this many ms after it was enqueued.
+    ``max_pending`` backpressure bound: ``submit`` BLOCKS while the
+                    pending backlog holds this many rows (so sustained
+                    overload slows callers down instead of growing the
+                    backlog — and per-request latency — without bound).
+                    A request larger than the bound is admitted once the
+                    queue is empty.  0 disables (unbounded).
+    """
+
+    max_batch: int = 64
+    max_wait_ms: float = 2.0
+    max_pending: int = 4096
+
+
+class _Pending:
+    __slots__ = ("rows", "future", "t_enqueue")
+
+    def __init__(self, rows: List[np.ndarray], future: Future,
+                 t_enqueue: float):
+        self.rows = rows
+        self.future = future
+        self.t_enqueue = t_enqueue
+
+
+class ServingQueue:
+    """Microbatching front of a :class:`repro.serving.engine.CommitteeServer`.
+
+    One dispatcher thread owns the server call; submitters only enqueue.
+    ``close()`` (or context-manager exit) drains pending requests with a
+    final flush, then stops the dispatcher.
+
+    Counters: ``dispatches`` (microbatches fired), ``batched_requests``
+    (requests those carried) — ``batched_requests / dispatches`` is the
+    realized amortization factor.
+    """
+
+    def __init__(self, server, cfg: Optional[QueueConfig] = None, *,
+                 monitor=None):
+        self.server = server
+        self.cfg = cfg or QueueConfig()
+        if self.cfg.max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+        self.monitor = monitor
+        self._lock = threading.Lock()
+        self._cv = threading.Condition(self._lock)       # dispatcher wakeup
+        self._space = threading.Condition(self._lock)    # submitter wakeup
+        self._pending: collections.deque = collections.deque()
+        self._pending_rows = 0
+        self._closed = False
+        self.dispatches = 0
+        self.batched_requests = 0
+        self._worker = threading.Thread(
+            target=self._run, name="serving-queue", daemon=True)
+        self._worker.start()
+
+    # ---------------------------------------------------------------- API
+    def submit(self, batch_inputs: Sequence[np.ndarray]) -> Future:
+        """Enqueue one request (a sequence of input rows).  Returns a
+        Future resolving to ``(mean, UQResult)`` covering exactly these
+        rows, in submission order.
+
+        Empty requests ride the queue like any other — they keep FIFO
+        order with their submitter's non-empty requests and resolve to a
+        zero-row result whose ``mean`` width matches their microbatch
+        (resolving them eagerly here would hand back a width-0 result
+        when earlier non-empty requests are still in flight).  Zero rows
+        never pay an engine dispatch: an all-empty microbatch falls
+        through to ``CommitteeServer.predict([])``'s short-circuit."""
+        rows = [np.asarray(r) for r in batch_inputs]
+        fut: Future = Future()
+        fut.set_running_or_notify_cancel()
+        with self._cv:
+            # backpressure: block while the backlog is at the bound (an
+            # oversized request is admitted once the queue is empty, so it
+            # can never wait forever)
+            bound = self.cfg.max_pending
+            while (not self._closed and bound > 0 and self._pending_rows > 0
+                   and self._pending_rows + len(rows) > bound):
+                self._space.wait()
+            if self._closed:
+                raise RuntimeError("ServingQueue is closed")
+            self._pending.append(_Pending(rows, fut, time.perf_counter()))
+            self._pending_rows += len(rows)
+            self._cv.notify()
+        return fut
+
+    def predict(self, batch_inputs: Sequence[np.ndarray]
+                ) -> Tuple[np.ndarray, Any]:
+        """Blocking convenience: ``submit(...).result()``."""
+        return self.submit(batch_inputs).result()
+
+    def close(self, timeout: Optional[float] = None):
+        """Flush everything still pending, then stop the dispatcher.
+
+        ``timeout`` bounds the wait for the drain (seconds; None = wait
+        for it) — a caller with its own shutdown deadline (PAL.shutdown)
+        must not hang behind a wedged dispatch.  The dispatcher is a
+        daemon thread, so an abandoned drain cannot keep the process
+        alive."""
+        with self._cv:
+            if self._closed:
+                return
+            self._closed = True
+            self._cv.notify_all()
+            self._space.notify_all()     # unblock backpressured submitters
+        self._worker.join(timeout)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+    def __del__(self):  # best-effort: don't leak the dispatcher thread
+        try:
+            self.close()
+        except BaseException:  # noqa: BLE001  (interpreter teardown)
+            pass
+
+    # --------------------------------------------------------- dispatcher
+    def _deadline_left_locked(self) -> Optional[float]:
+        """Seconds until the oldest pending request's deadline (None when
+        nothing is pending)."""
+        if not self._pending:
+            return None
+        age = time.perf_counter() - self._pending[0].t_enqueue
+        return self.cfg.max_wait_ms / 1e3 - age
+
+    def _due_locked(self) -> bool:
+        if not self._pending:
+            return False
+        if self._pending_rows >= self.cfg.max_batch:
+            return True
+        left = self._deadline_left_locked()
+        return left is not None and left <= 0.0
+
+    def _take_locked(self) -> List[_Pending]:
+        """Pop whole requests for one microbatch: while they fit in
+        ``max_batch`` (an oversized first request goes out alone)."""
+        took: List[_Pending] = []
+        rows = 0
+        while self._pending:
+            nxt = self._pending[0]
+            if took and rows + len(nxt.rows) > self.cfg.max_batch:
+                break
+            took.append(self._pending.popleft())
+            rows += len(nxt.rows)
+            if rows >= self.cfg.max_batch:
+                break
+        self._pending_rows -= rows
+        return took
+
+    def _run(self):
+        while True:
+            with self._cv:
+                while not self._closed and not self._due_locked():
+                    self._cv.wait(self._deadline_left_locked())
+                if self._closed and not self._pending:
+                    return
+                took = self._take_locked()
+                if took:
+                    self._space.notify_all()     # backlog shrank
+            if took:
+                self._dispatch(took)
+
+    def _dispatch(self, took: List[_Pending]):
+        from repro.core.acquisition import UQResult
+
+        merged = [r for p in took for r in p.rows]
+        try:
+            if not merged:      # all-empty microbatch: server short-circuit
+                res = self.server.predict([])
+                for p in took:
+                    p.future.set_result(res)
+                return          # no engine dispatch -> not a dispatch
+            _, uq = self.server.predict(merged)
+        except BaseException as e:  # noqa: BLE001 — deliver, don't die
+            for p in took:
+                p.future.set_exception(e)
+            return
+        self.dispatches += 1
+        self.batched_requests += len(took)
+        if self.monitor is not None:
+            self.monitor.incr("serve.queue_dispatches")
+            self.monitor.incr("serve.queue_batched_requests", len(took))
+        off = 0
+        for p in took:
+            n = len(p.rows)
+            sl = slice(off, off + n)
+            part = UQResult(uq.mean[sl], uq.scalar_std[sl],
+                            uq.component_std[sl], uq.mask[sl])
+            p.future.set_result((part.mean, part))
+            off += n

@@ -167,6 +167,28 @@ def logical_sharding(mesh: Mesh, logical_axes, rules: Optional[Rules] = None,
     return MeshRules(mesh, rules).sharding(logical_axes, dims)
 
 
+def committee_shardings(mesh_rules: "MeshRules", cparams):
+    """NamedShardings for a stacked-committee pytree (leading K axis).
+
+    The leading axis follows the COMMITTEE logical-axis rules
+    (``COMMITTEE -> ('model',)`` by default) and every other dimension is
+    replicated: per-member parameters are small, it is the K-way ensemble
+    that scales out over the mesh.  The standard divisibility fallback
+    applies — a committee whose K does not divide the mapped mesh axes
+    (e.g. K=4 on a 16-way model axis) degrades to replicated, recorded in
+    ``mesh_rules.fallbacks`` instead of failing to compile.  Used by
+    ``core/acquisition.FusedEngine``'s mesh-parallel construction path.
+    """
+    def leaf(a):
+        shape = tuple(int(s) for s in getattr(a, "shape", ()))
+        if not shape:                       # 0-d leaf: replicate
+            return mesh_rules.sharding((), (), name="cparams")
+        logical = (axes.COMMITTEE,) + (None,) * (len(shape) - 1)
+        return mesh_rules.sharding(logical, shape, name="cparams")
+
+    return jax.tree.map(leaf, cparams)
+
+
 def shard_constraint(x, mesh_rules: Optional["MeshRules"], logical_axes):
     """with_sharding_constraint keyed by logical axes; no-op outside a mesh."""
     if mesh_rules is None:

@@ -1,10 +1,38 @@
 """Shared fixtures.  NOTE: no XLA_FLAGS here — smoke tests and benches must
-see the real single device; only the dry-run subprocesses get 512."""
+see the real single device; only the dry-run subprocesses get 512.
+
+Backend-matrix knob: ``REPRO_FORCE_UQ_IMPL=xla|pallas|pallas_interpret``
+reroutes every config-driven fused engine (``uq_impl='auto'`` +
+CommitteeSpec) through the named kernel implementation — CI runs tier-1
+once per backend so a kernel-only regression can't hide behind the 'auto'
+default.  Tests that pin ``uq_impl`` explicitly (backend-parity tests) and
+legacy-path tests are left alone: forcing a fused impl onto a
+committee-less config would change what those tests test.
+"""
+import dataclasses
+import os
+
 import jax
 import jax.numpy as jnp
 import pytest
 
 from repro.configs.base import ModelConfig
+
+_FORCE_IMPL = os.environ.get("REPRO_FORCE_UQ_IMPL", "")
+if _FORCE_IMPL:
+    from repro.core import acquisition as _acq
+
+    _orig_make_engine = _acq.make_engine
+
+    def _forced_make_engine(run_cfg, **kw):
+        if (dataclasses.is_dataclass(run_cfg)
+                and getattr(run_cfg, "uq_impl", "auto") == "auto"
+                and not _acq.wants_legacy(run_cfg, kw.get("committee"),
+                                          kw.get("force_legacy", False))):
+            run_cfg = dataclasses.replace(run_cfg, uq_impl=_FORCE_IMPL)
+        return _orig_make_engine(run_cfg, **kw)
+
+    _acq.make_engine = _forced_make_engine
 
 
 @pytest.fixture(scope="session")

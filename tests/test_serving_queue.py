@@ -1,0 +1,518 @@
+"""Sharded, queue-batched committee serving tests.
+
+* ``ServingQueue``: microbatching semantics — size trigger, deadline
+  trigger, per-request scatter, ORDERING under concurrent submitters,
+  oversized requests, error propagation, close-time drain, empty requests.
+* ``CommitteeServer.predict`` empty-batch short-circuit (no dispatch, no
+  counters, no controller round).
+* Sharded ``FusedEngine`` on the degenerate host mesh: bit-identical
+  ``UQResult``/``SelectionResult``s vs the unsharded path, INCLUDING the
+  carried stateful ``BudgetRule`` state, across shape buckets and weight
+  refreshes.
+* Per-stream budgets: ``BudgetRule.target_serve`` metering
+  ``STREAM_SERVE`` rounds against their own target, the config knobs
+  (``oracle_budget_exchange`` / ``oracle_budget_serve``), and
+  ``PAL.report()``'s per-stream rate breakout.
+"""
+import tempfile
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.pal_potential import PALRunConfig
+from repro.core import PAL, UserGene, UserModel, UserOracle
+from repro.core import acquisition as acq
+from repro.core import budget as bud
+from repro.core import committee as cmte
+from repro.core import selection as sel
+from repro.core.buffers import OracleInputBuffer
+from repro.launch.mesh import make_host_mesh
+from repro.serving import CommitteeServer, QueueConfig, ServingQueue
+
+K, IN_DIM, OUT_DIM = 5, 6, 3
+
+
+def _committee(seed=0):
+    rng = np.random.RandomState(seed)
+    members = [{"w": jnp.asarray(rng.randn(IN_DIM, OUT_DIM)
+                                 .astype(np.float32) * 0.5)}
+               for _ in range(K)]
+    return members, cmte.stack_members(members), (lambda p, x: x @ p["w"])
+
+
+def _rows(n, seed=1, scale=1.0):
+    rng = np.random.RandomState(seed)
+    return [(rng.randn(IN_DIM) * scale).astype(np.float32)
+            for _ in range(n)]
+
+
+def _server(threshold=0.4, rules=None, seed=0, **kw):
+    _, cparams, apply_fn = _committee(seed)
+    eng = acq.FusedEngine(apply_fn, cparams, threshold, rules=rules,
+                          impl="xla")
+    return CommitteeServer(eng, None, **kw), eng
+
+
+# ---------------------------------------------------------------------------
+# CommitteeServer: empty-batch short-circuit (satellite fix)
+# ---------------------------------------------------------------------------
+
+
+def test_committee_server_empty_predict_short_circuits():
+    class _Boom:
+        def score(self, *a, **k):
+            raise AssertionError("engine must not be touched")
+
+    obuf = OracleInputBuffer()
+    server = CommitteeServer(_Boom(), obuf)
+    mean, uq = server.predict([])
+    assert mean.shape == (0, 0)         # 2-D like non-empty results
+    assert uq.mean.shape == (0, 0) and uq.mask.shape == (0,)
+    assert uq.scalar_std.shape == (0,) and uq.component_std.shape == (0,)
+    assert server.requests == 0 and server.routed == 0
+    assert len(obuf) == 0
+
+
+def test_committee_server_empty_mean_keeps_output_width():
+    """After any non-empty batch, empty results carry (0, out_dim) so
+    aggregating callers can vstack across batches."""
+    server, _ = _server()
+    server.predict(_rows(3, seed=40))
+    mean, uq = server.predict([])
+    assert mean.shape == (0, OUT_DIM)
+    stacked = np.vstack([server.predict(b)[0]
+                         for b in (_rows(2, seed=41), [], _rows(1, seed=42))])
+    assert stacked.shape == (3, OUT_DIM)
+
+
+def test_committee_server_empty_predict_no_controller_round():
+    server, eng = _server(
+        rules=(bud.BudgetRule(target=0.25, thr_init=0.4),))
+    server.predict([])
+    assert int(np.asarray(eng.rule_state[0]["rounds"])) == 0
+
+
+# ---------------------------------------------------------------------------
+# ServingQueue: microbatching semantics
+# ---------------------------------------------------------------------------
+
+
+def test_queue_fuses_requests_and_matches_percall_results():
+    server, eng = _server()
+    rows = _rows(16, seed=2)
+    direct = eng.score(rows, advance=False)
+    with ServingQueue(server, QueueConfig(max_batch=16,
+                                          max_wait_ms=200.0)) as q:
+        futs = [q.submit([r]) for r in rows]       # 16 size-1 requests
+        outs = [f.result(timeout=10) for f in futs]
+    # one fused dispatch carried all 16 requests (size trigger)
+    assert q.dispatches == 1 and q.batched_requests == 16
+    assert server.requests == 16
+    for i, (mean, uq) in enumerate(outs):
+        np.testing.assert_array_equal(mean[0], direct.mean[i])
+        np.testing.assert_array_equal(uq.scalar_std[0], direct.scalar_std[i])
+        np.testing.assert_array_equal(uq.mask[0], direct.mask[i])
+
+
+def test_queue_deadline_flush():
+    server, _ = _server()
+    with ServingQueue(server, QueueConfig(max_batch=1024,
+                                          max_wait_ms=10.0)) as q:
+        t0 = time.perf_counter()
+        mean, uq = q.predict(_rows(3, seed=3))
+        waited = time.perf_counter() - t0
+    assert mean.shape == (3, OUT_DIM) and uq.mask.shape == (3,)
+    # dispatched by the deadline, nowhere near filling max_batch
+    assert waited < 5.0
+    assert q.dispatches == 1
+
+
+def test_queue_preserves_per_request_ordering_under_concurrency():
+    server, eng = _server()
+    n_threads, per_thread = 8, 12
+    errs = []
+
+    def client(tid):
+        rng = np.random.RandomState(100 + tid)
+        try:
+            with_sizes = [1 + (tid + j) % 3 for j in range(per_thread)]
+            for j, sz in enumerate(with_sizes):
+                rows = [(rng.randn(IN_DIM)).astype(np.float32)
+                        for _ in range(sz)]
+                mean, uq = q.predict(rows)
+                want = eng.score(rows, advance=False)
+                # exactly this caller's rows, in submission order
+                np.testing.assert_array_equal(mean, want.mean)
+                np.testing.assert_array_equal(uq.scalar_std, want.scalar_std)
+                np.testing.assert_array_equal(uq.mask, want.mask)
+                assert len(uq.mask) == sz
+        except BaseException as e:  # noqa: BLE001
+            errs.append((tid, e))
+
+    with ServingQueue(server, QueueConfig(max_batch=16,
+                                          max_wait_ms=2.0)) as q:
+        threads = [threading.Thread(target=client, args=(i,))
+                   for i in range(n_threads)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+    assert not errs, errs
+    # microbatching actually happened (fewer dispatches than requests)
+    assert q.dispatches < q.batched_requests
+    assert q.batched_requests == n_threads * per_thread
+
+
+def test_queue_request_boundaries_never_split():
+    """A request's rows always land in ONE dispatch, even when it exceeds
+    max_batch (it goes out alone)."""
+    server, _ = _server()
+    with ServingQueue(server, QueueConfig(max_batch=4,
+                                          max_wait_ms=50.0)) as q:
+        rows = _rows(11, seed=4)                  # 11 > max_batch
+        mean, uq = q.predict(rows)
+    assert mean.shape == (11, OUT_DIM) and len(uq.mask) == 11
+    assert q.dispatches == 1
+
+
+def test_queue_empty_request_no_dispatch():
+    server, eng = _server()
+    with ServingQueue(server, QueueConfig(max_batch=8,
+                                          max_wait_ms=10.0)) as q:
+        fut = q.submit([])
+        mean, uq = fut.result(timeout=5)
+    assert mean.shape == (0, 0) and uq.mask.shape == (0,)
+    assert q.dispatches == 0 and server.requests == 0
+
+
+def test_queue_empty_request_keeps_fifo_width_with_nonempty_traffic():
+    """An empty submitted AFTER non-empty requests must resolve with the
+    microbatch's (0, out_dim) width — vstack across a request stream that
+    interleaves empties must work."""
+    server, _ = _server()
+    with ServingQueue(server, QueueConfig(max_batch=8,
+                                          max_wait_ms=10.0)) as q:
+        futs = [q.submit([r]) for r in _rows(3, seed=20)]
+        futs.append(q.submit([]))
+        outs = [f.result(timeout=5) for f in futs]
+    assert outs[-1][0].shape == (0, OUT_DIM)
+    stacked = np.vstack([m for m, _ in outs])
+    assert stacked.shape == (3, OUT_DIM)
+
+
+def test_committee_server_empty_predict_out_dim_seed():
+    """A server constructed with out_dim= answers empties at that width
+    even before any non-empty traffic (streams that may START empty)."""
+    server, _ = _server(out_dim=OUT_DIM)
+    mean, uq = server.predict([])
+    assert mean.shape == (0, OUT_DIM)
+    stacked = np.vstack([mean, server.predict(_rows(2, seed=43))[0]])
+    assert stacked.shape == (2, OUT_DIM)
+
+
+def test_queue_backpressure_bounds_backlog():
+    """With max_pending set, submit blocks instead of growing the backlog
+    without bound; everything still completes and the backlog invariant
+    holds at every dispatch."""
+    server, _ = _server()
+    seen_rows = []
+    real_predict = server.predict
+
+    def spying_predict(rows):
+        seen_rows.append(len(rows))
+        time.sleep(0.002)                     # make overload reachable
+        return real_predict(rows)
+
+    server.predict = spying_predict
+    q = ServingQueue(server, QueueConfig(max_batch=4, max_wait_ms=1.0,
+                                         max_pending=8))
+    try:
+        futs = []
+        for r in _rows(64, seed=44):
+            futs.append(q.submit([r]))        # blocks when 8 rows pending
+            with q._lock:
+                assert q._pending_rows <= 8
+        for f in futs:
+            f.result(timeout=30)
+    finally:
+        q.close()
+    assert sum(seen_rows) == 64 and max(seen_rows) <= 4
+
+
+def test_queue_propagates_dispatch_errors_to_futures():
+    class _Failing:
+        def predict(self, rows):
+            raise RuntimeError("committee on fire")
+
+    q = ServingQueue(_Failing(), QueueConfig(max_batch=4, max_wait_ms=5.0))
+    try:
+        futs = [q.submit([r]) for r in _rows(4, seed=5)]
+        for f in futs:
+            with pytest.raises(RuntimeError, match="committee on fire"):
+                f.result(timeout=10)
+    finally:
+        q.close()
+
+
+def test_queue_close_drains_pending_and_rejects_new():
+    server, _ = _server()
+    q = ServingQueue(server, QueueConfig(max_batch=1024,
+                                         max_wait_ms=60_000.0))
+    futs = [q.submit([r]) for r in _rows(5, seed=6)]
+    q.close()                                     # deadline far away: drain
+    for f in futs:
+        mean, uq = f.result(timeout=1)
+        assert uq.mask.shape == (1,)
+    with pytest.raises(RuntimeError):
+        q.submit(_rows(1, seed=7))
+    with pytest.raises(RuntimeError):             # empties too
+        q.submit([])
+
+
+# ---------------------------------------------------------------------------
+# sharded engine: host-mesh parity (incl. stateful rule state)
+# ---------------------------------------------------------------------------
+
+
+def _parity_rules():
+    return (bud.RollingReweightRule(n_buckets=8),
+            bud.BudgetRule(target=0.25, thr_init=0.4, horizon=8))
+
+
+def test_sharded_host_mesh_identical_selection_results():
+    """On make_host_mesh() the sharded FusedEngine must produce
+    SelectionResults identical to the unsharded path, across shape
+    buckets, including stateful BudgetRule/RollingReweightRule state."""
+    _, cparams, apply_fn = _committee(seed=8)
+    plain = acq.FusedEngine(apply_fn, cparams, 0.4, rules=_parity_rules(),
+                            impl="xla")
+    shard = acq.FusedEngine(apply_fn, cparams, 0.4, rules=_parity_rules(),
+                            impl="xla", mesh=make_host_mesh())
+    for r, n in enumerate((13, 8, 33, 13, 5)):    # several buckets
+        rows = _rows(n, seed=50 + r, scale=1.5)
+        a = plain.score(rows, stream=r % 2)
+        b = shard.score(rows, stream=r % 2)
+        np.testing.assert_array_equal(a.mean, b.mean)
+        np.testing.assert_array_equal(a.scalar_std, b.scalar_std)
+        np.testing.assert_array_equal(a.component_std, b.component_std)
+        np.testing.assert_array_equal(a.mask, b.mask)
+        ra = sel.selection_from_uq(rows, a)
+        rb = sel.selection_from_uq(rows, b)
+        np.testing.assert_array_equal(ra.uncertain_mask, rb.uncertain_mask)
+        for x, y in zip(ra.inputs_to_oracle, rb.inputs_to_oracle):
+            np.testing.assert_array_equal(x, y)
+    # carried controller/re-weighting state advanced identically
+    for x, y in zip(jax.tree.leaves(plain.state_dict()),
+                    jax.tree.leaves(shard.state_dict())):
+        np.testing.assert_array_equal(x, y)
+    # both compiled once per bucket
+    assert plain.trace_counts == shard.trace_counts
+    assert all(c == 1 for c in shard.trace_counts.values())
+
+
+def test_sharded_engine_places_params_and_batch_on_mesh():
+    _, cparams, apply_fn = _committee(seed=9)
+    mesh = make_host_mesh()
+    eng = acq.FusedEngine(apply_fn, cparams, 0.4, impl="xla", mesh=mesh)
+    from jax.sharding import NamedSharding
+
+    for leaf in jax.tree.leaves(eng.cparams):
+        assert isinstance(leaf.sharding, NamedSharding)
+        assert leaf.sharding.mesh.shape == dict(mesh.shape)
+        # leading committee axis carries the 'model' mapping (K=5 divides
+        # the 1-ary host axis; on a bigger mesh the divisibility fallback
+        # may replicate instead)
+        assert leaf.sharding.spec[0] in ("model", None)
+    uq = eng.score(_rows(4, seed=10))
+    assert uq.mask.shape == (4,)
+
+
+def test_sharded_engine_refresh_keeps_layout():
+    from repro.core.weight_sync import WeightStore
+
+    members, cparams, apply_fn = _committee(seed=11)
+    eng = acq.FusedEngine(apply_fn, cparams, 0.4, impl="xla",
+                          mesh=make_host_mesh())
+    store = WeightStore(K)
+    w_new = np.random.RandomState(12).randn(K, IN_DIM * OUT_DIM) \
+        .astype(np.float32)
+    for i in range(K):
+        store.publish_packed(i, w_new[i])
+    assert eng.refresh_from(store) == 1
+    from jax.sharding import NamedSharding
+
+    leaf = jax.tree.leaves(eng.cparams)[0]
+    assert isinstance(leaf.sharding, NamedSharding)
+    np.testing.assert_allclose(
+        np.asarray(leaf).reshape(K, -1), w_new, rtol=1e-6)
+
+
+def test_make_engine_resolves_uq_mesh_knob():
+    _, cparams, apply_fn = _committee(seed=13)
+    cfg = PALRunConfig(std_threshold=0.4, uq_impl="xla", uq_mesh="host")
+    eng = acq.make_engine(cfg,
+                          committee=acq.CommitteeSpec(apply_fn, cparams))
+    assert isinstance(eng, acq.FusedEngine)
+    assert eng.mesh is not None and dict(eng.mesh.shape) == \
+        {"data": 1, "model": 1}
+    with pytest.raises(ValueError, match="uq_mesh"):
+        acq.resolve_mesh(PALRunConfig(uq_mesh="nope"))
+
+
+# ---------------------------------------------------------------------------
+# per-stream budgets
+# ---------------------------------------------------------------------------
+
+
+def test_budget_rule_per_stream_targets():
+    """With target_serve != target, serve-only traffic settles at the
+    serving budget while exchange-only traffic settles at the exchange
+    budget — same rule, same threshold state, stream-tagged rounds."""
+    _, cparams, apply_fn = _committee(seed=14)
+
+    def run(stream, target, target_serve):
+        eng = acq.FusedEngine(
+            apply_fn, cparams, 0.5,
+            rules=(bud.BudgetRule(target=target, thr_init=0.5, horizon=8,
+                                  target_serve=target_serve),),
+            impl="xla")
+        rates = []
+        for r in range(80):
+            rows = _rows(32, seed=200 + r, scale=1.0)
+            rates.append(float(eng.score(rows, stream=stream).mask.mean()))
+        return float(np.mean(rates[40:]))
+
+    ex_rate = run(acq.STREAM_EXCHANGE, 0.2, 0.45)
+    sv_rate = run(acq.STREAM_SERVE, 0.2, 0.45)
+    assert abs(ex_rate - 0.2) < 0.06, ex_rate
+    assert abs(sv_rate - 0.45) < 0.08, sv_rate
+
+
+def test_budget_rule_shared_target_ignores_stream():
+    """target_serve unset -> streams are indistinguishable (the PR-3
+    single-target path), so mixed traffic still converges to the target."""
+    _, cparams, apply_fn = _committee(seed=15)
+    eng = acq.FusedEngine(
+        apply_fn, cparams, 0.5,
+        rules=(bud.BudgetRule(target=0.3, thr_init=0.5, horizon=8),),
+        impl="xla")
+    rates = []
+    for r in range(80):
+        rows = _rows(32, seed=300 + r)
+        rates.append(float(eng.score(rows, stream=r % 2).mask.mean()))
+    assert abs(float(np.mean(rates[40:])) - 0.3) < 0.06
+    assert len(eng.trace_counts) == 1       # stream tag never retraces
+    assert all(c == 1 for c in eng.trace_counts.values())
+
+
+def test_rules_from_config_per_stream_budgets():
+    r = bud.rules_from_config(PALRunConfig(oracle_budget=0.2))
+    assert r[0].target == 0.2 and r[0].target_serve == 0.2
+    r = bud.rules_from_config(PALRunConfig(oracle_budget=0.2,
+                                           oracle_budget_serve=0.05))
+    assert r[0].target == 0.2 and r[0].target_serve == 0.05
+    r = bud.rules_from_config(PALRunConfig(oracle_budget_exchange=0.3,
+                                           oracle_budget_serve=0.1))
+    assert r[0].target == 0.3 and r[0].target_serve == 0.1
+    # one stream configured: the other inherits (joint control)
+    r = bud.rules_from_config(PALRunConfig(oracle_budget_serve=0.1))
+    assert r[0].target == 0.1 and r[0].target_serve == 0.1
+
+
+# ---------------------------------------------------------------------------
+# runtime wiring: PAL.serve_queue + per-stream report breakout
+# ---------------------------------------------------------------------------
+
+
+class _Gene(UserGene):
+    def __init__(self, rank, rd):
+        super().__init__(rank, rd)
+        self.rng = np.random.RandomState(rank)
+
+    def generate_new_data(self, data_to_gene):
+        return False, self.rng.randn(IN_DIM).astype(np.float32)
+
+
+class _Model(UserModel):
+    def __init__(self, rank, rd, dev, mode):
+        super().__init__(rank, rd, dev, mode)
+        self.w = np.random.RandomState(rank).randn(IN_DIM, OUT_DIM) * 0.5
+
+    def predict(self, xs):
+        return [np.asarray(x) @ self.w for x in xs]
+
+    def update(self, warr):
+        self.w = warr.reshape(IN_DIM, OUT_DIM)
+
+    def get_weight(self):
+        return self.w.reshape(-1).astype(np.float32)
+
+    def get_weight_size(self):
+        return IN_DIM * OUT_DIM
+
+    def add_trainingset(self, dps):
+        pass
+
+    def retrain(self, req):
+        return False
+
+
+class _Oracle(UserOracle):
+    def run_calc(self, inp):
+        return inp, np.zeros(OUT_DIM, np.float32)
+
+
+def _pal(**cfg_kw):
+    tmp = tempfile.mkdtemp()
+    _, cparams, apply_fn = _committee(seed=16)
+    cfg = PALRunConfig(result_dir=tmp, gene_process=2, orcl_process=0,
+                       pred_process=1, ml_process=1, std_threshold=0.4,
+                       **cfg_kw)
+    return PAL(cfg, make_generator=_Gene, make_model=_Model,
+               make_oracle=_Oracle,
+               committee=acq.CommitteeSpec(apply_fn, cparams))
+
+
+def test_pal_builds_serve_queue_and_reports_per_stream_rates():
+    pal = _pal(oracle_budget=0.3, serve_uq=True, serve_max_batch=8,
+               serve_max_wait_ms=5.0)
+    try:
+        assert pal.serve_queue is not None
+        assert pal.serve_queue.server is pal.server
+        pal.exchange.step()                       # exchange traffic
+        rng = np.random.RandomState(17)
+        futs = [pal.serve_queue.submit(
+                    [(rng.randn(IN_DIM) * 2).astype(np.float32)])
+                for _ in range(8)]
+        for f in futs:
+            f.result(timeout=10)
+        rep = pal.report()
+        c = rep["counters"]
+        assert c.get("serve.requests", 0) == 8
+        assert rep["serve_queue_dispatches"] == pal.serve_queue.dispatches
+        assert rep["serve_queue_batched_requests"] == 8
+        # per-stream breakout, consistent with the joint rate
+        assert rep["oracle_rate_serve"] == pytest.approx(
+            c.get("serve.routed_to_oracle", 0) / 8)
+        ex_p = c.get("exchange.proposals", 0)
+        assert ex_p > 0
+        assert rep["oracle_rate_exchange"] == pytest.approx(
+            c.get("exchange.queued_to_oracle", 0) / ex_p)
+        joint = (c.get("exchange.queued_to_oracle", 0)
+                 + c.get("serve.routed_to_oracle", 0)) / (ex_p + 8)
+        assert rep["oracle_rate"] == pytest.approx(joint)
+    finally:
+        pal.shutdown()
+
+
+def test_pal_without_queue_has_no_serve_queue():
+    pal = _pal(serve_uq=True)
+    try:
+        assert pal.server is not None and pal.serve_queue is None
+        assert pal.report()["oracle_rate_serve"] is None
+    finally:
+        pal.shutdown()

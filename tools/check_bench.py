@@ -1,0 +1,162 @@
+"""Benchmark-regression gate (CI step after bench-smoke; `make bench-check`).
+
+Compares the ``BENCH_*.json`` reports that ``make bench-smoke`` just wrote
+against the committed baselines in ``benchmarks/baselines/`` and fails when
+a headline metric regresses beyond tolerance — so a PR that silently
+forfeits the fused-dispatch speedup, the host-byte reduction, or the
+serving-queue amortization turns CI red instead of rotting until the next
+full benchmark run.
+
+Headline metrics are RATIOS measured within one process on one machine
+(fused vs sequential, queued vs per-call), so they are comparable across
+hosts in a way absolute wall-clock numbers are not; the baselines are
+produced by the same ``--quick`` configurations bench-smoke runs.
+
+Checks per metric kind:
+  ratio_min — current >= baseline * (1 - tolerance)   (speedups, ratios)
+  flag      — a baseline-true boolean must stay true  (parity/residency)
+  abs_max   — current <= bound                        (error ceilings)
+
+``--tolerance`` sets the default relative tolerance (0.20); individual
+metrics may override it where the quantity is deterministic (byte ratios)
+or noisy (thread-scheduling-dependent speedups).
+
+Usage:  python tools/check_bench.py [--tolerance 0.2]
+                                    [--baseline-dir benchmarks/baselines]
+                                    [--bench-dir .]
+Exit status: number of failing metrics (0 = clean).  A missing baseline or
+report is a failure — the gate must never pass vacuously.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# metric registry: file -> ((path, kind, override), ...)
+#   path      dotted key into the report json
+#   kind      'ratio_min' | 'flag' | 'abs_max'
+#   override  per-metric tolerance (ratio_min) or bound (abs_max);
+#             None = use --tolerance / the flag semantics
+HEADLINE = {
+    "BENCH_committee_uq.json": (
+        ("speedup_wallclock", "ratio_min", None),
+        # shape-determined byte accounting is deterministic: any change is
+        # a real transfer regression, not noise
+        ("bytes_reduction_factor", "ratio_min", 0.02),
+        ("buckets_compile_once", "flag", None),
+    ),
+    "BENCH_budget_controller.json": (
+        # the controller's own acceptance: settled realized rate within
+        # 10% of the configured oracle budget
+        ("budget_rate_rel_error", "abs_max", 0.10),
+        ("state_device_resident", "flag", None),
+        ("uq_bytes_identical_to_default", "flag", None),
+    ),
+    "BENCH_serving_queue.json": (
+        # thread-scheduling dependent -> wider band, but the acceptance
+        # floor (>= 3x) is absolute: never pass below it
+        ("queued_vs_percall_speedup", "ratio_min", 0.40),
+        ("queue_reuses_engine_buckets", "flag", None),
+    ),
+}
+
+# absolute floors that hold regardless of baseline drift
+FLOORS = {
+    ("BENCH_serving_queue.json", "queued_vs_percall_speedup"): 3.0,
+    ("BENCH_committee_uq.json", "speedup_wallclock"): 2.0,
+}
+
+
+def _get(report: dict, path: str):
+    cur = report
+    for part in path.split("."):
+        if not isinstance(cur, dict) or part not in cur:
+            return None
+        cur = cur[part]
+    return cur
+
+
+def check_file(name: str, bench_dir: str, baseline_dir: str,
+               tolerance: float) -> int:
+    cur_path = os.path.join(bench_dir, name)
+    base_path = os.path.join(baseline_dir, name)
+    if not os.path.exists(cur_path):
+        print(f"  FAIL {name}: report missing (did bench-smoke run?)")
+        return 1
+    if not os.path.exists(base_path):
+        print(f"  FAIL {name}: no committed baseline at "
+              f"{os.path.relpath(base_path, REPO)}")
+        return 1
+    cur_rep = json.load(open(cur_path))
+    base_rep = json.load(open(base_path))
+
+    failures = 0
+    for path, kind, override in HEADLINE[name]:
+        cur = _get(cur_rep, path)
+        base = _get(base_rep, path)
+        if cur is None or (base is None and kind != "abs_max"):
+            print(f"  FAIL {name}:{path}: metric missing "
+                  f"(current={cur!r}, baseline={base!r})")
+            failures += 1
+            continue
+        if kind == "flag":
+            if bool(base) and not bool(cur):
+                print(f"  FAIL {name}:{path}: was true in baseline, "
+                      f"now {cur!r}")
+                failures += 1
+            else:
+                print(f"  ok   {name}:{path} = {cur!r}")
+        elif kind == "abs_max":
+            bound = override if override is not None else float(base)
+            if float(cur) > bound:
+                print(f"  FAIL {name}:{path}: {float(cur):.4g} exceeds "
+                      f"bound {bound:.4g}")
+                failures += 1
+            else:
+                print(f"  ok   {name}:{path} = {float(cur):.4g} "
+                      f"(bound {bound:.4g})")
+        else:  # ratio_min
+            tol = override if override is not None else tolerance
+            need = float(base) * (1.0 - tol)
+            floor = FLOORS.get((name, path))
+            if floor is not None:
+                need = max(need, floor)
+            if float(cur) < need:
+                print(f"  FAIL {name}:{path}: {float(cur):.3g} < required "
+                      f"{need:.3g} (baseline {float(base):.3g}, "
+                      f"tolerance {tol:.0%}"
+                      + (f", floor {floor:g}" if floor is not None else "")
+                      + ")")
+                failures += 1
+            else:
+                print(f"  ok   {name}:{path} = {float(cur):.3g} "
+                      f"(baseline {float(base):.3g}, required "
+                      f">= {need:.3g})")
+    return failures
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tolerance", type=float, default=0.20,
+                    help="default relative regression tolerance (0.20)")
+    ap.add_argument("--baseline-dir",
+                    default=os.path.join(REPO, "benchmarks", "baselines"))
+    ap.add_argument("--bench-dir", default=REPO,
+                    help="where bench-smoke wrote the BENCH_*.json reports")
+    args = ap.parse_args(argv)
+
+    total = 0
+    for name in sorted(HEADLINE):
+        print(f"== {name}")
+        total += check_file(name, args.bench_dir, args.baseline_dir,
+                            args.tolerance)
+    print(f"bench check: {'OK' if total == 0 else f'{total} failure(s)'}")
+    return min(total, 99)
+
+
+if __name__ == "__main__":
+    sys.exit(main())
