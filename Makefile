@@ -25,6 +25,7 @@ bench-smoke:
 	$(PY) benchmarks/committee_uq.py --quick
 	$(PY) benchmarks/budget_controller.py --quick
 	$(PY) benchmarks/serving_queue.py --quick
+	$(PY) -m benchmarks.run --only train --smoke
 	$(PY) examples/quickstart.py --timeout 20
 
 # regression gate: headline BENCH_*.json metrics vs the committed

@@ -1,0 +1,200 @@
+"""Benchmark: fused one-dispatch K-member retraining vs sequential
+per-member training, plus trainer->engine weight-refresh host traffic.
+
+The legacy training path runs one Python trainer object per committee
+member: K separate jitted train steps per optimization step (K dispatches,
+K schedule/optimizer evaluations, K host loops).  The fused
+``training/committee_trainer.CommitteeTrainer`` advances ALL K members in
+ONE vmapped dispatch per step — per-member ``TrainState`` stacked on a
+leading committee axis, per-member bootstrap minibatches gathered on
+device from the ``ReplayTrainingBuffer`` ring.
+
+Metrics written to ``BENCH_committee_train.json``:
+
+* wall-clock for one full retrain round (K members x STEPS steps),
+  sequential vs fused (median over rounds) -> ``speedup_fused_retrain``
+  (acceptance: >= 3x at K=8 on CPU);
+* trainer->engine weight-refresh host bytes: the WeightStore path packs
+  1-D float32 arrays through host memory every publish; the
+  ``FusedEngine.refresh_from_device`` path moves ZERO packed host bytes
+  -> ``refresh_device_zero_host_bytes``;
+* both paths train the same data order (the fused trainer's own
+  ``minibatch_indices`` replayed into the sequential baseline), and the
+  resulting member params must agree within vmap-reduction tolerance.
+
+Usage:  PYTHONPATH=src python benchmarks/committee_train.py [--quick] [--out F]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import statistics
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import acquisition as acq
+from repro.core import committee as cmte
+from repro.core.weight_sync import WeightStore
+from repro.training.committee_trainer import (
+    CommitteeTrainer, default_train_config,
+)
+from repro.training.train_step import make_train_state, make_train_step
+
+K = 8               # committee members (acceptance: >=3x at K=8, CPU)
+IN_DIM = 16
+HIDDEN = 64
+OUT_DIM = 4
+N_DATA = 512
+BATCH = 32
+LR = 1e-3
+
+
+def _mlp_apply(p, x):
+    h = jnp.tanh(x @ p["w1"] + p["b1"])
+    return h @ p["w2"] + p["b2"]
+
+
+def _loss(p, batch):
+    pred = _mlp_apply(p, batch["x"])
+    return jnp.mean((pred - batch["y"]) ** 2), {}
+
+
+def _make_members(rng):
+    return [{
+        "w1": jnp.asarray(rng.randn(IN_DIM, HIDDEN).astype(np.float32) * 0.3),
+        "b1": jnp.asarray(rng.randn(HIDDEN).astype(np.float32) * 0.1),
+        "w2": jnp.asarray(rng.randn(HIDDEN, OUT_DIM).astype(np.float32) * 0.3),
+        "b2": jnp.asarray(rng.randn(OUT_DIM).astype(np.float32) * 0.1),
+    } for _ in range(K)]
+
+
+def bench_sequential(members, xs, ys, idx_per_step, rounds):
+    """Legacy path: K per-member jitted train steps per optimization step.
+    Data order is the FUSED trainer's own bootstrap draw (replayed), so
+    both paths do identical numerical work."""
+    tcfg = default_train_config(LR)
+    step = jax.jit(make_train_step(_loss, tcfg))
+    times, final_states = [], None
+    for _ in range(rounds):
+        states = [make_train_state(m, tcfg) for m in members]
+        t0 = time.perf_counter()
+        for idx in idx_per_step:                     # (K, B) per step
+            for i in range(K):
+                batch = {"x": xs[idx[i]], "y": ys[idx[i]]}
+                states[i], _ = step(states[i], batch)
+        jax.tree.map(lambda a: a.block_until_ready(), states[-1].params)
+        times.append(time.perf_counter() - t0)
+        final_states = states
+    return times, final_states
+
+
+def bench_fused(trainer, steps, rounds):
+    """Fused path: one CommitteeTrainer.train round (all K members advance
+    per dispatch).  The trainer's initial snapshot is restored between
+    rounds so every round starts from the same optimizer state the
+    sequential baseline does, without rebuilding the jit cache."""
+    init_sd = trainer.state_dict()
+    times = []
+    for _ in range(rounds):
+        trainer.load_state_dict(init_sd)
+        t0 = time.perf_counter()
+        trainer.train(steps=steps)
+        jax.tree.map(lambda a: a.block_until_ready(), trainer.cparams)
+        times.append(time.perf_counter() - t0)
+    return times, trainer
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", "--quick", dest="smoke", action="store_true",
+                    help="few iterations (CI smoke)")
+    ap.add_argument("--steps", type=int, default=None)
+    ap.add_argument("--rounds", type=int, default=None)
+    ap.add_argument("--out", default="BENCH_committee_train.json")
+    args = ap.parse_args(argv)
+    steps = args.steps or (20 if args.smoke else 60)
+    rounds = args.rounds or (3 if args.smoke else 7)
+
+    rng = np.random.RandomState(0)
+    members = _make_members(rng)
+    cparams = cmte.stack_members(members)
+    xs_h = rng.randn(N_DATA, IN_DIM).astype(np.float32)
+    ys_h = rng.randn(N_DATA, OUT_DIM).astype(np.float32)
+    xs, ys = jnp.asarray(xs_h), jnp.asarray(ys_h)
+
+    trainer = CommitteeTrainer(_loss, cparams, steps=steps, batch=BATCH,
+                               lr=LR, bootstrap=True,
+                               replay_capacity=N_DATA, seed=0)
+    trainer.add_blocks(list(zip(xs_h, ys_h)))
+
+    # replay the fused trainer's exact bootstrap draws into the baseline
+    idx_per_step = [trainer.minibatch_indices(t, N_DATA)
+                    for t in range(steps)]
+
+    # warmup compiles for both paths (one extra round each)
+    seq_t, seq_states = bench_sequential(members, xs, ys, idx_per_step,
+                                         rounds + 1)
+    fus_t, fus_trainer = bench_fused(trainer, steps, rounds + 1)
+    seq_ms = statistics.median(seq_t[1:]) * 1e3
+    fus_ms = statistics.median(fus_t[1:]) * 1e3
+
+    # numerical parity: same data order => same members (vmap tolerance)
+    for i in (0, K - 1):
+        a = np.asarray(seq_states[i].params["w1"])
+        b = np.asarray(cmte.member(fus_trainer.cparams, i)["w1"])
+        err = float(np.max(np.abs(a - b)))
+        assert err < 1e-4, f"fused/sequential member {i} diverged: {err}"
+
+    # --- trainer -> engine weight refresh: host bytes per publish ---------
+    engine = acq.FusedEngine(_mlp_apply, cparams, 0.5, impl="xla")
+    engine.refresh_host_bytes = 0
+    engine.refresh_from_device(fus_trainer.snapshot_cparams())
+    device_bytes = engine.refresh_host_bytes            # must stay 0
+
+    store = WeightStore(K)
+    engine_store = acq.FusedEngine(_mlp_apply, cparams, 0.5, impl="xla")
+    for i in range(K):
+        store.publish_packed(
+            i, cmte.get_weight(cmte.member(fus_trainer.cparams, i)))
+    engine_store.refresh_from(store)
+    store_bytes = engine_store.refresh_host_bytes
+    # the publish side packs the same bytes again into the store's
+    # ping-pong buffers: count both directions of the host round trip
+    store_bytes += sum(
+        store.pull_packed(i)[0].nbytes for i in range(K))
+
+    report = {
+        "config": {"K": K, "in_dim": IN_DIM, "hidden": HIDDEN,
+                   "out_dim": OUT_DIM, "n_data": N_DATA, "batch": BATCH,
+                   "steps_per_round": steps, "rounds": rounds,
+                   "backend": jax.default_backend()},
+        "sequential": {"ms_per_retrain_round": seq_ms,
+                       "dispatches_per_step": K},
+        "fused": {"ms_per_retrain_round": fus_ms,
+                  "dispatches_per_step": 1,
+                  "replay_bytes_to_device":
+                      fus_trainer.replay.bytes_to_device,
+                  "replay_append_blocks": fus_trainer.replay.append_blocks},
+        "speedup_fused_retrain": seq_ms / fus_ms,
+        "refresh_host_bytes_device_path": device_bytes,
+        "refresh_host_bytes_store_path": store_bytes,
+        "refresh_device_zero_host_bytes": device_bytes == 0,
+    }
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2)
+
+    print(f"sequential:  {seq_ms:.1f} ms/retrain round "
+          f"(K={K} x {steps} steps, {K} dispatches/step)")
+    print(f"fused:       {fus_ms:.1f} ms/retrain round (1 dispatch/step)")
+    print(f"speedup {report['speedup_fused_retrain']:.2f}x")
+    print(f"weight refresh host bytes: device path {device_bytes}, "
+          f"WeightStore path {store_bytes}")
+    print(f"wrote {args.out}")
+    return report
+
+
+if __name__ == "__main__":
+    main()

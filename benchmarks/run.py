@@ -8,6 +8,8 @@
                  std drift + hot-path overhead vs the default rule
   serving      — queue-batched + mesh-sharded committee serving vs
                  per-call CommitteeServer.predict at request size 1
+  train        — fused one-dispatch K-member retraining vs sequential
+                 per-member training + weight-refresh host bytes
   kernels      — Pallas-path microbenchmarks (XLA schedule, host timing)
 
 ``python -m benchmarks.run`` runs everything; ``--only <name>`` filters.
@@ -62,6 +64,12 @@ def bench_serving(smoke: bool):
     serving_queue.main(["--smoke"] if smoke else [])
 
 
+def bench_train(smoke: bool):
+    from benchmarks import committee_train
+    _section("Fused one-dispatch K-member retraining")
+    committee_train.main(["--smoke"] if smoke else [])
+
+
 def bench_kernels():
     _section("Kernel microbenchmarks (XLA schedule on host)")
     import jax
@@ -110,7 +118,7 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     choices=["speedup", "overhead", "scaling", "kernels",
-                             "committee_uq", "budget", "serving"])
+                             "committee_uq", "budget", "serving", "train"])
     ap.add_argument("--simulate", action="store_true",
                     help="run the measured PAL-runtime speedup simulation")
     ap.add_argument("--smoke", action="store_true",
@@ -130,6 +138,8 @@ def main():
         bench_budget(args.smoke)
     if args.only in (None, "serving"):
         bench_serving(args.smoke)
+    if args.only in (None, "train"):
+        bench_train(args.smoke)
     if args.only in (None, "kernels"):
         bench_kernels()
     print(f"\n# total benchmark wall time: {time.time() - t0:.1f}s")

@@ -8,7 +8,10 @@ The five kernels instantiated with transformers:
   oracle     = a larger 'teacher' LM that labels sequences (next-token
                targets = teacher greedy continuations) — the stand-in for
                expensive ground truth, exactly the paper's oracle role
-  training   = continuous refit of the committee on the labeled buffer
+  training   = the SHARED fused committee trainer (training/
+               committee_trainer.py): every student advances in one
+               vmapped dispatch per step on teacher-labeled sequences
+               from the device replay ring
   controller = the same Exchange/Manager machinery as the MD example
 
 Prediction runs on the unified acquisition engine: the student committee is
@@ -32,9 +35,8 @@ sys.path.insert(0, "src")
 from repro.configs.base import ModelConfig
 from repro.configs.pal_potential import PALRunConfig
 from repro.core import (CommitteeSpec, PAL, ThresholdRule, TopFractionRule,
-                        UserGene, UserModel, UserOracle)
+                        UserGene, UserOracle)
 from repro.core import committee as cmte
-from repro.data.replay import ALReplayBuffer
 from repro.models.model_zoo import build_model
 from repro.models.transformer import lm_loss
 
@@ -64,63 +66,17 @@ class PromptGene(UserGene):
         return False, seq.astype(np.float32)   # transport is float 1-D
 
 
-class StudentCommittee(UserModel):
-    def __init__(self, rank, rd, dev, mode):
-        super().__init__(rank, rd, dev, mode)
-        self.model = build_model(STUDENT)
-        self.params = self.model.init(jax.random.PRNGKey(
-            rank + (77 if mode == "train" else 0)))
-        self.buffer = ALReplayBuffer(capacity=512, seq_len=SEQ - 1)
-        fwd = self.model.forward
+_STUDENT_MODEL = build_model(STUDENT)
 
-        def seq_nll(p, tokens):
-            logits = fwd(p, {"tokens": tokens[:, :-1]})
-            lf = logits.astype(jnp.float32)
-            lse = jax.nn.logsumexp(lf, axis=-1)
-            ll = jnp.take_along_axis(
-                lf, tokens[:, 1:][..., None], axis=-1)[..., 0]
-            return jnp.mean(lse - ll, axis=-1)      # (B,)
 
-        self._nll = jax.jit(seq_nll)
-
-        def loss(p, batch):
-            logits = fwd(p, batch)
-            return lm_loss(logits, batch["labels"])[0]
-
-        self._grad = jax.jit(jax.value_and_grad(loss))
-
-    def predict(self, list_data):
-        toks = jnp.asarray(np.stack(list_data)).astype(jnp.int32)
-        nll = self._nll(self.params, toks)
-        return [np.asarray(nll[i])[None] for i in range(toks.shape[0])]
-
-    def update(self, arr):
-        self.params = cmte.update(self.params, arr)
-
-    def get_weight(self):
-        return cmte.get_weight(self.params)
-
-    def get_weight_size(self):
-        return cmte.get_weight_size(self.params)
-
-    def add_trainingset(self, datapoints):
-        seqs = [lab.astype(np.int32) for _, lab in datapoints]
-        self.buffer.add(seqs)
-
-    def retrain(self, req):
-        rng = np.random.RandomState(0)
-        lr = 1e-3
-        for _ in range(30):
-            batch = self.buffer.sample(16, rng)
-            if batch is None:
-                break
-            b = {k: jnp.asarray(v) for k, v in batch.items()}
-            _, g = self._grad(self.params, b)
-            self.params = jax.tree.map(lambda p, gg: p - lr * gg,
-                                       self.params, g)
-            if req.Test():
-                break
-        return False
+def student_loss(p, batch):
+    """ONE student's distillation loss for the fused committee trainer:
+    next-token cross entropy on the teacher-labeled sequence (``batch["y"]``
+    is the oracle output — prompt head + teacher continuation — shipped as
+    float over the paper's 1-D transport and cast back here)."""
+    toks = batch["y"].astype(jnp.int32)
+    logits = _STUDENT_MODEL.forward(p, {"tokens": toks[:, :-1]})
+    return lm_loss(logits, toks[:, 1:])[0], {}
 
 
 class TeacherOracle(UserOracle):
@@ -167,14 +123,15 @@ def main():
         result_dir=tempfile.mkdtemp(prefix="pal_lm_"),
         gene_process=8, orcl_process=2, pred_process=3, ml_process=3,
         retrain_size=24, std_threshold=0.08, patience=1000,
-        weight_sync_every=1)
+        weight_sync_every=1,
+        train_steps=30, train_batch=16, train_lr=1e-3,
+        train_replay_capacity=512)
     # custom selection compiled into the fused dispatch: disagreement
     # threshold, then cap teacher traffic at the 50% most-uncertain
     rules = (ThresholdRule(cfg.std_threshold), TopFractionRule(0.5))
-    pal = PAL(cfg, make_generator=PromptGene, make_model=StudentCommittee,
-              make_oracle=TeacherOracle,
+    pal = PAL(cfg, make_generator=PromptGene, make_oracle=TeacherOracle,
               committee=make_student_committee(cfg.pred_process),
-              rules=rules)
+              loss_fn=student_loss, rules=rules)
     pal.start()
     t0 = time.time()
     while pal.train_buffer.total_labeled < 120 and time.time() - t0 < 120:
@@ -185,7 +142,8 @@ def main():
     print(f"exchange iterations : "
           f"{rep['counters'].get('exchange.iterations')}")
     print(f"retrains            : {rep['counters'].get('train.retrains')}")
-    print(f"weight publishes    : {rep['weight_publishes']}")
+    print(f"fused train steps   : {rep['train_fused_steps']}")
+    print(f"device weight hands : {rep['device_weight_refreshes']}")
     sel_frac = rep["labeled_total"] / max(
         rep["counters"].get("exchange.iterations", 1) * cfg.gene_process, 1)
     print(f"selection fraction  : {sel_frac:.3f} "

@@ -36,10 +36,10 @@ sys.path.insert(0, "examples")
 
 from repro.configs.pal_potential import PALRunConfig, PotentialConfig
 from repro.core import PAL
-from repro.core import committee as cmte
 from repro.models import potential as pot
-from quickstart import (CommitteePotential, LJOracle, MDGenerator, PCFG,
-                        make_committee_spec)
+from repro.training import CommitteeTrainer
+from quickstart import (LJOracle, MDGenerator, PCFG, make_committee_spec,
+                        member_force_loss)
 
 
 def make_test_set(n_traj=16, steps=60, seed=123):
@@ -86,13 +86,9 @@ def seed_set(n: int, seed: int = 7):
     return list(zip(coords.reshape(n, -1), labels))
 
 
-class _Never:
-    def Test(self):
-        return False
-    test = Test
-
-
 SEED_N = 48
+WARM_STEPS = 600        # pre-training budget on the foundational set
+FINAL_STEPS = 1600      # consolidation budget after the run freezes
 
 
 def run_al(budget: int, seed: int = 0, oracle_budget: float = 0.0):
@@ -101,36 +97,33 @@ def run_al(budget: int, seed: int = 0, oracle_budget: float = 0.0):
         gene_process=8, orcl_process=4, pred_process=4, ml_process=4,
         retrain_size=16, std_threshold=0.3, patience=5,
         weight_sync_every=1,
+        train_steps=400, train_batch=64, train_lr=1e-3,
         # >0: cross-round PI control of the effective threshold toward
         # oracle_budget selected-per-round (fixed labeling cost; the
         # static threshold above only seeds the controller)
         oracle_budget=oracle_budget, budget_horizon=16)
-    pal = PAL(cfg, make_generator=MDGenerator,
-              make_model=CommitteePotential, make_oracle=LJOracle,
-              committee=make_committee_spec(PCFG.committee_size))
-    # warm start: pre-train every committee member on the foundational set
-    # and publish so the prediction kernel starts from sane forces
-    seed_data = seed_set(SEED_N)
-    for i, t in enumerate(pal.trainers):
-        t.add_trainingset(seed_data)
-        t.retrain(_Never(), max_steps=600)
-        pal.store.publish_packed(i, t.get_weight())
+    pal = PAL(cfg, make_generator=MDGenerator, make_oracle=LJOracle,
+              committee=make_committee_spec(PCFG.committee_size),
+              loss_fn=member_force_loss)
+    # warm start (paper §3.3: foundational pre-training): the SHARED
+    # committee trainer fits all K members on the seed set in one-dispatch
+    # steps, then hands weights to the engine device-to-device
+    trainer = pal.committee_trainer
+    trainer.add_blocks(seed_set(SEED_N))
+    trainer.train(steps=WARM_STEPS)
+    pal.engine.refresh_from_device(trainer.snapshot_cparams())
     pal.start()
     t0 = time.time()
     while pal.train_buffer.total_labeled < budget and time.time() - t0 < 240:
         time.sleep(0.2)
     pal.shutdown()
 
-    # consolidation: the run froze mid-stream; finish training each member
-    # on its final set (same per-member step budget as the baseline)
-    for t in pal.trainers:
-        # absorb any blocks still sitting in the trainer channel
-        i = pal.trainers.index(t)
-        while pal.trainer_channels[i].poll():
-            t.add_trainingset(pal.trainer_channels[i].recv())
-        if t.x_train:
-            t.retrain(_Never(), max_steps=1600)
-    members = [t.params for t in pal.trainers]
+    # consolidation: the run froze mid-stream; absorb any blocks still in
+    # the trainer channel and finish training the committee on its final
+    # set (same step budget as the baseline)
+    while pal.trainer_channels[0].poll():
+        trainer.add_blocks(pal.trainer_channels[0].recv())
+    trainer.train(steps=FINAL_STEPS)
     labeled = pal.train_buffer.total_labeled
     rep = pal.report()
     if oracle_budget > 0:
@@ -139,12 +132,14 @@ def run_al(budget: int, seed: int = 0, oracle_budget: float = 0.0):
         ctrl = state[-1] if state else {}
         rep["budget_controller"] = {
             k: float(np.asarray(v)) for k, v in dict(ctrl).items()}
-    return cmte.stack_members(members), labeled, rep
+    return trainer.cparams, labeled, rep
 
 
 def run_random_baseline(budget: int, seed: int = 1):
     """Same TOTAL label budget (incl. the seed set), random near-equilibrium
-    geometries — no uncertainty selection, no exploration guidance."""
+    geometries — no uncertainty selection, no exploration guidance.  Runs
+    on the SAME shared CommitteeTrainer subsystem as the AL path, so the
+    comparison isolates selection, not the optimizer."""
     rng = np.random.RandomState(seed)
     lattice = np.stack(np.meshgrid([0, 1.3], [0, 1.3], [0, 1.3]),
                        -1).reshape(-1, 3)[:PCFG.n_atoms]
@@ -154,14 +149,14 @@ def run_random_baseline(budget: int, seed: int = 1):
     labels = np.stack([np.asarray(
         pot.lj_energy_forces(jnp.asarray(c))[1]).reshape(-1)
         for c in coords])
-    members = []
-    for k in range(PCFG.committee_size):
-        m = CommitteePotential(k + 1000, "/tmp", 0, "train")
-        m.add_trainingset(seed_set(SEED_N))
-        m.add_trainingset(list(zip(coords.reshape(budget, -1), labels)))
-        m.retrain(_Never(), max_steps=600 + 1600)
-        members.append(m.params)
-    return cmte.stack_members(members)
+    trainer = CommitteeTrainer(
+        member_force_loss,
+        make_committee_spec(PCFG.committee_size, seed_offset=1000).cparams,
+        batch=64, lr=1e-3, replay_capacity=2048, seed=seed)
+    trainer.add_blocks(seed_set(SEED_N))
+    trainer.add_blocks(list(zip(coords.reshape(budget, -1), labels)))
+    trainer.train(steps=WARM_STEPS + FINAL_STEPS)
+    return trainer.cparams
 
 
 def main():

@@ -1,20 +1,26 @@
 """PAL quickstart — the paper's workflow in ~100 lines (photodynamics-style,
 §3.1): a committee of MLP potentials drives parallel MD-like generators;
-uncertain geometries go to an analytic 'DFT' oracle; trainers continuously
-refit; weights flow back to the prediction committee. Patience policy
-included (§2.2).
+uncertain geometries go to an analytic 'DFT' oracle; the fused committee
+trainer continuously refits; weights flow back to the prediction committee.
+Patience policy included (§2.2).
 
 Prediction runs on the unified acquisition engine: a ``CommitteeSpec``
 hands PAL the per-member forward + stacked params, and the committee
 forward, uncertainty statistics, and selection rules execute as ONE fused
 device dispatch per exchange iteration (``PALRunConfig.uq_impl``).
 
+Training is the same story: ``loss_fn=`` turns on the shared
+``training/committee_trainer.CommitteeTrainer`` — all K members advance in
+one vmapped dispatch per step on per-member bootstrap minibatches drawn
+from a device-resident replay ring, and refreshed weights hand off to the
+engine device-to-device (no hand-rolled retrain loop, no packed host
+round trip).
+
   PYTHONPATH=src python examples/quickstart.py [--timeout 45]
 """
 import argparse
 import sys
 import tempfile
-import time
 
 import jax
 import jax.numpy as jnp
@@ -23,7 +29,7 @@ import numpy as np
 sys.path.insert(0, "src")
 
 from repro.configs.pal_potential import PALRunConfig, PotentialConfig
-from repro.core import PAL, CommitteeSpec, UserGene, UserModel, UserOracle
+from repro.core import PAL, CommitteeSpec, UserGene, UserOracle
 from repro.core import committee as cmte
 from repro.models import potential as pot
 
@@ -61,66 +67,6 @@ class MDGenerator(UserGene):
         return False, self.x.reshape(-1).astype(np.float32)
 
 
-class CommitteePotential(UserModel):
-    """Prediction & training kernel: MLP potential committee member."""
-
-    def __init__(self, rank, result_dir, i_device, mode):
-        super().__init__(rank, result_dir, i_device, mode)
-        self.params = pot.init(PCFG, jax.random.PRNGKey(
-            rank + (1000 if mode == "train" else 0)))
-        self.x_train, self.y_train = [], []
-
-        def forces(p, flat):
-            _, f = pot.energy_forces(p, flat.reshape(PCFG.n_atoms, 3), PCFG)
-            return f.reshape(-1)
-
-        self._forces = jax.jit(jax.vmap(forces, in_axes=(None, 0)))
-
-        def loss(p, xs, ys):
-            pred = jax.vmap(lambda x: forces(p, x), in_axes=0)(xs)
-            return jnp.mean((pred - ys) ** 2)
-
-        self._grad = jax.jit(jax.value_and_grad(loss))
-
-    # --- prediction side -------------------------------------------------
-    def predict(self, list_data_to_pred):
-        x = jnp.asarray(np.stack(list_data_to_pred))
-        return list(np.asarray(self._forces(self.params, x)))
-
-    def update(self, weight_array):
-        self.params = cmte.update(self.params, weight_array)
-
-    def get_weight_size(self):
-        return cmte.get_weight_size(self.params)
-
-    # --- training side ----------------------------------------------------
-    def get_weight(self):
-        return cmte.get_weight(self.params)
-
-    def add_trainingset(self, datapoints):
-        for inp, lab in datapoints:
-            self.x_train.append(inp)
-            self.y_train.append(lab)
-
-    BATCH = 64   # fixed minibatch: one jit shape regardless of set growth
-
-    def retrain(self, req_data, max_steps=400):
-        rng = np.random.RandomState(len(self.x_train))
-        xs_all = np.stack(self.x_train)
-        ys_all = np.stack(self.y_train)
-        lr = 1e-3
-        for _ in range(max_steps):
-            idx = rng.randint(0, len(xs_all), size=self.BATCH)
-            xs = jnp.asarray(xs_all[idx])
-            ys = jnp.asarray(ys_all[idx])
-            l, g = self._grad(self.params, xs, ys)
-            self.params = jax.tree.map(lambda p, gg: p - lr * gg,
-                                       self.params, g)
-            if req_data.Test():       # new labeled data arrived -> stop
-                break
-        return False
-
-
 class LJOracle(UserOracle):
     """Analytic Lennard-Jones cluster = the 'DFT' ground truth stand-in."""
 
@@ -136,16 +82,25 @@ class LJOracle(UserOracle):
         return input_for_orcl, np.asarray(f).reshape(-1).astype(np.float32)
 
 
+def member_forces(p, flat_batch):                # (n, 3A) -> (n, 3A)
+    """ONE committee member's force field over a batch of flat coords —
+    the apply_fn of the CommitteeSpec AND the forward inside the loss."""
+    def one(flat):
+        _, f = pot.energy_forces(p, flat.reshape(PCFG.n_atoms, 3), PCFG)
+        return f.reshape(-1)
+    return jax.vmap(one)(flat_batch)
+
+
+def member_force_loss(p, batch):
+    """Per-member training loss for the fused committee trainer: MSE on
+    oracle forces over the minibatch ``{"x": coords, "y": forces}``."""
+    pred = member_forces(p, batch["x"])
+    return jnp.mean((pred - batch["y"]) ** 2), {}
+
+
 def make_committee_spec(n_members: int, seed_offset: int = 0
                         ) -> CommitteeSpec:
     """Fused-engine committee: per-member force field over flat coords."""
-
-    def member_forces(p, flat_batch):            # (n, 3A) -> (n, 3A)
-        def one(flat):
-            _, f = pot.energy_forces(p, flat.reshape(PCFG.n_atoms, 3), PCFG)
-            return f.reshape(-1)
-        return jax.vmap(one)(flat_batch)
-
     cparams = cmte.stack_members([
         pot.init(PCFG, jax.random.PRNGKey(i + seed_offset))
         for i in range(n_members)])
@@ -161,25 +116,28 @@ def main(argv=None):
         result_dir=tempfile.mkdtemp(prefix="pal_quickstart_"),
         gene_process=8, orcl_process=4, pred_process=4, ml_process=4,
         retrain_size=16, std_threshold=0.25, patience=5,
-        weight_sync_every=1, checkpoint_every=10.0)
-    pal = PAL(cfg, make_generator=MDGenerator,
-              make_model=CommitteePotential, make_oracle=LJOracle,
-              committee=make_committee_spec(PCFG.committee_size))
+        weight_sync_every=1, checkpoint_every=10.0,
+        train_steps=400, train_batch=64, train_lr=1e-3)
+    pal = PAL(cfg, make_generator=MDGenerator, make_oracle=LJOracle,
+              committee=make_committee_spec(PCFG.committee_size),
+              loss_fn=member_force_loss)
     print("running PAL (8 MD generators, 4-NN committee, 4 LJ oracles, "
-          f"fused acquisition engine uq_impl={cfg.uq_impl})...")
+          f"fused acquisition engine uq_impl={cfg.uq_impl}, "
+          "fused committee trainer)...")
     token = pal.run(timeout=args.timeout)
     rep = pal.report()
     print(f"stopped by: {token}")
     print(f"exchange iterations : {rep['counters'].get('exchange.iterations')}")
     print(f"labeled by oracle   : {rep['labeled_total']}")
     print(f"retrain rounds      : {rep['counters'].get('train.retrains')}")
-    print(f"weight publishes    : {rep['weight_publishes']}")
-    print(f"weight refreshes    : "
-          f"{rep['counters'].get('prediction.weight_refreshes')}")
+    print(f"fused train steps   : {rep['train_fused_steps']}")
+    print(f"device weight hands : {rep['device_weight_refreshes']} "
+          f"(packed host bytes: {pal.engine.refresh_host_bytes})")
     print(f"generator restarts  : "
           f"{sum(g.restarts for g in pal.generators)}")
     print(f"AL checkpoints      : {pal.checkpointer.saves}")
-    assert rep["labeled_total"] > 0 and rep["weight_publishes"] > 0
+    assert rep["labeled_total"] > 0 and rep["device_weight_refreshes"] > 0
+    assert pal.engine.refresh_host_bytes == 0
     print("OK")
 
 

@@ -103,6 +103,22 @@ class PALRunConfig:
                                      # dispatched at the latest this many
                                      # ms after it was enqueued, even if
                                      # the microbatch is not full
+    # --- fused committee training (training/committee_trainer.py) ---------
+    # Active when BOTH committee=CommitteeSpec(...) AND loss_fn= are passed
+    # to PAL: the per-member ml_process trainer threads collapse into ONE
+    # committee-trainer loop advancing all K members in a single vmapped
+    # dispatch per step, fed from a device-resident replay ring, with
+    # weights handed to the acquisition engine device-to-device.  Without a
+    # loss_fn the per-member make_model(..., 'train') factories remain the
+    # legacy path.
+    train_steps: int = 200           # fused steps per retrain round (yields
+                                     # early when a new labeled block lands)
+    train_batch: int = 32            # per-member minibatch rows
+    train_lr: float = 1e-3           # AdamW learning rate (constant sched)
+    train_bootstrap: bool = True     # per-member bootstrap minibatches
+                                     # (decorrelated members); False gives
+                                     # every member the same data order
+    train_replay_capacity: int = 2048  # device replay-ring rows
 
 
 DEFAULT = PotentialConfig()

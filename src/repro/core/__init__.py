@@ -23,10 +23,15 @@ Public surface:
   selection     — prediction_check (paper port) / selection_from_uq /
                   adjust_input_for_oracle(_uq) / patience
   weight_sync   — versioned training->prediction weight publication with
-                  preallocated ping-pong pack buffers (alloc-free publish)
+                  preallocated ping-pong pack buffers (alloc-free publish);
+                  demoted to checkpoint/legacy duty on the fused-training
+                  path, where weights hand off device-to-device
   controller    — Exchange + Manager sub-controllers; one engine call per
                   exchange iteration, dynamic_oracle_list on the same engine
-  runtime       — PAL: threads, fault tolerance, elastic pools, checkpoints
+  runtime       — PAL: threads, fault tolerance, elastic pools, checkpoints;
+                  pass loss_fn= with a CommitteeSpec and the per-member
+                  trainer threads collapse into the fused CommitteeTrainer
+                  loop (training/committee_trainer.py)
   speedup       — the SI S2 analytic speedup model
 """
 from repro.core.acquisition import (  # noqa: F401

@@ -402,6 +402,11 @@ class FusedEngine(UQEngine):
         # host<->device traffic accounting (benchmarks/committee_uq.py)
         self.bytes_to_device = 0
         self.bytes_to_host = 0
+        # weight-refresh accounting (benchmarks/committee_train.py): the
+        # WeightStore path round-trips packed 1-D arrays through host
+        # memory; the device path (refresh_from_device) must stay at 0
+        self.refresh_host_bytes = 0
+        self.device_refreshes = 0
 
     @property
     def size(self) -> int:
@@ -552,6 +557,7 @@ class FusedEngine(UQEngine):
         packs = [store.pull_packed(i % store.n_members) for i in range(K)]
         if any(p is None for p in packs):
             return 0              # not all trainers have published yet
+        self.refresh_host_bytes += sum(p[0].nbytes for p in packs)
         members = [update(member(self.cparams, i), packs[i][0])
                    for i in range(K)]
         cparams = stack_members(members)
@@ -563,6 +569,27 @@ class FusedEngine(UQEngine):
                 cparams, self._cparams_shardings(cparams))
         self.cparams = cparams
         self.version = v
+        return 1
+
+    def refresh_from_device(self, cparams) -> int:
+        """Zero-copy weight handoff from the fused committee trainer: the
+        refreshed STACKED pytree is re-placed on the committee layout
+        directly (a device_put onto the mesh sharding when one is
+        installed; a reference swap otherwise).  No packed 1-D host round
+        trip — ``refresh_host_bytes`` stays untouched, which the
+        benchmark/acceptance tests assert.  The caller must hand over a
+        pytree it will not donate away (``CommitteeTrainer.
+        snapshot_cparams``)."""
+        k = committee_size(cparams)
+        if k != self.size:
+            raise ValueError(
+                f"refresh_from_device: committee size changed ({k} vs "
+                f"{self.size}) — shapes are baked into the jit cache")
+        if self._mesh_rules is not None:
+            cparams = jax.device_put(
+                cparams, self._cparams_shardings(cparams))
+        self.cparams = cparams
+        self.device_refreshes += 1
         return 1
 
 

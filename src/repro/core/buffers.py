@@ -27,6 +27,9 @@ class OracleInputBuffer:
         self.max_size = max_size
         self.dropped = 0
         self.total_enqueued = 0
+        # optional arrival hook (e.g. the runtime's manager-wake event):
+        # called OUTSIDE the lock after every successful put
+        self.on_put: Optional[Callable[[], None]] = None
 
     def put(self, items: Sequence[Any]):
         with self._lock:
@@ -37,6 +40,8 @@ class OracleInputBuffer:
                 # drop the oldest (stalest uncertainty estimates)
                 self._items = self._items[overflow:]
                 self.dropped += overflow
+        if self.on_put is not None:
+            self.on_put()
 
     def pop(self) -> Optional[Any]:
         with self._lock:

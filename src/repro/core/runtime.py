@@ -12,6 +12,17 @@ cparams)`` to get the fused single-dispatch backends (custom selection via
 engine falls back to per-member ``UserModel.predict`` (the paper's
 structure) with identical selection semantics.
 
+Training is config-driven the same way: pass ``loss_fn=`` alongside the
+``CommitteeSpec`` and the per-member ``ml_process`` trainer threads collapse
+into ONE ``training/committee_trainer.CommitteeTrainer`` loop — all K
+members advance in a single vmapped dispatch per step
+(``PALRunConfig.train_steps`` / ``train_batch`` / ``train_lr`` /
+``train_bootstrap``), fed from a device-resident replay ring, with
+refreshed weights handed to the acquisition engine device-to-device
+(``FusedEngine.refresh_from_device`` — no packed host round trip).  Omit
+``loss_fn`` and the per-member ``make_model(..., 'train')`` factories
+remain the legacy path, publishing packed weights through ``WeightStore``.
+
 In-process realization: each kernel pool runs on threads (JAX releases the
 GIL inside compiled code, so committee inference / retraining / oracle calls
 genuinely overlap); the transport layer is MPI-shaped so the controller
@@ -28,7 +39,6 @@ from __future__ import annotations
 
 import logging
 import threading
-import time
 import traceback
 from typing import Any, Callable, Dict, List, Optional, Sequence
 
@@ -61,9 +71,10 @@ class PAL:
         run_cfg: PALRunConfig,
         *,
         make_generator: Callable[[int, str], Any],        # rank, result_dir
-        make_model: Callable[[int, str, int, str], Any],  # rank, dir, dev, mode
+        make_model: Optional[Callable[[int, str, int, str], Any]] = None,
         make_oracle: Callable[[int, str], Any],
         committee: Optional[acq.CommitteeSpec] = None,
+        loss_fn: Optional[Callable] = None,
         rules: Optional[Sequence[acq.SelectionRule]] = None,
         adjust_input_for_oracle: Optional[Callable] = None,
         predict_all_override: Optional[Callable] = None,
@@ -75,6 +86,17 @@ class PAL:
         self.monitor = Monitor()
         rd = run_cfg.result_dir
 
+        # fused committee training: one CommitteeTrainer loop instead of
+        # ml_process per-member trainer threads (loss_fn needs the stacked
+        # committee params, hence the CommitteeSpec requirement)
+        if loss_fn is not None and committee is None:
+            raise ValueError(
+                "loss_fn= enables the fused committee trainer, which needs "
+                "committee=CommitteeSpec(apply_fn, cparams) for the stacked "
+                "member params; pass one or use per-member make_model "
+                "trainers")
+        fused_training = loss_fn is not None
+
         # --- kernel instances (paper: one object per MPI process) ----------
         self.generators = [make_generator(i, rd)
                            for i in range(run_cfg.gene_process)]
@@ -84,20 +106,33 @@ class PAL:
         # itself), so pred_process full model instances would be dead weight
         need_models = (predict_all_override is None
                        and acq.wants_legacy(run_cfg, committee))
+        if (need_models or not fused_training) and make_model is None:
+            raise ValueError(
+                "make_model= is required unless a CommitteeSpec supplies "
+                "prediction (fused engine) and a loss_fn supplies training "
+                "(fused committee trainer)")
         self.predictors = [make_model(i, rd, i, "predict")
                            for i in range(run_cfg.pred_process)] \
             if need_models else []
-        self.trainers = [make_model(i, rd, i, "train")
-                         for i in range(run_cfg.ml_process)]
+        self.trainers = [] if fused_training else \
+            [make_model(i, rd, i, "train")
+             for i in range(run_cfg.ml_process)]
         self._make_oracle = make_oracle
         self._oracle_instances: Dict[str, Any] = {}
 
         # --- controller state ----------------------------------------------
-        self.store = WeightStore(run_cfg.ml_process)
+        # fused training: the store is demoted to the checkpoint wire format
+        # / legacy-backend pull path, sized by committee members (K) rather
+        # than trainer processes; the Manager broadcasts released blocks to
+        # ONE trainer channel
+        n_train_lanes = 1 if fused_training else run_cfg.ml_process
+        n_store = acq.committee_size(committee.cparams) \
+            if fused_training else run_cfg.ml_process
+        self.store = WeightStore(n_store)
         self.oracle_buffer = OracleInputBuffer()
         self.train_buffer = TrainingDataBuffer(run_cfg.retrain_size)
         self.trainer_channels = [Channel(f"manager->trainer{i}")
-                                 for i in range(run_cfg.ml_process)]
+                                 for i in range(n_train_lanes)]
 
         self.prediction_pool = PredictionPool(
             self.predictors, self.store, self.monitor,
@@ -112,6 +147,26 @@ class PAL:
             force_legacy=predict_all_override is not None,
             mesh=mesh, sharding_rules=sharding_rules)
         self.prediction_pool.engine = self.engine
+
+        # --- fused committee trainer (training/committee_trainer.py) -------
+        # trains the SAME stacked layout the engine scores: the trainer
+        # reuses the engine's resolved mesh so a production mesh trains and
+        # scores the committee on one placement
+        self.committee_trainer = None
+        if fused_training:
+            from repro.training.committee_trainer import CommitteeTrainer
+
+            self.committee_trainer = CommitteeTrainer(
+                loss_fn, committee.cparams,
+                steps=run_cfg.train_steps,
+                batch=run_cfg.train_batch,
+                lr=run_cfg.train_lr,
+                bootstrap=run_cfg.train_bootstrap,
+                replay_capacity=run_cfg.train_replay_capacity,
+                mesh=getattr(self.engine, "mesh", None),
+                sharding_rules=sharding_rules,
+                seed=run_cfg.seed,
+                monitor=self.monitor)
         self.exchange = Exchange(
             self.generators, self.prediction_pool, self.oracle_buffer,
             ExchangeConfig(
@@ -178,9 +233,19 @@ class PAL:
         self.stop_event = threading.Event()
         self.stop_token: Optional[StopToken] = None
         self._threads: List[threading.Thread] = []
+        # retrain-completion counter: incremented by EVERY trainer thread on
+        # the legacy path — the read-modify-write must be lock-guarded or
+        # concurrent completions are lost and dynamic_oracle_list re-scoring
+        # silently skips rounds
         self._retrain_completions = 0
+        self._retrain_lock = threading.Lock()
+        # manager wake: set whenever new work lands (oracle-buffer put,
+        # oracle result, retrain completion) so the manager loop blocks on
+        # an event-or-timeout wait instead of a fixed 2 ms sleep
+        self._manager_wake = threading.Event()
+        self.oracle_buffer.on_put = self._manager_wake.set
         self._sync_policies = [WeightSyncPolicy(run_cfg.weight_sync_every)
-                               for _ in range(run_cfg.ml_process)]
+                               for _ in range(n_train_lanes)]
         self.checkpointer = ALCheckpointer(rd, run_cfg.checkpoint_every)
         self.oracle_pool = ElasticPool("oracle", self._oracle_worker)
         if resume:
@@ -223,6 +288,7 @@ class PAL:
                 with self.monitor.timer("oracle.run_calc"):
                     inp, label = oracle.run_calc(np.asarray(payload))
                 ep.results.isend((tid, inp, label))
+                self._manager_wake.set()
         finally:
             oracle.stop_run()
 
@@ -236,15 +302,32 @@ class PAL:
         self.manager.unregister_oracle(rank)
 
     # ------------------------------------------------------------- trainers
+    def _recv_block(self, pending, timeout: float = 0.1):
+        """Block on a posted trainer-channel receive — the Request wraps a
+        condition-variable wait (``Channel.recv(timeout=)`` semantics on
+        the already-posted irecv that doubled as the retrain interrupt), so
+        an idle trainer thread sleeps until data actually arrives instead
+        of poll-sleeping every 5 ms.  Returns the payload or None."""
+        try:
+            return pending.wait(timeout)
+        except TimeoutError:
+            return None
+
+    def _note_retrain_completion(self):
+        with self._retrain_lock:
+            self._retrain_completions += 1
+        self.monitor.incr("train.retrains")
+        self._manager_wake.set()
+
     def _trainer_loop(self, idx: int, stop: threading.Event):
+        """Legacy path: one thread per user ``make_model(..., 'train')``."""
         trainer = self.trainers[idx]
         chan = self.trainer_channels[idx]
         pending = chan.irecv()
         while not (stop.is_set() or self.stop_event.is_set()):
-            if not pending.test():
-                time.sleep(0.005)
+            datapoints = self._recv_block(pending)
+            if datapoints is None:
                 continue
-            datapoints = pending.value
             trainer.add_trainingset(datapoints)
             # absorb any further blocks that arrived while training
             while chan.poll():
@@ -252,14 +335,71 @@ class PAL:
             pending = chan.irecv()
             with self.monitor.timer("train.retrain"):
                 stop_run = trainer.retrain(pending)
-            self._retrain_completions += 1
-            self.monitor.incr("train.retrains")
+            # publish BEFORE noting completion: the completion wakes the
+            # manager, whose dynamic_oracle_list re-score must see the
+            # freshly retrained weights, not the previous round's
             if self._sync_policies[idx].should_publish():
                 self.store.publish_packed(idx, trainer.get_weight())
+            self._note_retrain_completion()
             trainer.save_progress()
             if stop_run:
                 self._signal_stop(StopToken(f"trainer{idx}",
                                             "trainer stop criterion"))
+        # a block delivered into the parked irecv between the last wait and
+        # shutdown bypasses the channel queue (transport completes parked
+        # requests directly) — absorb it and anything still queued, or
+        # post-run consolidation silently loses up to retrain_size labels
+        if pending.test():
+            trainer.add_trainingset(pending.value)
+        while chan.poll():
+            trainer.add_trainingset(chan.recv())
+
+    def _committee_trainer_loop(self, stop: threading.Event):
+        """Fused path: ONE loop advances all K members per dispatch.  The
+        pending irecv doubles as the interrupt handle — training yields
+        the moment the Manager releases the next labeled block."""
+        trainer = self.committee_trainer
+        chan = self.trainer_channels[0]
+        pending = chan.irecv()
+        while not (stop.is_set() or self.stop_event.is_set()):
+            block = self._recv_block(pending)
+            if block is None:
+                continue
+            trainer.add_blocks(block)
+            while chan.poll():
+                trainer.add_blocks(chan.recv())
+            pending = chan.irecv()
+            with self.monitor.timer("train.retrain"):
+                trainer.train(interrupt=pending)
+            # publish BEFORE noting completion (see _trainer_loop): the
+            # woken manager's re-score must run on the refreshed weights
+            if self._sync_policies[0].should_publish():
+                self._publish_committee()
+            self._note_retrain_completion()
+        # same parked-irecv drain as the legacy loop: the last released
+        # block may have completed `pending` directly, invisible to poll()
+        if pending.test():
+            trainer.add_blocks(pending.value)
+        while chan.poll():
+            trainer.add_blocks(chan.recv())
+
+    def _publish_committee(self):
+        """Trainer -> engine weight handoff.  Fused engines take the
+        stacked pytree device-to-device (zero packed host bytes); the
+        legacy per-member backend still pulls packed 1-D arrays through
+        the WeightStore (its models own their params)."""
+        trainer = self.committee_trainer
+        if hasattr(self.engine, "refresh_from_device"):
+            self.engine.refresh_from_device(trainer.snapshot_cparams())
+            self.monitor.incr("prediction.weight_refreshes")
+        else:
+            from repro.core import committee as cmte
+
+            cparams = trainer.cparams
+            for i in range(trainer.size):
+                self.store.publish_packed(
+                    i % self.store.n_members,
+                    cmte.get_weight(cmte.member(cparams, i)))
 
     # ------------------------------------------------------------- threads
     def _exchange_loop(self, stop: threading.Event):
@@ -273,12 +413,24 @@ class PAL:
             self.manager.step(self._retrain_completions)
             if self.checkpointer.due():
                 self.checkpoint()
-            time.sleep(0.002)
+            # event-or-timeout: woken immediately by new work (oracle-buffer
+            # put / oracle result / retrain completion), with a bounded
+            # fallback so ledger timeouts and heartbeats are still serviced
+            if self._manager_wake.wait(timeout=0.05):
+                self._manager_wake.clear()
 
     # ------------------------------------------------------------------ run
     def start(self):
         self.oracle_pool.add(self.cfg.orcl_process)
-        for i in range(self.cfg.ml_process):
+        if self.committee_trainer is not None:
+            th = threading.Thread(
+                target=self._guard,
+                args=("committee_trainer", self._committee_trainer_loop,
+                      self.stop_event),
+                name="committee_trainer", daemon=True)
+            th.start()
+            self._threads.append(th)
+        for i in range(len(self.trainers)):
             th = threading.Thread(
                 target=self._guard,
                 args=(f"trainer{i}", self._trainer_loop, i, self.stop_event),
@@ -327,7 +479,7 @@ class PAL:
         state = {
             "weights": {i: w for i, w in
                         [(i, self.store.pull_packed(i)) for i in
-                         range(self.cfg.ml_process)] if w is not None},
+                         range(self.store.n_members)] if w is not None},
             "oracle_buffer": (self.oracle_buffer.snapshot()
                               + self.manager.ledger.inflight_payloads()),
             "train_buffer": self.train_buffer.snapshot(),
@@ -340,6 +492,11 @@ class PAL:
             # the oracle budget for a whole horizon
             "engine_state": self.engine.state_dict(),
         }
+        if self.committee_trainer is not None:
+            # FULL TrainState (params + Adam moments + per-member step) +
+            # RNG cursor + replay ring: a resumed run continues
+            # mid-schedule instead of resetting its optimizer
+            state["train_state"] = self.committee_trainer.state_dict()
         return self.checkpointer.save(self.exchange.iteration, state)
 
     def _restore(self):
@@ -355,6 +512,11 @@ class PAL:
             self.exchange.patience.load_state_dict(state["patience"])
         if state.get("engine_state"):
             self.engine.load_state_dict(state["engine_state"])
+        if (state.get("train_state") is not None
+                and self.committee_trainer is not None):
+            self.committee_trainer.load_state_dict(state["train_state"])
+            # prediction must resume on the restored weights too
+            self._publish_committee()
         self.exchange.iteration = int(state.get("iteration", 0))
         self.monitor.incr("runtime.restores")
 
@@ -366,6 +528,13 @@ class PAL:
         r["train_buffer"] = len(self.train_buffer)
         r["labeled_total"] = self.train_buffer.total_labeled
         r["weight_publishes"] = self.store.publishes
+        # fused-trainer path: weights reach the engine device-to-device,
+        # so store publishes stay 0 — the refresh counters tell the story
+        r["device_weight_refreshes"] = getattr(
+            self.engine, "device_refreshes", 0)
+        if self.committee_trainer is not None:
+            r["train_fused_steps"] = self.committee_trainer.steps_done
+            r["train_replay_rows"] = len(self.committee_trainer.replay)
         # realized oracle rate: queued / scored over the whole run, the
         # quantity the budget controller steers toward oracle_budget.
         # Serving traffic counts too — with serve_uq the server shares the

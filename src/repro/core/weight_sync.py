@@ -6,8 +6,13 @@ The paper packs weights as 1-D arrays over MPI; here a ``WeightStore`` holds
 the latest packed weights per committee member with a monotonically
 increasing version, and the prediction side pulls at its own cadence — the
 same *periodic, versioned, non-blocking* semantics without a rendezvous.
-On a real multi-pod deployment the publish is a ``jax.device_put`` onto the
-prediction mesh's NamedSharding (documented path, DESIGN.md §2).
+
+NOTE: on the fused-training path (``training/committee_trainer.py``) the
+store is DEMOTED to the checkpoint wire format and the legacy per-member
+backend: the committee trainer hands its stacked params to the acquisition
+engine device-to-device (``FusedEngine.refresh_from_device`` — a
+``jax.device_put`` onto the committee mesh layout, zero packed host
+bytes), so the steady-state trainer->prediction hop never packs at all.
 """
 from __future__ import annotations
 

@@ -1,9 +1,16 @@
-"""AL replay buffer for the LM path: oracle-labeled sequences accumulate and
-are sampled into fixed-shape training batches (pads/crops to seq_len).
+"""AL replay buffers.
 
-This is the datacenter-scale analog of the paper's training-data buffer —
-the PAL Manager releases retrain_size blocks into it, and the trainer draws
-uniform (or recency-weighted) minibatches.
+``ReplayTrainingBuffer`` — the committee-training subsystem's data plane
+(training/committee_trainer.py): labeled rows live in fixed-capacity DEVICE
+arrays.  The PAL Manager releases ``retrain_size`` blocks; each block is
+ONE host->device transfer (appended via a jitted donated
+``dynamic_update_slice``, wraparound ring semantics), and every train step
+gathers its per-member bootstrap minibatches on device — no per-step
+host->device traffic at all.
+
+``ALReplayBuffer`` — the LM path's host-side sequence buffer: oracle-labeled
+sequences accumulate and are sampled into fixed-shape training batches
+(pads/crops to seq_len), uniform or recency-weighted.
 """
 from __future__ import annotations
 
@@ -11,6 +18,123 @@ import threading
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
+
+
+class ReplayTrainingBuffer:
+    """Fixed-capacity device-resident (x, y) training store.
+
+    Rows are float32, flattened 1-D per sample; feature widths are fixed by
+    the first appended block.  Appends write a contiguous block into a ring
+    (oldest rows overwritten once full) through a jitted
+    ``dynamic_update_slice`` whose destination buffer is DONATED where the
+    backend supports aliasing — steady-state appends allocate nothing and
+    the training arrays never round-trip to host.  ``arrays()`` hands the
+    raw device buffers plus the valid-row count to the fused train step,
+    which samples minibatches by on-device gather.
+
+    One writer (the committee-trainer loop) is the expected pattern.  The
+    internal lock serializes appends against ``arrays()``/snapshots, but
+    because appends DONATE the ring buffers, an append concurrent with a
+    running train round must go through ``CommitteeTrainer.add_blocks``,
+    whose state lock keeps the donation from invalidating the buffer
+    handles a step in flight is about to dispatch with.
+    """
+
+    def __init__(self, capacity: int):
+        assert capacity > 0
+        self.capacity = int(capacity)
+        self._x = None                  # (capacity, dx) jnp.float32
+        self._y = None                  # (capacity, dy) jnp.float32
+        self._cursor = 0
+        self._size = 0
+        self._lock = threading.Lock()
+        self.total_added = 0
+        self.append_blocks = 0
+        self.bytes_to_device = 0
+        self._write = None
+
+    def _init_write(self):
+        import jax
+
+        donate = jax.default_backend() != "cpu"
+        kw = {"donate_argnums": (0,)} if donate else {}
+
+        def write(buf, block, start):
+            return jax.lax.dynamic_update_slice_in_dim(buf, block, start, 0)
+
+        self._write = jax.jit(write, **kw)
+
+    def append(self, xs, ys) -> int:
+        """Append matching (n, dx)/(n, dy) host blocks; returns n kept."""
+        import jax.numpy as jnp
+
+        xs = np.asarray(xs, np.float32).reshape(len(xs), -1)
+        ys = np.asarray(ys, np.float32).reshape(len(ys), -1)
+        if len(xs) != len(ys):
+            raise ValueError(f"x/y row mismatch: {len(xs)} vs {len(ys)}")
+        if len(xs) == 0:
+            return 0
+        if len(xs) > self.capacity:     # only the newest rows can survive
+            xs, ys = xs[-self.capacity:], ys[-self.capacity:]
+        with self._lock:
+            if self._x is None:
+                self._init_write()
+                self._x = jnp.zeros((self.capacity, xs.shape[1]), jnp.float32)
+                self._y = jnp.zeros((self.capacity, ys.shape[1]), jnp.float32)
+            if (xs.shape[1] != self._x.shape[1]
+                    or ys.shape[1] != self._y.shape[1]):
+                raise ValueError(
+                    f"row width changed: got ({xs.shape[1]}, {ys.shape[1]}),"
+                    f" buffer holds ({self._x.shape[1]}, {self._y.shape[1]})")
+            n = len(xs)
+            head = min(n, self.capacity - self._cursor)
+            self._x = self._write(self._x, jnp.asarray(xs[:head]),
+                                  self._cursor)
+            self._y = self._write(self._y, jnp.asarray(ys[:head]),
+                                  self._cursor)
+            if head < n:                # ring wraparound: rest lands at 0
+                self._x = self._write(self._x, jnp.asarray(xs[head:]), 0)
+                self._y = self._write(self._y, jnp.asarray(ys[head:]), 0)
+            self._cursor = (self._cursor + n) % self.capacity
+            self._size = min(self.capacity, self._size + n)
+            self.total_added += n
+            self.append_blocks += 1
+            self.bytes_to_device += xs.nbytes + ys.nbytes
+            return n
+
+    def arrays(self):
+        """(x_buf, y_buf, valid_rows) — raw device buffers for the fused
+        train step; rows past ``valid_rows`` are zero padding the sampler
+        never indexes."""
+        with self._lock:
+            return self._x, self._y, self._size
+
+    def __len__(self):
+        with self._lock:
+            return self._size
+
+    def state_dict(self) -> Dict[str, np.ndarray]:
+        with self._lock:
+            if self._x is None:
+                return {"size": 0}
+            return {"x": np.asarray(self._x), "y": np.asarray(self._y),
+                    "cursor": self._cursor, "size": self._size,
+                    "total_added": self.total_added}
+
+    def load_state_dict(self, state):
+        import jax.numpy as jnp
+
+        with self._lock:
+            if not state or int(state.get("size", 0)) == 0:
+                return
+            if self._write is None:
+                self._init_write()
+            self._x = jnp.asarray(np.asarray(state["x"], np.float32))
+            self._y = jnp.asarray(np.asarray(state["y"], np.float32))
+            self.capacity = int(self._x.shape[0])   # snapshot wins on resume
+            self._cursor = int(state["cursor"])
+            self._size = int(state["size"])
+            self.total_added = int(state.get("total_added", self._size))
 
 
 class ALReplayBuffer:

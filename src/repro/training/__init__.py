@@ -1,3 +1,6 @@
 from repro.training.train_step import (  # noqa: F401
     TrainState, make_train_state, make_train_step, make_eval_step,
 )
+from repro.training.committee_trainer import (  # noqa: F401
+    CommitteeTrainer, default_train_config,
+)

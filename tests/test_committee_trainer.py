@@ -1,0 +1,381 @@
+"""Fused committee-training subsystem tests (training/committee_trainer.py):
+
+* fused-vs-legacy parity — same data order => the one-dispatch vmapped
+  path trains each member numerically close to a sequential per-member
+  ``make_train_step`` loop;
+* bootstrap decorrelation — members draw DISTINCT minibatches when
+  ``bootstrap=True`` and identical ones when ``False``;
+* host-mesh (1x1) sharded train step bit-identical to unsharded;
+* acceptance: the trainer->engine device weight-refresh path moves ZERO
+  packed host bytes (and the WeightStore path is measurably nonzero);
+* device replay ring: block appends, wraparound, width validation;
+* PAL integration: the runtime collapses trainer threads into the one
+  committee-trainer loop, and ``PAL.checkpoint`` carries the FULL
+  TrainState (optimizer moments + step) so a resumed run continues
+  mid-schedule instead of resetting Adam.
+"""
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.pal_potential import PALRunConfig
+from repro.core import CommitteeSpec, PAL, UserGene, UserOracle
+from repro.core import committee as cmte
+from repro.core.acquisition import FusedEngine
+from repro.core.weight_sync import WeightStore
+from repro.data.replay import ReplayTrainingBuffer
+from repro.training.committee_trainer import (
+    CommitteeTrainer, default_train_config,
+)
+from repro.training.train_step import make_train_state, make_train_step
+
+K, IN_DIM, HIDDEN, OUT_DIM = 4, 6, 16, 3
+
+
+def _apply(p, x):
+    return jnp.tanh(x @ p["w1"] + p["b1"]) @ p["w2"] + p["b2"]
+
+
+def _loss(p, batch):
+    pred = _apply(p, batch["x"])
+    return jnp.mean((pred - batch["y"]) ** 2), {}
+
+
+def _members(seed=0, k=K):
+    rng = np.random.RandomState(seed)
+    return [{
+        "w1": jnp.asarray(rng.randn(IN_DIM, HIDDEN).astype(np.float32) * .3),
+        "b1": jnp.asarray(rng.randn(HIDDEN).astype(np.float32) * .1),
+        "w2": jnp.asarray(rng.randn(HIDDEN, OUT_DIM).astype(np.float32) * .3),
+        "b2": jnp.asarray(rng.randn(OUT_DIM).astype(np.float32) * .1),
+    } for _ in range(k)]
+
+
+def _data(n=40, seed=1):
+    rng = np.random.RandomState(seed)
+    return (rng.randn(n, IN_DIM).astype(np.float32),
+            rng.randn(n, OUT_DIM).astype(np.float32))
+
+
+def _trainer(cparams=None, **kw):
+    if cparams is None:
+        cparams = cmte.stack_members(_members())
+    kw.setdefault("steps", 10)
+    kw.setdefault("batch", 8)
+    kw.setdefault("lr", 1e-2)
+    kw.setdefault("replay_capacity", 64)
+    return CommitteeTrainer(_loss, cparams, **kw)
+
+
+# ---------------------------------------------------------------------------
+# parity / decorrelation
+# ---------------------------------------------------------------------------
+
+
+def test_fused_matches_sequential_per_member_training():
+    """Same data order (the trainer's own index draws replayed) => the
+    one-dispatch vmapped step trains each member numerically close to the
+    legacy sequential per-member loop."""
+    members = _members()
+    xs, ys = _data()
+    steps = 12
+    tr = _trainer(cmte.stack_members(members), bootstrap=True, seed=5)
+    tr.add_blocks(list(zip(xs, ys)))
+    idx = [tr.minibatch_indices(t, len(xs)) for t in range(steps)]
+    tr.train(steps=steps)
+
+    tcfg = default_train_config(1e-2)
+    step = jax.jit(make_train_step(_loss, tcfg))
+    for i in range(K):
+        st = make_train_state(members[i], tcfg)
+        for t in range(steps):
+            st, _ = step(st, {"x": jnp.asarray(xs[idx[t][i]]),
+                              "y": jnp.asarray(ys[idx[t][i]])})
+        for key in ("w1", "b1", "w2", "b2"):
+            a = np.asarray(st.params[key])
+            b = np.asarray(cmte.member(tr.cparams, i)[key])
+            np.testing.assert_allclose(a, b, atol=1e-5, rtol=1e-5)
+    # members actually moved
+    assert not np.allclose(np.asarray(cmte.member(tr.cparams, 0)["w1"]),
+                           np.asarray(members[0]["w1"]))
+
+
+def test_bootstrap_decorrelates_member_minibatches():
+    tr = _trainer(bootstrap=True, seed=2)
+    idx = tr.minibatch_indices(0, 40)
+    assert idx.shape == (K, tr.batch)
+    rows = {tuple(r) for r in idx}
+    assert len(rows) == K, "bootstrap members drew identical minibatches"
+
+    tr_off = _trainer(bootstrap=False, seed=2)
+    idx_off = tr_off.minibatch_indices(0, 40)
+    assert all(np.array_equal(idx_off[0], idx_off[i]) for i in range(K))
+
+
+def test_bootstrap_members_diverge_same_members_converge_together():
+    """Identical member inits: bootstrap draws must decorrelate the
+    trained members; bootstrap=False keeps them bit-identical."""
+    same = cmte.stack_members([_members(seed=0)[0]] * K)
+    xs, ys = _data()
+    on = _trainer(same, bootstrap=True, seed=3)
+    off = _trainer(same, bootstrap=False, seed=3)
+    for t in (on, off):
+        t.add_blocks(list(zip(xs, ys)))
+        t.train(steps=8)
+    w_on = np.asarray(on.cparams["w1"])
+    w_off = np.asarray(off.cparams["w1"])
+    assert not np.array_equal(w_on[0], w_on[1])          # decorrelated
+    assert np.array_equal(w_off[0], w_off[1])            # same data order
+
+
+# ---------------------------------------------------------------------------
+# sharding
+# ---------------------------------------------------------------------------
+
+
+def test_host_mesh_train_step_bit_identical_to_unsharded():
+    from repro.launch.mesh import make_host_mesh
+
+    cparams = cmte.stack_members(_members())
+    xs, ys = _data()
+    plain = _trainer(cparams, seed=7)
+    sharded = _trainer(cparams, seed=7, mesh=make_host_mesh())
+    for t in (plain, sharded):
+        t.add_blocks(list(zip(xs, ys)))
+        t.train(steps=9)
+    for key in ("w1", "b1", "w2", "b2"):
+        assert np.array_equal(np.asarray(plain.cparams[key]),
+                              np.asarray(sharded.cparams[key])), key
+    # optimizer moments too: the whole TrainState shares the layout
+    assert np.array_equal(np.asarray(plain.cstate.opt.mu["w1"]),
+                          np.asarray(sharded.cstate.opt.mu["w1"]))
+
+
+# ---------------------------------------------------------------------------
+# weight handoff (acceptance: zero packed host bytes on the device path)
+# ---------------------------------------------------------------------------
+
+
+def test_device_weight_refresh_moves_zero_packed_host_bytes():
+    cparams = cmte.stack_members(_members())
+    xs, ys = _data()
+    tr = _trainer(cparams)
+    tr.add_blocks(list(zip(xs, ys)))
+    tr.train(steps=5)
+
+    engine = FusedEngine(_apply, cparams, 0.5, impl="xla")
+    assert engine.refresh_from_device(tr.snapshot_cparams()) == 1
+    assert engine.refresh_host_bytes == 0
+    assert engine.device_refreshes == 1
+    # the engine actually scores with the refreshed weights
+    uq = engine.score([xs[i] for i in range(5)])
+    np.testing.assert_allclose(
+        uq.mean,
+        np.mean([np.asarray(_apply(cmte.member(tr.cparams, i),
+                                   jnp.asarray(xs[:5])))
+                 for i in range(K)], axis=0),
+        atol=1e-5)
+
+    # the WeightStore path, by contrast, is a packed host round trip
+    store = WeightStore(K)
+    for i in range(K):
+        store.publish_packed(i, cmte.get_weight(cmte.member(tr.cparams, i)))
+    engine2 = FusedEngine(_apply, cparams, 0.5, impl="xla")
+    assert engine2.refresh_from(store) == 1
+    assert engine2.refresh_host_bytes > 0
+
+
+def test_device_refresh_rejects_committee_size_change():
+    engine = FusedEngine(_apply, cmte.stack_members(_members()), 0.5,
+                         impl="xla")
+    with pytest.raises(ValueError, match="committee size"):
+        engine.refresh_from_device(cmte.stack_members(_members(k=K + 1)))
+
+
+# ---------------------------------------------------------------------------
+# replay ring
+# ---------------------------------------------------------------------------
+
+
+def test_replay_buffer_append_wraparound_and_validation():
+    buf = ReplayTrainingBuffer(10)
+    xs, ys = _data(8)
+    buf.append(xs, ys)
+    xb, yb, size = buf.arrays()
+    assert size == 8 and xb.shape == (10, IN_DIM)
+    np.testing.assert_array_equal(np.asarray(xb[:8]), xs)
+
+    xs2, ys2 = _data(5, seed=9)
+    buf.append(xs2, ys2)                     # wraps: rows 8,9 then 0,1,2
+    xb, yb, size = buf.arrays()
+    assert size == 10 and len(buf) == 10
+    np.testing.assert_array_equal(np.asarray(xb[8:10]), xs2[:2])
+    np.testing.assert_array_equal(np.asarray(xb[0:3]), xs2[2:])
+    assert buf.total_added == 13
+
+    # oversized block: only the newest `capacity` rows survive
+    xs3, ys3 = _data(25, seed=11)
+    buf.append(xs3, ys3)
+    xb, _, size = buf.arrays()
+    assert size == 10
+    assert np.asarray(xb).astype(np.float32).shape == (10, IN_DIM)
+
+    with pytest.raises(ValueError, match="row width"):
+        buf.append(np.zeros((2, IN_DIM + 1), np.float32),
+                   np.zeros((2, OUT_DIM), np.float32))
+    with pytest.raises(ValueError, match="row mismatch"):
+        buf.append(xs[:3], ys[:2])
+
+
+def test_replay_buffer_state_roundtrip():
+    buf = ReplayTrainingBuffer(6)
+    xs, ys = _data(4)
+    buf.append(xs, ys)
+    sd = buf.state_dict()
+    buf2 = ReplayTrainingBuffer(6)
+    buf2.load_state_dict(sd)
+    xb, yb, size = buf2.arrays()
+    assert size == 4 and buf2.total_added == 4
+    np.testing.assert_array_equal(np.asarray(xb[:4]), xs)
+    # appends continue at the restored cursor
+    buf2.append(xs[:3], ys[:3])
+    _, _, size = buf2.arrays()
+    assert size == 6 and len(buf2) == 6
+
+
+# ---------------------------------------------------------------------------
+# trainer checkpointing
+# ---------------------------------------------------------------------------
+
+
+def test_trainer_state_dict_resumes_mid_schedule():
+    cparams = cmte.stack_members(_members())
+    xs, ys = _data()
+    tr = _trainer(cparams, seed=4)
+    tr.add_blocks(list(zip(xs, ys)))
+    tr.train(steps=7)
+    sd = tr.state_dict()
+    # moments are live (nonzero) and the per-member step advanced
+    assert np.abs(np.asarray(sd["cstate"].opt.mu["w1"])).sum() > 0
+    assert int(np.asarray(sd["cstate"].step)[0]) == 7
+
+    tr2 = _trainer(cparams, seed=4)
+    tr2.load_state_dict(sd)
+    # continuing both trainers is bit-identical (same RNG cursor, same
+    # optimizer state) — the restore did NOT reset Adam
+    tr.train(steps=3)
+    tr2.train(steps=3)
+    assert np.array_equal(np.asarray(tr.cparams["w1"]),
+                          np.asarray(tr2.cparams["w1"]))
+    # a fresh trainer (reset moments/step) diverges from the resumed one
+    tr3 = _trainer(cparams, seed=4)
+    tr3.add_blocks(list(zip(xs, ys)))
+    tr3.train(steps=3)
+    assert not np.array_equal(np.asarray(tr2.cparams["w1"]),
+                              np.asarray(tr3.cparams["w1"]))
+
+
+def test_trainer_skips_mismatched_snapshot():
+    tr = _trainer()
+    xs, ys = _data()
+    tr.add_blocks(list(zip(xs, ys)))
+    tr.train(steps=2)
+    other = CommitteeTrainer(_loss, cmte.stack_members(_members(k=K + 2)),
+                             steps=2, batch=8, replay_capacity=16)
+    w_before = np.asarray(other.cparams["w1"])
+    other.load_state_dict(tr.state_dict())          # K mismatch: skipped
+    assert np.array_equal(np.asarray(other.cparams["w1"]), w_before)
+
+
+# ---------------------------------------------------------------------------
+# PAL runtime integration
+# ---------------------------------------------------------------------------
+
+
+class _Gene(UserGene):
+    def __init__(self, rank, rd, limit=300):
+        super().__init__(rank, rd)
+        self.rng = np.random.RandomState(rank)
+        self.n = 0
+        self.limit = limit
+
+    def generate_new_data(self, data_to_gene):
+        self.n += 1
+        if self.n > self.limit:
+            return True, np.zeros(IN_DIM, np.float32)
+        time.sleep(0.001)
+        return False, self.rng.randn(IN_DIM).astype(np.float32)
+
+
+class _Oracle(UserOracle):
+    def run_calc(self, inp):
+        y = np.tile(np.sin(2 * inp[:1]), OUT_DIM).astype(np.float32)
+        return inp, y
+
+
+def _pal(tmp, **kw):
+    cfg = PALRunConfig(
+        result_dir=tmp, gene_process=4, orcl_process=2, pred_process=1,
+        ml_process=3, retrain_size=6, std_threshold=0.05, patience=3,
+        train_steps=20, train_batch=8, train_lr=1e-2,
+        train_replay_capacity=128, **kw)
+    return PAL(cfg, make_generator=_Gene, make_oracle=_Oracle,
+               committee=CommitteeSpec(_apply, cmte.stack_members(_members())),
+               loss_fn=_loss)
+
+
+def test_pal_fused_training_loop_end_to_end():
+    pal = _pal(tempfile.mkdtemp())
+    # trainer threads collapsed: no per-member trainer objects, one lane
+    assert pal.trainers == [] and len(pal.trainer_channels) == 1
+    tok = pal.run(timeout=45)
+    rep = pal.report()
+    assert tok is not None
+    assert rep["labeled_total"] > 0
+    assert rep["counters"]["train.retrains"] > 0
+    assert rep["train_fused_steps"] > 0
+    assert rep["device_weight_refreshes"] > 0
+    assert rep["weight_publishes"] == 0          # WeightStore demoted
+    assert pal.engine.refresh_host_bytes == 0    # zero-copy handoff
+    assert rep["counters"].get("runtime.thread_crashes", 0) == 0
+
+
+def test_pal_requires_committee_for_loss_fn():
+    with pytest.raises(ValueError, match="CommitteeSpec"):
+        PAL(PALRunConfig(result_dir=tempfile.mkdtemp()),
+            make_generator=_Gene, make_oracle=_Oracle, loss_fn=_loss)
+
+
+def test_pal_checkpoint_restores_full_train_state():
+    """PAL.checkpoint carries the full TrainState: a resumed run continues
+    mid-schedule (same Adam moments, same RNG cursor) instead of
+    restarting the optimizer."""
+    tmp = tempfile.mkdtemp()
+    pal = _pal(tmp)
+    xs, ys = _data(20)
+    pal.committee_trainer.add_blocks(list(zip(xs, ys)))
+    pal.committee_trainer.train(steps=9)
+    pal.checkpoint()
+
+    pal2 = _pal(tmp)
+    # second PAL built fresh THEN restored: proves restore did the work
+    assert pal2.committee_trainer.steps_done == 0
+    pal2._restore()
+    t1, t2 = pal.committee_trainer, pal2.committee_trainer
+    assert t2.steps_done == t1.steps_done == 9
+    assert np.array_equal(np.asarray(t1.cstate.opt.mu["w1"]),
+                          np.asarray(t2.cstate.opt.mu["w1"]))
+    assert np.array_equal(np.asarray(t1.cstate.step),
+                          np.asarray(t2.cstate.step))
+    # restored weights were pushed to the engine device-to-device
+    assert pal2.engine.device_refreshes >= 1
+    assert pal2.engine.refresh_host_bytes == 0
+    # continuing is bit-identical to continuing the original
+    t1.train(steps=2)
+    t2.train(steps=2)
+    assert np.array_equal(np.asarray(t1.cparams["w1"]),
+                          np.asarray(t2.cparams["w1"]))

@@ -62,12 +62,20 @@ HEADLINE = {
         ("queued_vs_percall_speedup", "ratio_min", 0.40),
         ("queue_reuses_engine_buckets", "flag", None),
     ),
+    "BENCH_committee_train.json": (
+        # dispatch-count dominated, but still wall-clock -> wide band;
+        # the >= 3x acceptance floor below is absolute
+        ("speedup_fused_retrain", "ratio_min", 0.40),
+        # trainer -> engine weight handoff must stay device-to-device
+        ("refresh_device_zero_host_bytes", "flag", None),
+    ),
 }
 
 # absolute floors that hold regardless of baseline drift
 FLOORS = {
     ("BENCH_serving_queue.json", "queued_vs_percall_speedup"): 3.0,
     ("BENCH_committee_uq.json", "speedup_wallclock"): 2.0,
+    ("BENCH_committee_train.json", "speedup_fused_retrain"): 3.0,
 }
 
 
