@@ -1,0 +1,202 @@
+"""Benchmark: labeled-throughput retention + recovery time under the
+standard fault plan (core/chaos + core/supervisor, ISSUE 6 acceptance).
+
+Two fixed-wall-clock PAL campaigns on the legacy toy kernels (no jax on
+the hot path, so the numbers measure the RUNTIME, not compile noise):
+
+* baseline — fault-free;
+* chaos    — the standard plan: 3 transient oracle-task failures, one
+  oracle-thread crash, one trainer crash mid-schedule (the legacy slice
+  of ``FaultPlan.acceptance``; the nan_member event needs the fused
+  committee trainer and is exercised in tests/test_chaos.py instead).
+
+A sampler thread records ``(t, labeled_total, faults_fired)`` at ~5 ms so
+recovery is measurable: for each loop-crash fault, ``recovery`` is the
+time from the fault firing to the next labeled-count increase (how long
+the supervised restart takes to resume useful work).
+
+Metrics, written to ``BENCH_fault_recovery.json``:
+
+* ``throughput_retention`` — chaos labels/s over baseline labels/s in the
+  same wall-clock window (acceptance floor: >= 0.70);
+* ``completed_without_stop`` — the chaos run reached the end of its
+  window with ZERO supervisor escalations (no fault became a StopToken);
+* ``recovery_time_s`` — worst per-crash recovery;
+* restart/retry counters from the supervised runtime.
+
+Usage:  PYTHONPATH=src python benchmarks/fault_recovery.py [--quick] [--out F]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import tempfile
+import threading
+import time
+
+import numpy as np
+
+from repro.configs.pal_potential import PALRunConfig
+from repro.core import PAL, UserGene, UserModel, UserOracle
+from repro.core.chaos import ChaosInjector, FaultEvent, FaultPlan
+
+STANDARD_PLAN = FaultPlan(events=(
+    FaultEvent("oracle.task", 2, "raise", rank="oracle0"),
+    FaultEvent("oracle.task", 4, "raise", rank="oracle1"),
+    FaultEvent("oracle.task", 6, "raise", rank="oracle0"),
+    FaultEvent("oracle.loop", 9, "crash", rank="oracle1"),
+    FaultEvent("trainer.loop", 2, "crash"),
+))
+
+
+class _Gene(UserGene):
+    def __init__(self, rank, rd):
+        super().__init__(rank, rd)
+        self.rng = np.random.RandomState(rank)
+
+    def generate_new_data(self, data_to_gene):
+        time.sleep(0.001)
+        return False, self.rng.randn(4).astype(np.float32)
+
+
+class _Model(UserModel):
+    def __init__(self, rank, rd, dev, mode):
+        super().__init__(rank, rd, dev, mode)
+        self.w = np.random.RandomState(rank).randn(4, 4) * 0.5
+
+    def predict(self, list_data):
+        return [np.asarray(x) @ self.w for x in list_data]
+
+    def update(self, warr):
+        self.w = warr.reshape(4, 4)
+
+    def get_weight(self):
+        return self.w.reshape(-1).astype(np.float32)
+
+    def get_weight_size(self):
+        return 16
+
+    def add_trainingset(self, dps):
+        pass
+
+    def retrain(self, req):
+        for _ in range(10):
+            if req.test():
+                break
+            time.sleep(0.002)
+        self.w = self.w * 0.99
+        return False
+
+
+class _Oracle(UserOracle):
+    def run_calc(self, inp):
+        time.sleep(0.002)
+        return inp, np.sin(2 * inp).astype(np.float32)
+
+
+def _campaign(window_s: float, plan=None):
+    """One fixed-window PAL run; returns (labeled_total, report, samples)
+    where samples = [(t_rel, labeled_total, faults_fired)] at ~5 ms."""
+    cfg = PALRunConfig(
+        result_dir=tempfile.mkdtemp(), gene_process=4, orcl_process=3,
+        pred_process=2, ml_process=2, retrain_size=8, std_threshold=0.05,
+        patience=3, loop_restart_backoff_s=0.05, oracle_task_backoff_s=0.01)
+    chaos = ChaosInjector(plan) if plan is not None else None
+    pal = PAL(cfg, make_generator=_Gene, make_model=_Model,
+              make_oracle=_Oracle, chaos=chaos)
+
+    samples = []
+    done = threading.Event()
+
+    def sampler():
+        t0 = time.perf_counter()
+        while not done.is_set():
+            samples.append((time.perf_counter() - t0,
+                            pal.train_buffer.total_labeled,
+                            len(chaos.fired) if chaos is not None else 0))
+            done.wait(0.005)
+
+    th = threading.Thread(target=sampler, daemon=True)
+    th.start()
+    tok = pal.run(timeout=window_s)
+    done.set()
+    th.join(timeout=5)
+    rep = pal.report()
+    rep["stop_token"] = repr(tok)
+    rep["stop_origin"] = tok.origin if tok is not None else None
+    return pal.train_buffer.total_labeled, rep, samples
+
+
+def _recovery_times(samples):
+    """For each fault firing observed by the sampler, the time until the
+    labeled count next increases (supervised restart back to useful
+    work).  Transient task faults barely dent throughput; the loop-crash
+    recoveries dominate the max."""
+    out = []
+    for i in range(1, len(samples)):
+        t_f, labeled_f, fired_f = samples[i]
+        if fired_f <= samples[i - 1][2]:
+            continue
+        t_rec = None
+        for t, labeled, _ in samples[i:]:
+            if labeled > labeled_f:
+                t_rec = t - t_f
+                break
+        out.append(t_rec if t_rec is not None else float("inf"))
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", "--quick", dest="smoke", action="store_true")
+    ap.add_argument("--window", type=float, default=None,
+                    help="seconds per campaign (default 4 quick / 10 full)")
+    ap.add_argument("--out", default="BENCH_fault_recovery.json")
+    args = ap.parse_args(argv)
+    window = args.window or (4.0 if args.smoke else 10.0)
+
+    base_labeled, base_rep, _ = _campaign(window)
+    chaos_labeled, chaos_rep, samples = _campaign(window, STANDARD_PLAN)
+
+    base_rate = base_labeled / window
+    chaos_rate = chaos_labeled / window
+    retention = chaos_rate / base_rate if base_rate else 0.0
+    recoveries = _recovery_times(samples)
+    recovery = max(recoveries) if recoveries else 0.0
+    c = chaos_rep["counters"]
+    completed = (c.get("supervisor.escalations", 0) == 0
+                 and chaos_rep["stop_origin"] == "runtime")  # window timeout,
+    #                                            not a fault-raised StopToken
+
+    report = {
+        "config": {"window_s": window, "orcl_process": 3, "gene_process": 4,
+                   "ml_process": 2, "plan_events": len(STANDARD_PLAN.events)},
+        "baseline": {"labeled": base_labeled, "labels_per_s": base_rate},
+        "chaos": {"labeled": chaos_labeled, "labels_per_s": chaos_rate,
+                  "faults_injected": len(samples) and samples[-1][2],
+                  "fired": chaos_rep.get("chaos_fired", []),
+                  "thread_restarts": chaos_rep["thread_restarts"],
+                  "task_retries": c.get("oracle.task_retries", 0),
+                  "stop": chaos_rep["stop_token"]},
+        "throughput_retention": retention,
+        "completed_without_stop": bool(completed),
+        "recovery_time_s": recovery,
+        "recovery_times_s": recoveries,
+    }
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2)
+
+    print(f"baseline : {base_labeled:5d} labels in {window:.0f}s "
+          f"({base_rate:.0f}/s)")
+    print(f"chaos    : {chaos_labeled:5d} labels in {window:.0f}s "
+          f"({chaos_rate:.0f}/s)  faults={report['chaos']['faults_injected']} "
+          f"restarts={chaos_rep['thread_restarts']}")
+    print(f"retention {retention:.2f}  (acceptance >= 0.70)   "
+          f"recovery {recovery * 1e3:.0f} ms   "
+          f"completed_without_stop={completed}")
+    print(f"wrote {args.out}")
+    return report
+
+
+if __name__ == "__main__":
+    main()

@@ -10,6 +10,8 @@
                  per-call CommitteeServer.predict at request size 1
   train        — fused one-dispatch K-member retraining vs sequential
                  per-member training + weight-refresh host bytes
+  fault        — labeled-throughput retention + recovery time under the
+                 standard chaos FaultPlan (supervised runtime)
   kernels      — Pallas-path microbenchmarks (XLA schedule, host timing)
 
 ``python -m benchmarks.run`` runs everything; ``--only <name>`` filters.
@@ -70,6 +72,12 @@ def bench_train(smoke: bool):
     committee_train.main(["--smoke"] if smoke else [])
 
 
+def bench_fault(smoke: bool):
+    from benchmarks import fault_recovery
+    _section("Fault recovery: throughput retention under the standard plan")
+    fault_recovery.main(["--smoke"] if smoke else [])
+
+
 def bench_kernels():
     _section("Kernel microbenchmarks (XLA schedule on host)")
     import jax
@@ -118,7 +126,8 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     choices=["speedup", "overhead", "scaling", "kernels",
-                             "committee_uq", "budget", "serving", "train"])
+                             "committee_uq", "budget", "serving", "train",
+                             "fault"])
     ap.add_argument("--simulate", action="store_true",
                     help="run the measured PAL-runtime speedup simulation")
     ap.add_argument("--smoke", action="store_true",
@@ -140,6 +149,8 @@ def main():
         bench_serving(args.smoke)
     if args.only in (None, "train"):
         bench_train(args.smoke)
+    if args.only in (None, "fault"):
+        bench_fault(args.smoke)
     if args.only in (None, "kernels"):
         bench_kernels()
     print(f"\n# total benchmark wall time: {time.time() - t0:.1f}s")

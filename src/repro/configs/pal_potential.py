@@ -45,7 +45,35 @@ class PALRunConfig:
     oracle_timeout: float = 30.0     # fault tolerance: requeue after timeout
     max_oracle_retries: int = 2
     checkpoint_every: float = 0.0    # seconds; 0 disables
+    checkpoint_every_iters: int = 0  # autosave every N exchange iterations
+                                     # (progress-based twin of
+                                     # checkpoint_every; 0 disables)
     seed: int = 0
+    # --- supervised fault tolerance (core/supervisor.py) ------------------
+    supervise: bool = True           # False: first loop crash escalates to
+                                     # a StopToken (the seed's fail-stop),
+                                     # via FailurePolicy.max_crashes=1
+    oracle_task_retries: int = 2     # in-place retries per oracle task
+                                     # before the worker reports an
+                                     # OracleTaskFailure (task != worker)
+    oracle_task_backoff_s: float = 0.05  # first retry delay; doubles per
+                                     # attempt, jittered, capped at 2 s
+    loop_max_crashes: int = 3        # crashes of one loop within the window
+                                     # before the supervisor stops
+                                     # restarting and escalates
+    loop_crash_window_s: float = 30.0  # sliding crash-count window
+    loop_restart_backoff_s: float = 0.1  # first restart delay (same growth)
+    # --- degradation-aware serving (serving/queue.py) ---------------------
+    serve_shed_pending: int = 0      # >0: submit() raises QueueOverloaded
+                                     # once this many rows are pending
+                                     # (bounded-queue load shedding);
+                                     # 0 keeps pure blocking backpressure
+    serve_breaker_failures: int = 0  # >0: circuit breaker opens after this
+                                     # many CONSECUTIVE dispatch failures
+                                     # (CircuitOpen until the reset probe);
+                                     # 0 disables the breaker
+    serve_breaker_reset_s: float = 5.0  # open->half-open cooldown before
+                                     # one probe batch is admitted
     # --- acquisition engine (core/acquisition.make_engine) ---------------
     uq_impl: str = "auto"            # 'auto' | 'xla' | 'pallas' |
                                      # 'pallas_interpret' | 'legacy':

@@ -28,6 +28,12 @@ Public surface:
                   path, where weights hand off device-to-device
   controller    — Exchange + Manager sub-controllers; one engine call per
                   exchange iteration, dynamic_oracle_list on the same engine
+  supervisor    — per-loop-class FailurePolicy: task retries with backoff +
+                  jitter, crashed-loop restart in place, escalation to
+                  StopToken only past the crash budget
+  chaos         — deterministic seeded fault injection (FaultPlan /
+                  ChaosInjector): scheduled raises, crashes, delays, NaN
+                  labels, poisoned committee members
   runtime       — PAL: threads, fault tolerance, elastic pools, checkpoints;
                   pass loss_fn= with a CommitteeSpec and the per-member
                   trainer threads collapse into the fused CommitteeTrainer
@@ -43,7 +49,11 @@ from repro.core.budget import (  # noqa: F401
     BudgetRule, OracleBudgetController, RollingReweightRule,
     rules_from_config,
 )
+from repro.core.chaos import (  # noqa: F401
+    ChaosCrash, ChaosFault, ChaosInjector, FaultEvent, FaultPlan,
+)
 from repro.core.runtime import PAL  # noqa: F401
+from repro.core.supervisor import FailurePolicy, Supervisor  # noqa: F401
 from repro.core.speedup import WorkloadParams  # noqa: F401
 # NOTE: the speedup() function is NOT re-exported here -- it would shadow the
 # `repro.core.speedup` submodule attribute.  Use repro.core.speedup.speedup.

@@ -83,12 +83,20 @@ class UQResult:
                       pass so the Manager never recomputes statistics from a
                       ``(K, n, d)`` host tensor.
     ``mask``          final selection decision after the rule pipeline.
+    ``finite_members`` per-row count of committee members whose outputs
+                      were finite (int32).  Members with any non-finite
+                      component are quarantined out of the statistics
+                      inside the same fused pass (degraded-K mean/std),
+                      so ``finite_members < K`` is the degradation signal
+                      for monitoring/serving health.  None on paths that
+                      predate quarantine (direct constructors).
     """
 
     mean: np.ndarray            # (n, d)
     scalar_std: np.ndarray      # (n,)
     component_std: np.ndarray   # (n,)
     mask: np.ndarray            # (n,) bool
+    finite_members: Optional[np.ndarray] = None   # (n,) int32
 
 
 @dataclasses.dataclass
@@ -109,6 +117,7 @@ class UQStats:
     valid: Any                  # (nb,) bool
     n_valid: Any                # scalar int
     stream: Any = STREAM_EXCHANGE  # scalar int: STREAM_EXCHANGE | STREAM_SERVE
+    finite_members: Any = None  # (nb,) int32 finite-member count (quarantine)
 
 
 # ---------------------------------------------------------------------------
@@ -407,6 +416,11 @@ class FusedEngine(UQEngine):
         # memory; the device path (refresh_from_device) must stay at 0
         self.refresh_host_bytes = 0
         self.device_refreshes = 0
+        # quarantine observability (PAL.report): finite-member count of the
+        # most recent round's worst row, and how many rounds saw any member
+        # quarantined at all
+        self.last_finite_min: Optional[int] = None
+        self.quarantine_rounds = 0
 
     @property
     def size(self) -> int:
@@ -454,7 +468,7 @@ class FusedEngine(UQEngine):
         state_sh = jax.tree.map(lambda _: rep, tuple(self.rule_state))
         cp_sh = self._cparams_shardings(self.cparams)
         in_sh = (cp_sh, x_sh, rep, rep, state_sh)
-        out_sh = (mat_sh, vec_sh, vec_sh, vec_sh, state_sh)
+        out_sh = (mat_sh, vec_sh, vec_sh, vec_sh, vec_sh, state_sh)
         return in_sh, out_sh
 
     # ------------------------------------------------------------- compile
@@ -466,13 +480,14 @@ class FusedEngine(UQEngine):
                 # trace-time counter: fires once per (bucket) compilation
                 self.trace_counts[nb] = self.trace_counts.get(nb, 0) + 1
                 preds = self.apply(cparams, x)
-                mean, sstd, cstd, _ = self._ops.committee_uq(
+                mean, sstd, cstd, _, finite = self._ops.committee_uq(
                     preds, self.threshold, impl=self.impl,
                     block_n=self.block_n)
                 valid = jnp.arange(nb) < n_valid
                 stats = UQStats(x=x, mean=mean, scalar_std=sstd,
                                 component_std=cstd, valid=valid,
-                                n_valid=n_valid, stream=stream)
+                                n_valid=n_valid, stream=stream,
+                                finite_members=finite)
                 mask = valid
                 new_state, si = [], 0
                 for rule in self.rules:
@@ -484,7 +499,10 @@ class FusedEngine(UQEngine):
                         si += 1
                     else:
                         mask = jnp.asarray(rule.apply(stats, mask)) & valid
-                return mean, sstd, cstd, mask, tuple(new_state)
+                # quarantine floor: a row no finite member scored carries
+                # no information — never selectable, whatever the rules say
+                mask = mask & (finite > 0)
+                return mean, sstd, cstd, mask, finite, tuple(new_state)
             # donation is a no-op (plus a warning) on CPU — only request it
             # where XLA can actually alias the buffer
             donate = self.donate and jax.default_backend() != "cpu"
@@ -534,13 +552,18 @@ class FusedEngine(UQEngine):
         with self._state_guard(advance):
             out = self._dispatch(nb, head + (self.rule_state,))
             if advance:
-                self.rule_state = out[4]
-        mean, sstd, cstd, mask = (np.asarray(o) for o in out[:4])
+                self.rule_state = out[5]
+        mean, sstd, cstd, mask, finite = (np.asarray(o) for o in out[:5])
+        finite_n = finite[:n]
         with self._counter_lock:
             self.bytes_to_device += x.nbytes
             self.bytes_to_host += (mean.nbytes + sstd.nbytes + cstd.nbytes
-                                   + mask.nbytes)
-        return UQResult(mean[:n], sstd[:n], cstd[:n], mask[:n])
+                                   + mask.nbytes + finite.nbytes)
+            if finite_n.size:
+                self.last_finite_min = int(finite_n.min())
+                if self.last_finite_min < self.size:
+                    self.quarantine_rounds += 1
+        return UQResult(mean[:n], sstd[:n], cstd[:n], mask[:n], finite_n)
 
     # -------------------------------------------------------------- weights
     def refresh_from(self, store) -> int:
@@ -615,6 +638,8 @@ class LegacyEngine(UQEngine):
         self.rules = tuple(rules) if rules is not None \
             else default_rules(threshold)
         self._init_rule_state()
+        self.last_finite_min: Optional[int] = None
+        self.quarantine_rounds = 0
 
     def score(self, list_data: Sequence[np.ndarray], *,
               advance: bool = True,
@@ -626,8 +651,25 @@ class LegacyEngine(UQEngine):
                advance: bool, stream: int = STREAM_EXCHANGE) -> UQResult:
         preds = np.asarray(self.predict_all(list_data), dtype=np.float64)
         k = preds.shape[0]
-        mean = preds.mean(axis=0)
-        std = preds.std(axis=0, ddof=1) if k > 1 else np.zeros_like(preds[0])
+        fin = np.isfinite(preds).all(axis=tuple(range(2, preds.ndim)))  # (K, n)
+        cnt = fin.sum(axis=0).astype(np.int32)                          # (n,)
+        if fin.all():
+            # steady state: keep the exact historical float64 reductions
+            mean = preds.mean(axis=0)
+            std = preds.std(axis=0, ddof=1) if k > 1 \
+                else np.zeros_like(preds[0])
+        else:
+            # degraded-K statistics over the finite members only — same
+            # quarantine semantics as the fused kernels (ref.committee_uq_ref)
+            w = fin.reshape(fin.shape + (1,) * (preds.ndim - 2))
+            safe = np.maximum(cnt, 1).astype(np.float64)
+            safe = safe.reshape((-1,) + (1,) * (preds.ndim - 2))
+            mean = np.where(w, preds, 0.0).sum(axis=0) / safe
+            dev = np.where(w, preds - mean, 0.0)
+            var = (dev * dev).sum(axis=0) / np.maximum(
+                cnt - 1, 1).reshape(safe.shape)
+            var[cnt < 2] = 0.0
+            std = np.sqrt(var)
         flat = std.reshape(std.shape[0], -1)
         sstd = flat.max(axis=-1)
         cstd = flat.mean(axis=-1)
@@ -637,7 +679,8 @@ class LegacyEngine(UQEngine):
             if any(r.needs_inputs for r in self.rules) else None
         stats = UQStats(
             x=x, mean=mean, scalar_std=sstd, component_std=cstd,
-            valid=np.ones(n, bool), n_valid=n, stream=stream)
+            valid=np.ones(n, bool), n_valid=n, stream=stream,
+            finite_members=cnt)
         mask = np.ones(n, bool)
         states, si = list(self.rule_state), 0
         for rule in self.rules:
@@ -649,9 +692,14 @@ class LegacyEngine(UQEngine):
                 si += 1
             else:
                 mask = np.asarray(rule.apply(stats, mask), dtype=bool)
+        mask = mask & (cnt > 0)
         if advance:
             self.rule_state = tuple(states)
-        return UQResult(mean, sstd, cstd, mask)
+        if cnt.size:
+            self.last_finite_min = int(cnt.min())
+            if self.last_finite_min < k:
+                self.quarantine_rounds += 1
+        return UQResult(mean, sstd, cstd, mask, cnt)
 
 
 # ---------------------------------------------------------------------------

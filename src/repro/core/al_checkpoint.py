@@ -7,12 +7,15 @@ never corrupts the restore point; retention keeps the last K snapshots.
 """
 from __future__ import annotations
 
+import logging
 import os
 import pickle
 import shutil
 import tempfile
 import time
 from typing import Any, Dict, List, Optional
+
+log = logging.getLogger(__name__)
 
 
 def save_atomic(path: str, state: Dict[str, Any]) -> None:
@@ -44,6 +47,7 @@ class ALCheckpointer:
         self.keep = keep
         self._last = 0.0
         self.saves = 0
+        self.corrupt_skipped = 0
 
     def _path(self, step: int) -> str:
         return os.path.join(self.result_dir, f"al_state_{step:08d}.pkl")
@@ -76,7 +80,16 @@ class ALCheckpointer:
             if f.startswith("al_state_") and f.endswith(".pkl"))
 
     def latest(self) -> Optional[Dict[str, Any]]:
-        snaps = self.list_snapshots()
-        if not snaps:
-            return None
-        return load(snaps[-1])
+        """Newest LOADABLE snapshot.  ``save_atomic`` makes an in-progress
+        write invisible, but a kill can still leave a truncated/garbage file
+        at the newest path through other channels (copied trees, disk-full
+        renames) — restore must fall back to the previous intact snapshot
+        instead of dying on the corrupt one."""
+        for p in reversed(self.list_snapshots()):
+            try:
+                return load(p)
+            except (OSError, EOFError, pickle.UnpicklingError,
+                    AttributeError, ImportError, IndexError, ValueError) as e:
+                self.corrupt_skipped += 1
+                log.warning("skipping unreadable checkpoint %s: %r", p, e)
+        return None

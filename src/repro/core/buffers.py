@@ -54,6 +54,18 @@ class OracleInputBuffer:
             out, self._items = self._items[:n], self._items[n:]
             return out
 
+    def remove_one(self, match: Callable[[Any], bool]) -> bool:
+        """Remove the first queued item ``match`` accepts (late-straggler
+        dedupe: when a timed-out task's result finally arrives and its label
+        is used, the requeued twin still waiting here must be cancelled or
+        the oracle recomputes a label the training buffer already has)."""
+        with self._lock:
+            for i, item in enumerate(self._items):
+                if match(item):
+                    del self._items[i]
+                    return True
+        return False
+
     def adjust(self, fn: Callable[[List[Any]], List[Any]]):
         """paper: adjust_input_for_oracle(to_orcl_buffer, pred_list)."""
         with self._lock:

@@ -216,6 +216,29 @@ class Exchange:
         return None
 
 
+class OracleTaskFailure:
+    """Result-channel sentinel: a worker exhausted its in-place retries on
+    ONE task (FailurePolicy.task_retries) and is reporting the failure
+    instead of dying.  The Manager redispatches the payload while ledger
+    retries remain, then records the task as failed — task failure never
+    becomes worker death, worker death never becomes run death."""
+
+    __slots__ = ("error",)
+
+    def __init__(self, error: str):
+        self.error = error
+
+    def __repr__(self):
+        return f"OracleTaskFailure({self.error!r})"
+
+
+def _payload_fp(payload) -> bytes:
+    """Content fingerprint for oracle payloads (dtype+shape+bytes) — the
+    dedupe key for requeued-task twins."""
+    arr = np.ascontiguousarray(payload)
+    return f"{arr.dtype.str}|{arr.shape}|".encode() + arr.tobytes()
+
+
 @dataclasses.dataclass
 class ManagerConfig:
     retrain_size: int = 20
@@ -266,6 +289,13 @@ class Manager:
         self.fresh_score = fresh_score
         self.releases = 0
         self._retrain_completions_seen = 0
+        # late-straggler dedupe state (keyed by payload fingerprint):
+        # _requeued_fp counts payloads requeued by fault handling whose
+        # original result may still arrive; _expect_duplicate counts twins
+        # whose label was already delivered by that late result, so the
+        # twin's own result must be dropped when it lands
+        self._requeued_fp: Dict[bytes, int] = {}
+        self._expect_duplicate: Dict[bytes, int] = {}
 
     # ------------------------------------------------------------ elasticity
     def register_oracle(self, rank: str) -> OracleEndpoint:
@@ -279,8 +309,27 @@ class Manager:
         if ep is None:
             return
         for t in self.ledger.requeue_worker(rank):
+            self._note_requeued(t.payload)
             self.oracle_buffer.put([t.payload])
         self.heartbeat.forget(rank)
+
+    def requeue_crashed_worker(self, rank: str):
+        """Crash-recovery hook (runtime ``on_crash``): pull the crashed
+        worker's in-flight tasks back into the oracle buffer and free its
+        endpoint, WITHOUT unregistering — the supervised restart re-enters
+        the same rank.  A result the worker managed to send before dying is
+        then absorbed by the late-straggler dedupe path."""
+        ep = self.endpoints.get(rank)
+        if ep is not None:
+            ep.busy_task = None
+        for t in self.ledger.requeue_worker(rank):
+            self._note_requeued(t.payload)
+            self.oracle_buffer.put([t.payload])
+        self.monitor.incr("manager.requeued_crash")
+
+    def _note_requeued(self, payload):
+        fp = _payload_fp(payload)
+        self._requeued_fp[fp] = self._requeued_fp.get(fp, 0) + 1
 
     # ---------------------------------------------------------------- step
     def step(self, retrain_completions: int = 0) -> None:
@@ -301,13 +350,89 @@ class Manager:
                 if ep.busy_task == task_id:
                     ep.busy_task = None
                 t = self.ledger.complete(task_id)
+                if isinstance(label, OracleTaskFailure):
+                    self._handle_task_failure(t, label)
+                    continue
                 if t is None:
-                    # late straggler duplicate — result already requeued and
-                    # recomputed elsewhere; drop it.
-                    self.monitor.incr("manager.duplicate_results")
+                    self._handle_late_result(inp, label)
+                    continue
+                fp = _payload_fp(t.payload)
+                if self._expect_duplicate.get(fp, 0) > 0:
+                    # this task's payload was already labeled by its timed-out
+                    # twin's late result — adding it again would duplicate a
+                    # training row
+                    self._dec(self._expect_duplicate, fp)
+                    self.monitor.incr("oracle.duplicate_results")
+                    continue
+                if self._requeued_fp.get(fp, 0) > 0:
+                    # the requeued twin delivered first: any late straggler
+                    # for this payload is now a duplicate, not a usable label
+                    self._dec(self._requeued_fp, fp)
+                if not self._label_ok(label):
+                    self._handle_bad_label(t)
                     continue
                 self.train_buffer.add(inp, label)
                 self.monitor.incr("manager.labeled")
+
+    @staticmethod
+    def _label_ok(label) -> bool:
+        lab = np.asarray(label)
+        if lab.dtype.kind != "f":
+            return True
+        return bool(np.isfinite(lab).all())
+
+    @staticmethod
+    def _dec(counts: Dict[bytes, int], fp: bytes):
+        n = counts.get(fp, 0) - 1
+        if n > 0:
+            counts[fp] = n
+        else:
+            counts.pop(fp, None)
+
+    def _handle_task_failure(self, t, failure: OracleTaskFailure):
+        """Worker-reported task failure (retries exhausted in place)."""
+        self.monitor.incr("oracle.task_failures_reported")
+        if t is None:       # already requeued by timeout — twin handles it
+            return
+        if t.retries < self.ledger.max_retries:
+            self._redispatch(t.payload, t.retries + 1)
+        else:
+            self.ledger.fail(t)
+            self.monitor.incr("oracle.task_gave_up")
+
+    def _handle_bad_label(self, t):
+        """Non-finite label (chaos nan_label / genuinely broken oracle):
+        never admit it to the training buffer; retry the task elsewhere."""
+        self.monitor.incr("oracle.nonfinite_labels")
+        if t.retries < self.ledger.max_retries:
+            self._redispatch(t.payload, t.retries + 1)
+        else:
+            self.ledger.fail(t)
+            self.monitor.incr("oracle.task_gave_up")
+
+    def _handle_late_result(self, inp, label):
+        """Result for a task the ledger already requeued (timeout / dead or
+        crashed worker).  The old behavior discarded the label and let the
+        twin recompute it — wasted oracle work, and the only guard against
+        DOUBLE-labeling was the discard itself.  Now: if the twin has not
+        delivered yet, USE this label and cancel the twin (drop it from the
+        buffer if still queued, else mark its future result a duplicate);
+        if the twin already delivered, this is a true duplicate."""
+        fp = _payload_fp(inp)
+        if self._requeued_fp.get(fp, 0) > 0 and self._label_ok(label):
+            self._dec(self._requeued_fp, fp)
+            self.train_buffer.add(inp, label)
+            self.monitor.incr("manager.labeled")
+            self.monitor.incr("manager.late_results_used")
+            if not self.oracle_buffer.remove_one(
+                    lambda item: _payload_fp(item) == fp):
+                # twin already dispatched (or mid-flight): its result must
+                # be dropped when it arrives
+                self._expect_duplicate[fp] = \
+                    self._expect_duplicate.get(fp, 0) + 1
+            return
+        self.monitor.incr("oracle.duplicate_results")
+        self.monitor.incr("manager.duplicate_results")
 
     def _handle_faults(self):
         for t in self.ledger.expired():
@@ -315,6 +440,7 @@ class Manager:
             ep = self.endpoints.get(t.worker)
             if ep is not None and ep.busy_task == t.task_id:
                 ep.busy_task = None
+            self._note_requeued(t.payload)
             self._redispatch(t.payload, t.retries + 1)
         for rank in self.heartbeat.dead_workers():
             self.monitor.incr("manager.dead_workers")
@@ -322,6 +448,7 @@ class Manager:
             if ep is not None:
                 ep.busy_task = None
             for t in self.ledger.requeue_worker(rank):
+                self._note_requeued(t.payload)
                 self._redispatch(t.payload, t.retries + 1)
 
     def _redispatch(self, payload, retries: int):

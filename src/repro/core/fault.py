@@ -57,6 +57,13 @@ class TaskLedger:
                 self.completed += 1
             return t  # None => was already requeued (late straggler result)
 
+    def fail(self, task: Task):
+        """Record a task as terminally failed (reported failure with no
+        retries left — the worker-reported analog of retry exhaustion in
+        ``expired``)."""
+        with self._lock:
+            self.failed.append(task)
+
     def expired(self) -> List[Task]:
         """Pop tasks past their deadline: retryable ones are returned for
         requeue; ones out of retries land in ``failed``."""

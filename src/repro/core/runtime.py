@@ -39,8 +39,7 @@ from __future__ import annotations
 
 import logging
 import threading
-import traceback
-from typing import Any, Callable, Dict, List, Optional, Sequence
+from typing import Any, Callable, Dict, List, Optional, Sequence, Union
 
 log = logging.getLogger(__name__)
 
@@ -48,13 +47,17 @@ import numpy as np
 
 from repro.configs.pal_potential import PALRunConfig
 from repro.core import acquisition as acq
+from repro.core import transport
 from repro.core.al_checkpoint import ALCheckpointer
 from repro.core.buffers import OracleInputBuffer, TrainingDataBuffer
+from repro.core.chaos import ChaosCrash, ChaosInjector, FaultPlan
 from repro.core.controller import (
-    Exchange, ExchangeConfig, Manager, ManagerConfig, PredictionPool,
+    Exchange, ExchangeConfig, Manager, ManagerConfig, OracleTaskFailure,
+    PredictionPool,
 )
 from repro.core.fault import ElasticPool
 from repro.core.monitor import Monitor
+from repro.core.supervisor import Supervisor, policies_from_config
 from repro.core.transport import Channel, StopToken
 from repro.core.weight_sync import WeightStore, WeightSyncPolicy
 
@@ -81,10 +84,17 @@ class PAL:
         mesh=None,
         sharding_rules=None,
         resume: bool = False,
+        chaos: Optional[Union[FaultPlan, ChaosInjector]] = None,
     ):
         self.cfg = run_cfg
         self.monitor = Monitor()
         rd = run_cfg.result_dir
+        # deterministic fault injection (core/chaos.py): a FaultPlan makes
+        # this run execute a scheduled fault sequence — tests and the
+        # fault-recovery benchmark drive recovery behavior through it
+        if chaos is not None and not isinstance(chaos, ChaosInjector):
+            chaos = ChaosInjector(chaos, monitor=self.monitor)
+        self.chaos: Optional[ChaosInjector] = chaos
 
         # fused committee training: one CommitteeTrainer loop instead of
         # ml_process per-member trainer threads (loss_fn needs the stacked
@@ -226,13 +236,36 @@ class PAL:
                     QueueConfig(
                         max_batch=int(run_cfg.serve_max_batch),
                         max_wait_ms=float(getattr(
-                            run_cfg, "serve_max_wait_ms", 2.0))),
+                            run_cfg, "serve_max_wait_ms", 2.0)),
+                        shed_pending=int(getattr(
+                            run_cfg, "serve_shed_pending", 0)),
+                        breaker_failures=int(getattr(
+                            run_cfg, "serve_breaker_failures", 0)),
+                        breaker_reset_s=float(getattr(
+                            run_cfg, "serve_breaker_reset_s", 5.0))),
                     monitor=self.monitor)
 
         # --- runtime machinery ----------------------------------------------
         self.stop_event = threading.Event()
         self.stop_token: Optional[StopToken] = None
         self._threads: List[threading.Thread] = []
+        # supervised execution (core/supervisor.py): kernel loops restart
+        # with backoff on crash; escalation to StopToken only after a loop
+        # burns through its FailurePolicy crash budget.  supervise=False
+        # maps to max_crashes=1 — the seed's fail-stop through the same path
+        self.supervisor = Supervisor(
+            self.monitor,
+            lambda name, reason: self._signal_stop(StopToken(name, reason)),
+            self.stop_event,
+            policies=policies_from_config(run_cfg),
+            seed=run_cfg.seed)
+        # trainer crash recovery: the parked trainer-channel irecv and the
+        # trained-round dirty flag live OUTSIDE the loop body, so a
+        # supervised restart resumes the round (replay ring + TrainState are
+        # device-resident and survive) instead of replaying or losing blocks
+        self._trainer_pending: Dict[int, Any] = {}
+        self._trainer_dirty: Dict[int, bool] = {}
+        self._last_ckpt_iter = 0
         # retrain-completion counter: incremented by EVERY trainer thread on
         # the legacy path — the read-modify-write must be lock-guarded or
         # concurrent completions are lost and dynamic_oracle_list re-scoring
@@ -257,20 +290,17 @@ class PAL:
             self.stop_token = token
             self.stop_event.set()
 
-    def _guard(self, name: str, fn: Callable, *args):
-        """Run a loop body; an uncaught exception is a system fault — record
-        it, surface it, and stop the workflow instead of dying silently."""
-        try:
-            fn(*args)
-        except BaseException as e:  # noqa: BLE001
-            tb = traceback.format_exc()
-            log.error("kernel thread %s crashed: %s\n%s", name, e, tb)
-            self.monitor.incr("runtime.thread_crashes")
-            self._signal_stop(StopToken(name, f"crashed: {e!r}"))
-
     # ------------------------------------------------------------ oracle pool
     def _oracle_worker(self, rank: str, stop: threading.Event):
-        self._guard(rank, self._oracle_worker_inner, rank, stop)
+        """ElasticPool entry point: the worker loop runs SUPERVISED — a
+        crash requeues the rank's in-flight ledger work and restarts the
+        loop in this same thread (fresh oracle instance + endpoint), only
+        escalating to a StopToken past the FailurePolicy crash budget."""
+        self.supervisor.run(
+            rank, "oracle", self._oracle_worker_inner, rank, stop,
+            on_crash=lambda e: self.manager.requeue_crashed_worker(rank),
+            should_stop=lambda: (stop.is_set()
+                                 or self.oracle_pool.stop_all.is_set()))
 
     def _oracle_worker_inner(self, rank: str, stop: threading.Event):
         oracle = self._make_oracle(len(self._oracle_instances),
@@ -281,16 +311,51 @@ class PAL:
             while not (stop.is_set() or self.stop_event.is_set()
                        or self.oracle_pool.stop_all.is_set()):
                 self.manager.heartbeat.beat(rank)
+                if self.chaos is not None:
+                    self.chaos.check("oracle.loop", rank=rank)
                 try:
                     tid, payload = ep.jobs.recv(timeout=0.1)
                 except TimeoutError:
                     continue
-                with self.monitor.timer("oracle.run_calc"):
-                    inp, label = oracle.run_calc(np.asarray(payload))
-                ep.results.isend((tid, inp, label))
+                ep.results.isend(
+                    self._run_oracle_task(oracle, rank, tid, payload, stop))
                 self._manager_wake.set()
         finally:
             oracle.stop_run()
+
+    def _run_oracle_task(self, oracle, rank: str, tid: int, payload,
+                         stop: threading.Event):
+        """One labeling task with in-place retries (FailurePolicy.
+        task_retries, exponential backoff + jitter).  Exhausted retries
+        return an ``OracleTaskFailure`` sentinel — the task fails, the
+        worker lives.  An injected ``ChaosCrash`` is NOT a task failure:
+        it propagates to kill the loop so the supervisor's restart path is
+        what gets exercised."""
+        pol = self.supervisor.policy("oracle")
+        attempt = 0
+        while True:
+            try:
+                with self.monitor.timer("oracle.run_calc"):
+                    if self.chaos is not None:
+                        self.chaos.check("oracle.task", rank=rank)
+                    inp, label = oracle.run_calc(np.asarray(payload))
+                if self.chaos is not None:
+                    label = self.chaos.corrupt_label(label, rank=rank)
+                return (tid, inp, label)
+            except ChaosCrash:
+                raise
+            except Exception as e:  # noqa: BLE001 — per-task boundary
+                self.monitor.incr("oracle.task_failures")
+                if (attempt >= pol.task_retries or stop.is_set()
+                        or self.stop_event.is_set()):
+                    log.warning("oracle %s task %d failed after %d "
+                                "attempt(s): %r", rank, tid, attempt + 1, e)
+                    return (tid, np.asarray(payload),
+                            OracleTaskFailure(repr(e)))
+                self.monitor.incr("oracle.task_retries")
+                self.stop_event.wait(
+                    self.supervisor.backoff_delay(pol, attempt))
+                attempt += 1
 
     def add_oracles(self, n: int) -> List[str]:
         """Elastic scale-up of the oracle pool."""
@@ -319,69 +384,100 @@ class PAL:
         self.monitor.incr("train.retrains")
         self._manager_wake.set()
 
+    def _trainer_irecv(self, idx: int):
+        """Post (or reuse) the parked trainer-channel receive for lane
+        ``idx``.  The handle is stored on the runtime, not the loop frame:
+        a supervised trainer restart must reuse the surviving request —
+        re-posting would leak a parked irecv that silently swallows the
+        next released block."""
+        pending = self._trainer_pending.get(idx)
+        if pending is None:
+            pending = self.trainer_channels[idx].irecv()
+            self._trainer_pending[idx] = pending
+        return pending
+
+    def _trainer_ingest(self, idx: int, add: Callable[[Any], None]) -> bool:
+        """Wait for one released block on lane ``idx`` and absorb it (plus
+        anything queued behind it).  Returns True when new data landed and
+        a train round is owed — the dirty flag persists across a trainer
+        crash so the restarted loop trains from the (device-resident)
+        ingested data instead of waiting for the NEXT release."""
+        block = self._recv_block(self._trainer_irecv(idx))
+        if block is None:
+            return False
+        self._trainer_pending[idx] = None       # consumed — never replay it
+        add(block)
+        chan = self.trainer_channels[idx]
+        while chan.poll():
+            add(chan.recv())
+        self._trainer_irecv(idx)                # re-post the interrupt handle
+        self._trainer_dirty[idx] = True
+        return True
+
+    def _trainer_drain(self, idx: int, add: Callable[[Any], None]):
+        """Shutdown path: a block delivered into the parked irecv between
+        the last wait and shutdown bypasses the channel queue (transport
+        completes parked requests directly) — absorb it and anything still
+        queued, or post-run consolidation silently loses up to retrain_size
+        labels."""
+        pending = self._trainer_pending.get(idx)
+        if pending is not None and pending.test():
+            add(pending.value)
+            self._trainer_pending[idx] = None
+        chan = self.trainer_channels[idx]
+        while chan.poll():
+            add(chan.recv())
+
     def _trainer_loop(self, idx: int, stop: threading.Event):
         """Legacy path: one thread per user ``make_model(..., 'train')``."""
         trainer = self.trainers[idx]
-        chan = self.trainer_channels[idx]
-        pending = chan.irecv()
         while not (stop.is_set() or self.stop_event.is_set()):
-            datapoints = self._recv_block(pending)
-            if datapoints is None:
-                continue
-            trainer.add_trainingset(datapoints)
-            # absorb any further blocks that arrived while training
-            while chan.poll():
-                trainer.add_trainingset(chan.recv())
-            pending = chan.irecv()
+            if not self._trainer_dirty.get(idx):
+                if not self._trainer_ingest(idx, trainer.add_trainingset):
+                    continue
+            if self.chaos is not None:
+                self.chaos.check("trainer.loop")
             with self.monitor.timer("train.retrain"):
-                stop_run = trainer.retrain(pending)
+                stop_run = trainer.retrain(self._trainer_pending[idx])
             # publish BEFORE noting completion: the completion wakes the
             # manager, whose dynamic_oracle_list re-score must see the
             # freshly retrained weights, not the previous round's
             if self._sync_policies[idx].should_publish():
                 self.store.publish_packed(idx, trainer.get_weight())
+            self._trainer_dirty[idx] = False
             self._note_retrain_completion()
             trainer.save_progress()
             if stop_run:
                 self._signal_stop(StopToken(f"trainer{idx}",
                                             "trainer stop criterion"))
-        # a block delivered into the parked irecv between the last wait and
-        # shutdown bypasses the channel queue (transport completes parked
-        # requests directly) — absorb it and anything still queued, or
-        # post-run consolidation silently loses up to retrain_size labels
-        if pending.test():
-            trainer.add_trainingset(pending.value)
-        while chan.poll():
-            trainer.add_trainingset(chan.recv())
+        self._trainer_drain(idx, trainer.add_trainingset)
 
     def _committee_trainer_loop(self, stop: threading.Event):
         """Fused path: ONE loop advances all K members per dispatch.  The
         pending irecv doubles as the interrupt handle — training yields
-        the moment the Manager releases the next labeled block."""
+        the moment the Manager releases the next labeled block.  A crash
+        anywhere in the round leaves the dirty flag set, so the supervised
+        restart resumes training immediately from the device-resident
+        replay ring + last stacked TrainState."""
         trainer = self.committee_trainer
-        chan = self.trainer_channels[0]
-        pending = chan.irecv()
         while not (stop.is_set() or self.stop_event.is_set()):
-            block = self._recv_block(pending)
-            if block is None:
-                continue
-            trainer.add_blocks(block)
-            while chan.poll():
-                trainer.add_blocks(chan.recv())
-            pending = chan.irecv()
+            if not self._trainer_dirty.get(0):
+                if not self._trainer_ingest(0, trainer.add_blocks):
+                    continue
+            if self.chaos is not None:
+                self.chaos.check("trainer.loop")
+                ev = self.chaos.take("trainer.nan_member")
+                if ev is not None:
+                    trainer.poison_member(int(ev.arg))
             with self.monitor.timer("train.retrain"):
-                trainer.train(interrupt=pending)
+                trainer.train(interrupt=self._trainer_pending[0])
             # publish BEFORE noting completion (see _trainer_loop): the
             # woken manager's re-score must run on the refreshed weights
             if self._sync_policies[0].should_publish():
                 self._publish_committee()
+            self._trainer_dirty[0] = False
             self._note_retrain_completion()
-        # same parked-irecv drain as the legacy loop: the last released
-        # block may have completed `pending` directly, invisible to poll()
-        if pending.test():
-            trainer.add_blocks(pending.value)
-        while chan.poll():
-            trainer.add_blocks(chan.recv())
+        self._trainer_drain(0, trainer.add_blocks)
 
     def _publish_committee(self):
         """Trainer -> engine weight handoff.  Fused engines take the
@@ -404,14 +500,24 @@ class PAL:
     # ------------------------------------------------------------- threads
     def _exchange_loop(self, stop: threading.Event):
         while not (stop.is_set() or self.stop_event.is_set()):
+            if self.chaos is not None:
+                self.chaos.check("exchange.loop")
             token = self.exchange.step()
             if token is not None:
                 self._signal_stop(token)
 
+    def _autosave_due(self) -> bool:
+        every = int(getattr(self.cfg, "checkpoint_every_iters", 0))
+        if every <= 0:
+            return False
+        return (self.exchange.iteration - self._last_ckpt_iter) >= every
+
     def _manager_loop(self, stop: threading.Event):
         while not (stop.is_set() or self.stop_event.is_set()):
             self.manager.step(self._retrain_completions)
-            if self.checkpointer.due():
+            # periodic autosave: wall-clock (checkpoint_every) OR exchange
+            # progress (checkpoint_every_iters), whichever is configured
+            if self.checkpointer.due() or self._autosave_due():
                 self.checkpoint()
             # event-or-timeout: woken immediately by new work (oracle-buffer
             # put / oracle result / retrain completion), with a bounded
@@ -421,29 +527,21 @@ class PAL:
 
     # ------------------------------------------------------------------ run
     def start(self):
+        if self.chaos is not None:
+            transport.install_chaos(self.chaos)
         self.oracle_pool.add(self.cfg.orcl_process)
         if self.committee_trainer is not None:
-            th = threading.Thread(
-                target=self._guard,
-                args=("committee_trainer", self._committee_trainer_loop,
-                      self.stop_event),
-                name="committee_trainer", daemon=True)
-            th.start()
-            self._threads.append(th)
+            self._threads.append(self.supervisor.spawn(
+                "committee_trainer", "trainer",
+                self._committee_trainer_loop, self.stop_event))
         for i in range(len(self.trainers)):
-            th = threading.Thread(
-                target=self._guard,
-                args=(f"trainer{i}", self._trainer_loop, i, self.stop_event),
-                name=f"trainer{i}", daemon=True)
-            th.start()
-            self._threads.append(th)
-        for name, fn in [("exchange", self._exchange_loop),
-                         ("manager", self._manager_loop)]:
-            th = threading.Thread(target=self._guard,
-                                  args=(name, fn, self.stop_event),
-                                  name=name, daemon=True)
-            th.start()
-            self._threads.append(th)
+            self._threads.append(self.supervisor.spawn(
+                f"trainer{i}", "trainer",
+                self._trainer_loop, i, self.stop_event))
+        self._threads.append(self.supervisor.spawn(
+            "exchange", "exchange", self._exchange_loop, self.stop_event))
+        self._threads.append(self.supervisor.spawn(
+            "manager", "manager", self._manager_loop, self.stop_event))
 
     def run(self, timeout: Optional[float] = None) -> Optional[StopToken]:
         """Start and block until a kernel signals stop (or timeout)."""
@@ -459,17 +557,31 @@ class PAL:
         if self.serve_queue is not None:
             # flush pending served requests — bounded like every other
             # join here, so a wedged dispatch can't hang shutdown
-            self.serve_queue.close(timeout=10.0)
+            try:
+                self.serve_queue.close(timeout=10.0)
+            except Exception as e:  # noqa: BLE001 — shutdown must continue
+                log.warning("serve queue close failed: %r", e)
         self.oracle_pool.shutdown()
+        unjoined = []
         for th in self._threads:
             th.join(timeout=10.0)
-        # paper: every process's stop_run is called before quitting
-        for g in self.generators:
-            g.stop_run()
-        for p in self.predictors:
-            p.stop_run()
-        for t in self.trainers:
-            t.stop_run()
+            if th.is_alive():
+                unjoined.append(th.name)
+        if unjoined:
+            # never silently leak threads: surface which loops failed to
+            # exit (a wedged oracle call, a hung chaos delay) — the process
+            # still shuts down because every loop thread is a daemon
+            self.monitor.incr("runtime.unjoined_threads", len(unjoined))
+            log.warning("threads not joined within timeout: %s", unjoined)
+        if self.chaos is not None:
+            transport.uninstall_chaos()
+        # paper: every process's stop_run is called before quitting — one
+        # kernel's failing stop_run must not rob the others of theirs
+        for obj in (*self.generators, *self.predictors, *self.trainers):
+            try:
+                obj.stop_run()
+            except Exception as e:  # noqa: BLE001
+                log.warning("stop_run failed for %r: %r", obj, e)
 
     # ----------------------------------------------------------- checkpoint
     def checkpoint(self) -> str:
@@ -497,6 +609,7 @@ class PAL:
             # RNG cursor + replay ring: a resumed run continues
             # mid-schedule instead of resetting its optimizer
             state["train_state"] = self.committee_trainer.state_dict()
+        self._last_ckpt_iter = self.exchange.iteration
         return self.checkpointer.save(self.exchange.iteration, state)
 
     def _restore(self):
@@ -560,5 +673,21 @@ class PAL:
             r["serve_queue_dispatches"] = self.serve_queue.dispatches
             r["serve_queue_batched_requests"] = \
                 self.serve_queue.batched_requests
+            # degradation-aware serving health: breaker state, shed/failure
+            # counts — the signal operators act on before the run degrades
+            r["serve_queue_health"] = self.serve_queue.health()
+        # fault-tolerance observability (ISSUE 6): last crash + restart
+        # tally from the supervisor, committee quarantine floor from the
+        # engine (min finite members seen in any scored round), chaos
+        # events fired so far when a FaultPlan is installed
+        sup = self.supervisor.snapshot()
+        r["last_fault"] = sup["last_fault"]
+        r["thread_restarts"] = self.supervisor.total_restarts()
+        r["uq_finite_members_min"] = getattr(
+            self.engine, "last_finite_min", None)
+        r["uq_quarantine_rounds"] = getattr(
+            self.engine, "quarantine_rounds", 0)
+        if self.chaos is not None:
+            r["chaos_fired"] = self.chaos.summary()
         r["stop"] = repr(self.stop_token)
         return r

@@ -32,6 +32,24 @@ class TransportError(RuntimeError):
     pass
 
 
+# ---------------------------------------------------------------- chaos hook
+# Process-wide fault-injection point (core/chaos.ChaosInjector), installed by
+# the runtime when a FaultPlan is supplied.  ``Channel.isend`` consults it at
+# the ``transport.send`` site (rank = channel name), which lets a plan
+# exercise message-path failures without subclassing the transport.
+_CHAOS = None
+
+
+def install_chaos(injector) -> None:
+    global _CHAOS
+    _CHAOS = injector
+
+
+def uninstall_chaos() -> None:
+    global _CHAOS
+    _CHAOS = None
+
+
 class Request:
     """Non-blocking operation handle, mirroring mpi4py.MPI.Request."""
 
@@ -97,6 +115,8 @@ class Channel:
 
     # ------------------------------------------------------------------ tx
     def isend(self, data: Any) -> Request:
+        if _CHAOS is not None:
+            _CHAOS.check("transport.send", rank=self.name)
         _check_payload(data, self.fixed_size)
         req = Request()
         with self._lock:

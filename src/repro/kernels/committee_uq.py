@@ -12,12 +12,16 @@ re-prioritization:
     components of the same std (the ``adjust_input_for_oracle`` ranking
     score), finalized from the same Welford state at zero extra passes
   * uncertainty mask ``scalar_std > threshold``  (n,)  uint8
+  * finite-member count per sample       (n,)    int32 — members with any
+    non-finite output component are quarantined out of the statistics
+    (degraded-K mean/std) inside the same pass; the count is the
+    degradation signal surfaced as ``UQResult.finite_members``
 
 The K axis is the sequential innermost grid dimension; per-row Welford
-state (running mean in the output ref, running M2 in VMEM scratch) is
-carried across committee members, so the (K, n, d) prediction tensor is
-never materialized anywhere outside the committee forward itself — the
-controller transfers only the three small outputs to host.
+state (running mean + finite count in output refs, running M2 in VMEM
+scratch) is carried across committee members, so the (K, n, d) prediction
+tensor is never materialized anywhere outside the committee forward
+itself — the controller transfers only the small per-row outputs to host.
 
 Grid: (n_blocks, K).  Rows are blocked; the trailing output dim d is the
 lane dimension.  Validated against ``ref.committee_uq_ref`` with
@@ -33,62 +37,80 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _kernel(preds_ref, mean_ref, sstd_ref, cstd_ref, mask_ref, m2_ref,
-            *, n_members: int, threshold: float):
+def _kernel(preds_ref, mean_ref, sstd_ref, cstd_ref, mask_ref, cnt_ref,
+            m2_ref, *, n_members: int, threshold: float):
     """One grid step: fold committee member ``k`` into the Welford state
     of one row block.
 
     Refs (shapes per block, bn = row-block size, d = output components):
 
       ``preds_ref``  (1, bn, d) in   — member k's predictions for the block
-      ``mean_ref``   (bn, d)   out  — running mean; after k = K-1 the
-                                      committee mean (Welford: ``mean +=
-                                      (x - mean) / (k+1)``)
+      ``mean_ref``   (bn, d)   out  — running masked mean; after k = K-1
+                                      the committee mean over FINITE
+                                      members (Welford: ``mean +=
+                                      (x - mean) / cnt`` where cnt counts
+                                      only finite rows)
       ``m2_ref``     (bn, d)   VMEM — running sum of squared deviations
                                       (``M2 += delta * (x - new_mean)``);
                                       scratch only, never leaves the chip
       ``sstd_ref``   (bn,)     out  — finalized at k = K-1: MAX over d of
-                                      ``sqrt(M2 / (K-1))`` (ddof=1)
+                                      ``sqrt(M2 / (cnt-1))`` (ddof=1 over
+                                      the finite members)
       ``cstd_ref``   (bn,)     out  — MEAN over d of the same std, from
                                       the same state at zero extra passes
-      ``mask_ref``   (bn,)     out  — ``scalar_std > threshold`` as uint8
+      ``mask_ref``   (bn,)     out  — ``scalar_std > threshold`` AND at
+                                      least one finite member, as uint8
                                       (bool is not a legal Pallas output
                                       dtype; the wrapper casts back)
+      ``cnt_ref``    (bn,)     out  — running count of finite members per
+                                      row (fp32 carried state; the wrapper
+                                      casts to int32) — the quarantine
+                                      degree reported as
+                                      ``UQResult.finite_members``
 
     K is the sequential innermost grid dimension, so output refs persist
     across the k steps and double as carried state — the classic
     streaming-statistics trick that keeps the (K, n, d) tensor out of
     memory.  ``@pl.when`` guards split init (k=0) / accumulate (k>0) /
     finalize (k=K-1); with K=1 the k=0 branch also finalizes to std 0.
+
+    Member quarantine: a member whose row has ANY non-finite component is
+    excluded from the fold for that row (its delta is zeroed BEFORE it can
+    contaminate mean/M2 — 0 * NaN would be NaN, hence the double where).
+    With all members finite ``cnt`` equals ``k + 1`` at every step and the
+    recurrence is bit-identical to the unmasked Welford fold.
     """
     k = pl.program_id(1)
     x = preds_ref[0].astype(jnp.float32)               # (bn, d)
+    fin = jnp.all(jnp.isfinite(x), axis=-1)            # (bn,)
+    finf = fin.astype(jnp.float32)
 
     @pl.when(k == 0)
     def _init():
-        mean_ref[...] = x
+        mean_ref[...] = jnp.where(fin[:, None], x, 0.0)
         m2_ref[...] = jnp.zeros_like(x)
+        cnt_ref[...] = finf
 
     @pl.when(k > 0)
     def _welford():
         mean = mean_ref[...]
-        count = (k + 1).astype(jnp.float32)
-        delta = x - mean
-        mean = mean + delta / count
-        m2_ref[...] += delta * (x - mean)
+        cnt = cnt_ref[...] + finf
+        delta = jnp.where(fin[:, None], x - mean, 0.0)
+        mean = mean + delta / jnp.maximum(cnt, 1.0)[:, None]
+        m2_ref[...] += delta * jnp.where(fin[:, None], x - mean, 0.0)
         mean_ref[...] = mean
+        cnt_ref[...] = cnt
 
     @pl.when(k == n_members - 1)
     def _finalize():
-        if n_members > 1:
-            var = m2_ref[...] / jnp.float32(n_members - 1)   # ddof=1
-        else:
-            var = jnp.zeros_like(m2_ref[...])
+        cnt = cnt_ref[...]
+        var = m2_ref[...] / jnp.maximum(cnt - 1.0, 1.0)[:, None]   # ddof=1
+        var = jnp.where((cnt >= 2.0)[:, None], var, 0.0)
         std = jnp.sqrt(var)                            # (bn, d)
         sstd = jnp.max(std, axis=-1)                   # (bn,)
         sstd_ref[...] = sstd
         cstd_ref[...] = jnp.mean(std, axis=-1)         # (bn,)
-        mask_ref[...] = (sstd > threshold).astype(jnp.uint8)
+        mask_ref[...] = ((sstd > threshold) & (cnt > 0.0)).astype(jnp.uint8)
 
 
 def committee_uq(
@@ -100,12 +122,18 @@ def committee_uq(
 ):
     """Fused mean / ddof=1 std statistics / threshold mask over the K axis.
 
-    Returns the 4-tuple ``(mean (n, d) fp32, scalar_std (n,) fp32,
-    component_std (n,) fp32, mask (n,) bool)`` — scalar_std is the
-    max-over-components std (the exchange check quantity), component_std
-    the mean-over-components std (the oracle re-prioritization score);
-    both finalize from the SAME single Welford pass, so the Manager's
-    ``dynamic_oracle_list`` score costs no extra reduction.
+    Returns the 5-tuple ``(mean (n, d) fp32, scalar_std (n,) fp32,
+    component_std (n,) fp32, mask (n,) bool, finite (n,) int32)`` —
+    scalar_std is the max-over-components std (the exchange check
+    quantity), component_std the mean-over-components std (the oracle
+    re-prioritization score); both finalize from the SAME single Welford
+    pass, so the Manager's ``dynamic_oracle_list`` score costs no extra
+    reduction.  ``finite`` counts, per row, the committee members whose
+    outputs were finite — members with any non-finite component are
+    quarantined out of the statistics inside the same pass (degraded-K
+    mean/std; see ``ref.committee_uq_ref`` for the exact semantics), so a
+    diverged member degrades UQ quality instead of poisoning it, at zero
+    extra dispatches.
 
     Row blocking: the n axis is processed in blocks of ``block_n``
     (clamped to n) and padded up to a whole number of blocks; padding rows
@@ -133,20 +161,22 @@ def committee_uq(
     mean_spec = pl.BlockSpec((bn, d), lambda i, k: (i, 0))
     row_spec = pl.BlockSpec((bn,), lambda i, k: (i,))
 
-    mean, sstd, cstd, mask = pl.pallas_call(
+    mean, sstd, cstd, mask, cnt = pl.pallas_call(
         kernel,
         grid=(nb, K),
         in_specs=[pspec],
-        out_specs=[mean_spec, row_spec, row_spec, row_spec],
+        out_specs=[mean_spec, row_spec, row_spec, row_spec, row_spec],
         out_shape=[
             jax.ShapeDtypeStruct((npad, d), jnp.float32),
             jax.ShapeDtypeStruct((npad,), jnp.float32),
             jax.ShapeDtypeStruct((npad,), jnp.float32),
             jax.ShapeDtypeStruct((npad,), jnp.uint8),
+            jax.ShapeDtypeStruct((npad,), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((bn, d), jnp.float32)],
         interpret=interpret,
     )(preds)
     if pad:
-        mean, sstd, cstd, mask = mean[:n], sstd[:n], cstd[:n], mask[:n]
-    return mean, sstd, cstd, mask.astype(jnp.bool_)
+        mean, sstd, cstd = mean[:n], sstd[:n], cstd[:n]
+        mask, cnt = mask[:n], cnt[:n]
+    return mean, sstd, cstd, mask.astype(jnp.bool_), cnt.astype(jnp.int32)

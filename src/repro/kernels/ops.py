@@ -67,11 +67,15 @@ def committee_uq(preds, threshold: float, *, impl: str = _DEFAULT_IMPL,
 
     preds: (K, n, d) stacked committee predictions (one vmapped forward).
     Returns (mean (n, d) fp32, scalar_std (n,) fp32, component_std (n,)
-    fp32, mask (n,) bool) — the ONLY tensors the controller ever ships back
-    to host.  scalar_std (max over components) feeds the exchange check;
-    component_std (mean over components, same Welford pass) feeds the
-    Manager's dynamic_oracle_list re-prioritization, replacing the seed
-    path's full (K, n, d) round trip + float64 NumPy std recompute.
+    fp32, mask (n,) bool, finite (n,) int32) — the ONLY tensors the
+    controller ever ships back to host.  scalar_std (max over components)
+    feeds the exchange check; component_std (mean over components, same
+    Welford pass) feeds the Manager's dynamic_oracle_list
+    re-prioritization, replacing the seed path's full (K, n, d) round trip
+    + float64 NumPy std recompute.  finite counts the committee members
+    whose row was fully finite — non-finite members are quarantined out of
+    the statistics (degraded-K mean/std) in the same pass, so a diverged
+    member degrades UQ instead of emitting NaN scores.
     """
     if impl in ("pallas", "pallas_interpret"):
         from repro.kernels import committee_uq as _cuq

@@ -23,23 +23,38 @@ def committee_uq_ref(preds: jnp.ndarray, threshold: float):
     """Committee mean / ddof=1 std statistics / threshold mask in one program.
 
     preds: (K, n, d).  Returns (mean (n, d) fp32, scalar_std (n,) fp32,
-    component_std (n,) fp32, mask (n,) bool).  scalar_std is the max over
-    output components of the per-component ddof=1 std — the quantity the
-    paper's prediction_check thresholds ((std > t).any over components ==
-    scalar_std > t); component_std is the mean over components of the same
-    std — the ranking score of adjust_input_for_oracle
-    (dynamic_oracle_list), emitted from the same statistics pass.
+    component_std (n,) fp32, mask (n,) bool, finite (n,) int32).
+    scalar_std is the max over output components of the per-component
+    ddof=1 std — the quantity the paper's prediction_check thresholds
+    ((std > t).any over components == scalar_std > t); component_std is
+    the mean over components of the same std — the ranking score of
+    adjust_input_for_oracle (dynamic_oracle_list), emitted from the same
+    statistics pass.
+
+    Member quarantine (degraded-K statistics): a member's row is excluded
+    from the statistics when ANY of its d output components is non-finite
+    (a diverged/poisoned committee member must not poison the committee
+    mean or std for anyone).  ``finite`` reports the per-row count of
+    members that participated; with fewer than 2 finite members the std
+    is 0 (disagreement is unmeasurable) and with 0 finite members the
+    mask is forced off.  When every member is finite — the steady state —
+    the masked reductions are exactly the unmasked ones.
     """
     p = preds.astype(jnp.float32)
     K = p.shape[0]
-    mean = jnp.mean(p, axis=0)
-    if K > 1:
-        std = jnp.std(p, axis=0, ddof=1)
-    else:
-        std = jnp.zeros_like(mean)
+    fin = jnp.all(jnp.isfinite(p), axis=-1)                # (K, n) per-member row
+    cnt = jnp.sum(fin.astype(jnp.int32), axis=0)           # (n,)
+    finw = fin[..., None]                                  # (K, n, 1)
+    safe_cnt = jnp.maximum(cnt, 1).astype(jnp.float32)[:, None]
+    mean = jnp.sum(jnp.where(finw, p, 0.0), axis=0) / safe_cnt
+    dev = jnp.where(finw, p - mean, 0.0)
+    var = jnp.sum(dev * dev, axis=0) / jnp.maximum(
+        cnt - 1, 1).astype(jnp.float32)[:, None]
+    std = jnp.sqrt(jnp.where((cnt >= 2)[:, None], var, 0.0))
     scalar_std = jnp.max(std, axis=-1)
     component_std = jnp.mean(std, axis=-1)
-    return mean, scalar_std, component_std, scalar_std > jnp.float32(threshold)
+    mask = (scalar_std > jnp.float32(threshold)) & (cnt > 0)
+    return mean, scalar_std, component_std, mask, cnt
 
 
 # ---------------------------------------------------------------------------

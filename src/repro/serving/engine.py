@@ -100,7 +100,8 @@ class CommitteeServer:
             zf = np.zeros(0, np.float32)
             mean = np.zeros((0, self._out_dim), np.float32)
             return mean, acq.UQResult(mean, zf, zf.copy(),
-                                      np.zeros(0, bool))
+                                      np.zeros(0, bool),
+                                      np.zeros(0, np.int32))
         uq = self.engine.score(rows, advance=self.advance,
                                stream=acq.STREAM_SERVE)
         self._out_dim = int(uq.mean.shape[-1])

@@ -47,6 +47,24 @@ from typing import Any, List, Optional, Sequence, Tuple
 import numpy as np
 
 
+class ServingRejected(RuntimeError):
+    """Base of the typed fast-fail rejections the queue can raise from
+    ``submit`` — callers distinguish "the service said no, retry later /
+    elsewhere" from a real engine error delivered through the Future."""
+
+
+class QueueOverloaded(ServingRejected):
+    """Load shedding: the pending backlog exceeds ``shed_pending`` rows.
+    Raised immediately instead of blocking the caller (degradation-aware
+    serving sheds excess traffic rather than growing tail latency)."""
+
+
+class CircuitOpen(ServingRejected):
+    """Circuit breaker: ``breaker_failures`` consecutive dispatch failures
+    opened the circuit; requests fail fast until the ``breaker_reset_s``
+    cooldown elapses and a half-open probe succeeds."""
+
+
 @dataclasses.dataclass(frozen=True)
 class QueueConfig:
     """Size-or-deadline dispatch trigger.
@@ -65,11 +83,26 @@ class QueueConfig:
                     backlog — and per-request latency — without bound).
                     A request larger than the bound is admitted once the
                     queue is empty.  0 disables (unbounded).
+    ``shed_pending`` load-shedding bound: when the backlog already holds
+                    this many rows, ``submit`` raises ``QueueOverloaded``
+                    immediately instead of blocking — the degradation-
+                    aware alternative to backpressure for callers that
+                    would rather fail fast than queue.  0 disables.
+    ``breaker_failures`` circuit breaker: after this many CONSECUTIVE
+                    dispatch failures the circuit opens and ``submit``
+                    raises ``CircuitOpen`` without enqueueing.  After
+                    ``breaker_reset_s`` the next request is admitted as a
+                    half-open probe; its dispatch closing cleanly closes
+                    the circuit, failing re-opens it.  0 disables.
+    ``breaker_reset_s`` open-state cooldown before the half-open probe.
     """
 
     max_batch: int = 64
     max_wait_ms: float = 2.0
     max_pending: int = 4096
+    shed_pending: int = 0
+    breaker_failures: int = 0
+    breaker_reset_s: float = 5.0
 
 
 class _Pending:
@@ -109,6 +142,13 @@ class ServingQueue:
         self._closed = False
         self.dispatches = 0
         self.batched_requests = 0
+        # circuit breaker + shedding state (under self._lock)
+        self._breaker_state = "closed"         # closed | open | half_open
+        self._consec_failures = 0
+        self._opened_at = 0.0
+        self.breaker_opens = 0
+        self.shed_requests = 0
+        self.dispatch_failures = 0
         self._worker = threading.Thread(
             target=self._run, name="serving-queue", daemon=True)
         self._worker.start()
@@ -130,6 +170,28 @@ class ServingQueue:
         fut: Future = Future()
         fut.set_running_or_notify_cancel()
         with self._cv:
+            # circuit breaker: fail fast while open; one request through
+            # as the half-open probe once the cooldown elapses
+            if self._breaker_state == "open":
+                if (time.monotonic() - self._opened_at
+                        < self.cfg.breaker_reset_s):
+                    if self.monitor is not None:
+                        self.monitor.incr("serve.rejected_circuit_open")
+                    raise CircuitOpen(
+                        f"serving circuit open after "
+                        f"{self._consec_failures} consecutive dispatch "
+                        f"failures (cooldown {self.cfg.breaker_reset_s}s)")
+                self._breaker_state = "half_open"
+            # load shedding: typed fast-fail instead of queueing when the
+            # backlog is already past the shed bound
+            shed = self.cfg.shed_pending
+            if shed > 0 and self._pending_rows >= shed:
+                self.shed_requests += 1
+                if self.monitor is not None:
+                    self.monitor.incr("serve.rejected_overload")
+                raise QueueOverloaded(
+                    f"serving backlog {self._pending_rows} rows >= "
+                    f"shed_pending {shed}")
             # backpressure: block while the backlog is at the bound (an
             # oversized request is admitted once the queue is empty, so it
             # can never wait forever)
@@ -235,19 +297,59 @@ class ServingQueue:
                 return          # no engine dispatch -> not a dispatch
             _, uq = self.server.predict(merged)
         except BaseException as e:  # noqa: BLE001 — deliver, don't die
+            self._note_dispatch_failure()
             for p in took:
                 p.future.set_exception(e)
             return
+        self._note_dispatch_success()
         self.dispatches += 1
         self.batched_requests += len(took)
         if self.monitor is not None:
             self.monitor.incr("serve.queue_dispatches")
             self.monitor.incr("serve.queue_batched_requests", len(took))
+        fin = uq.finite_members
         off = 0
         for p in took:
             n = len(p.rows)
             sl = slice(off, off + n)
             part = UQResult(uq.mean[sl], uq.scalar_std[sl],
-                            uq.component_std[sl], uq.mask[sl])
+                            uq.component_std[sl], uq.mask[sl],
+                            fin[sl] if fin is not None else None)
             p.future.set_result((part.mean, part))
             off += n
+
+    # ----------------------------------------------------- circuit breaker
+    def _note_dispatch_failure(self):
+        with self._lock:
+            self.dispatch_failures += 1
+            if self.cfg.breaker_failures <= 0:
+                return
+            self._consec_failures += 1
+            if (self._breaker_state == "half_open"
+                    or self._consec_failures >= self.cfg.breaker_failures):
+                if self._breaker_state != "open":
+                    self.breaker_opens += 1
+                    if self.monitor is not None:
+                        self.monitor.incr("serve.breaker_opens")
+                self._breaker_state = "open"
+                self._opened_at = time.monotonic()
+
+    def _note_dispatch_success(self):
+        with self._lock:
+            self._consec_failures = 0
+            if self._breaker_state != "closed":
+                self._breaker_state = "closed"
+
+    def health(self) -> dict:
+        """Degradation-aware serving health (surfaced in ``PAL.report()``):
+        breaker state plus the shed/failure counters that explain it."""
+        with self._lock:
+            return {
+                "breaker_state": self._breaker_state,
+                "consecutive_failures": self._consec_failures,
+                "breaker_opens": self.breaker_opens,
+                "dispatch_failures": self.dispatch_failures,
+                "shed_requests": self.shed_requests,
+                "pending_rows": self._pending_rows,
+                "dispatches": self.dispatches,
+            }

@@ -120,6 +120,10 @@ class CommitteeTrainer:
         self.steps_done = 0
         self.rounds = 0
         self._last_metrics: Optional[Dict[str, Any]] = None
+        # (K,) bool verdict of the last trained round's final step: False
+        # entries are members whose step was rolled back (non-finite loss
+        # or params) — the trainer-side quarantine signal
+        self.last_member_ok: Optional[np.ndarray] = None
         # round lock: serializes whole train() rounds (trainer loop vs
         # warm-start/consolidation callers)
         self._lock = threading.Lock()
@@ -149,10 +153,34 @@ class CommitteeTrainer:
         return jnp.tile(one[None], (self.size, 1))
 
     def _build_step(self):
+        def member_ok(new_state, loss):
+            """(K,) finite check for loss AND every post-update param leaf
+            — a NaN/Inf anywhere means that member's step diverged."""
+            ok = jnp.isfinite(loss)
+            for leaf in jax.tree.leaves(new_state.params):
+                ok = ok & jnp.all(
+                    jnp.isfinite(leaf), axis=tuple(range(1, leaf.ndim)))
+            return ok
+
         def fused(cstate, xb, yb, size, key):
             idx = self._draw_indices(key, size)             # (K, B)
             mb = {"x": xb[idx], "y": yb[idx]}               # (K, B, d) gather
-            return jax.vmap(self._member_step)(cstate, mb)
+            new_state, metrics = jax.vmap(self._member_step)(cstate, mb)
+            # per-member quarantine: a member whose step produced a
+            # non-finite loss or any non-finite parameter is rolled back to
+            # its pre-step state (params, Adam moments AND step counter) via
+            # jnp.where inside the SAME dispatch — healthy members advance,
+            # nothing extra crosses to host, no retrace
+            ok = member_ok(new_state, metrics["loss"])      # (K,)
+
+            def keep(new, old):
+                sel = ok.reshape((ok.shape[0],) + (1,) * (new.ndim - 1))
+                return jnp.where(sel, new, old)
+
+            rolled = jax.tree.map(keep, new_state, cstate)
+            metrics = dict(metrics)
+            metrics["member_ok"] = ok
+            return rolled, metrics
 
         kw: Dict[str, Any] = {}
         if self._donate:
@@ -228,7 +256,17 @@ class CommitteeTrainer:
             self._last_metrics = metrics
             if self.monitor is not None:
                 self.monitor.incr("train.fused_steps", done)
-        return jax.tree.map(np.asarray, metrics)
+        out = jax.tree.map(np.asarray, metrics)
+        # rollback accounting rides the round's existing host conversion —
+        # zero extra device syncs (the per-step mask never leaves the chip
+        # mid-round; only the final step's verdict is inspected here)
+        ok = out.get("member_ok") if isinstance(out, dict) else None
+        if ok is not None:
+            self.last_member_ok = np.asarray(ok, bool)
+            bad = int((~self.last_member_ok).sum())
+            if bad and self.monitor is not None:
+                self.monitor.incr("train.member_rollbacks", bad)
+        return out
 
     # ------------------------------------------------------------- weights
     @property
@@ -247,6 +285,26 @@ class CommitteeTrainer:
                 return self.cstate.params
             return jax.tree.map(lambda a: jnp.array(a, copy=True),
                                 self.cstate.params)
+
+    def poison_member(self, i: int):
+        """Chaos/test hook: overwrite member ``i``'s parameters with NaN —
+        the observable signature of a diverged member.  Downstream, the
+        fused step's per-member quarantine rolls back every subsequent
+        update for that member (it stays NaN, never contaminating the
+        others) and the acquisition kernel's degraded-K statistics exclude
+        it from scoring once the poisoned weights publish."""
+        if not 0 <= int(i) < self.size:
+            raise ValueError(f"member index {i} out of range 0..{self.size - 1}")
+        with self._state_lock:
+            onehot = jnp.arange(self.size) == int(i)
+            params = jax.tree.map(
+                lambda leaf: jnp.where(
+                    onehot.reshape((self.size,) + (1,) * (leaf.ndim - 1)),
+                    jnp.nan, leaf),
+                self.cstate.params)
+            self.cstate = self.cstate._replace(params=params)
+        if self.monitor is not None:
+            self.monitor.incr("train.members_poisoned")
 
     # ---------------------------------------------------------- checkpoint
     def state_dict(self) -> Dict[str, Any]:

@@ -463,10 +463,11 @@ def test_exchange_with_custom_rule_stays_single_dispatch():
         ex.step()
     # top-fraction cap: exactly round(0.5 * 6) = 3 queued per step
     assert len(obuf) == 3 * steps
-    # device->host bytes per step == the padded (mean, sstd, cstd, mask)
-    # arrays only: nb*(d*4 + 4 + 4 + 1) — nothing K-sized ever crosses
+    # device->host bytes per step == the padded (mean, sstd, cstd, mask,
+    # finite_members) arrays only: nb*(d*4 + 4 + 4 + 1 + 4) — nothing
+    # K-sized ever crosses
     nb = 8
-    expected = steps * nb * (OUT_DIM * 4 + 4 + 4 + 1)
+    expected = steps * nb * (OUT_DIM * 4 + 4 + 4 + 1 + 4)
     assert eng.bytes_to_host == expected
     # dynamic_oracle_list on the SAME engine: stacked predict_all must
     # never be touched (the pool has no members — it would raise)

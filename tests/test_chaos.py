@@ -1,0 +1,437 @@
+"""Supervised fault-tolerant runtime under deterministic chaos (ISSUE 6).
+
+* ``ChaosInjector``/``FaultPlan``: deterministic per-(site, rank) firing,
+  exactly-once events, label corruption, the transport hook.
+* ``Supervisor``: crashed-loop restart with backoff, escalation to a
+  StopToken only past the crash budget, supervise=False fail-stop parity.
+* PAL integration (legacy toy kernels): transient oracle faults absorbed
+  by in-place task retries, oracle/trainer crash -> restart, NaN labels
+  rejected and relabeled, the full acceptance FaultPlan surviving
+  end-to-end without a StopToken.
+* PAL integration (fused committee): the acceptance plan incl. a
+  NaN-weights member — the poisoned member is quarantined (degraded-K
+  UQ), scoring stays ONE dispatch per shape bucket, and the run still
+  ends on the generator's own stop criterion.
+* Autosave: checkpoint_every_iters cadence, and restore falling back
+  past a corrupted (kill-during-write) newest snapshot.
+"""
+import glob
+import os
+import tempfile
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.configs.pal_potential import PALRunConfig
+from repro.core import CommitteeSpec, PAL
+from repro.core import committee as cmte
+from repro.core.chaos import (
+    ChaosCrash, ChaosFault, ChaosInjector, FaultEvent, FaultPlan,
+)
+from repro.core.supervisor import FailurePolicy, Supervisor
+from repro.core.transport import Channel, install_chaos, uninstall_chaos
+
+from test_committee_trainer import (
+    K as CK, _apply, _loss, _members, _Gene as FusedGene, _Oracle as FusedOracle,
+)
+from test_pal_runtime import ToyGene, ToyModel, ToyOracle
+
+
+# ---------------------------------------------------------------------------
+# injector semantics
+# ---------------------------------------------------------------------------
+
+
+def test_injector_fires_deterministically_and_exactly_once():
+    plan = FaultPlan(events=(
+        FaultEvent("oracle.task", 2, "raise", rank="oracle0"),
+        FaultEvent("oracle.task", 2, "raise", rank="oracle1"),
+        FaultEvent("oracle.loop", 3, "crash"),
+    ))
+    for _ in range(2):                       # same plan => same sequence
+        inj = ChaosInjector(plan)
+        fired = []
+        for i in range(4):
+            for rank in ("oracle0", "oracle1"):
+                try:
+                    inj.check("oracle.task", rank=rank)
+                except ChaosFault:
+                    fired.append((rank, i))
+        for i in range(5):
+            try:
+                inj.check("oracle.loop", rank="oracle0")
+            except ChaosCrash:
+                fired.append(("loop", i))
+        assert fired == [("oracle0", 1), ("oracle1", 1), ("loop", 2)]
+        assert len(inj.fired) == 3
+        assert inj.summary() == [
+            "oracle.task:oracle0:raise@2",
+            "oracle.task:oracle1:raise@2",
+            "oracle.loop:oracle0:crash@3",
+        ]
+
+
+def test_injector_counters_survive_restarts():
+    """'nth call' counts over the campaign: a restarted loop continues its
+    predecessor's count instead of resetting (so one plan cannot fire the
+    same event once per incarnation)."""
+    inj = ChaosInjector(FaultPlan(events=(
+        FaultEvent("oracle.loop", 3, "crash", rank="w0"),)))
+    inj.check("oracle.loop", rank="w0")      # incarnation 1: calls 1..2
+    inj.check("oracle.loop", rank="w0")
+    with pytest.raises(ChaosCrash):          # incarnation 2 first call = 3rd
+        inj.check("oracle.loop", rank="w0")
+    for _ in range(5):
+        inj.check("oracle.loop", rank="w0")  # never fires again
+
+
+def test_injector_nan_label_and_take():
+    inj = ChaosInjector(FaultPlan(events=(
+        FaultEvent("oracle.label", 2, "nan_label"),
+        FaultEvent("trainer.nan_member", 1, "nan_member", arg=2.0),
+    )))
+    lab = np.ones(3, np.float32)
+    assert np.isfinite(inj.corrupt_label(lab)).all()     # 1st call: clean
+    bad = inj.corrupt_label(lab)                         # 2nd call: corrupted
+    assert np.isnan(bad).all()
+    assert np.isfinite(lab).all()                        # original untouched
+    ev = inj.take("trainer.nan_member")
+    assert ev is not None and int(ev.arg) == 2
+    assert inj.take("trainer.nan_member") is None        # consumed
+
+
+def test_injector_delay_sleeps():
+    inj = ChaosInjector(FaultPlan(events=(
+        FaultEvent("exchange.loop", 1, "delay", arg=0.05),)))
+    t0 = time.perf_counter()
+    inj.check("exchange.loop")
+    assert time.perf_counter() - t0 >= 0.04
+
+
+def test_transport_send_chaos_site():
+    inj = ChaosInjector(FaultPlan(events=(
+        FaultEvent("transport.send", 2, "raise", rank="jobs:w0"),)))
+    install_chaos(inj)
+    try:
+        ch = Channel("jobs:w0")
+        other = Channel("jobs:w1")
+        ch.isend(1)
+        other.isend(1)                       # different rank: not counted
+        with pytest.raises(ChaosFault):
+            ch.isend(2)
+        ch.isend(3)                          # consumed: sends flow again
+    finally:
+        uninstall_chaos()
+    assert Channel("jobs:w0").isend(4) is not None   # hook removed
+
+
+# ---------------------------------------------------------------------------
+# supervisor semantics
+# ---------------------------------------------------------------------------
+
+
+class _Mon:
+    def __init__(self):
+        self.c = {}
+
+    def incr(self, k, n=1):
+        self.c[k] = self.c.get(k, 0) + n
+
+
+def _supervisor(max_crashes=3, **kw):
+    mon = _Mon()
+    stops = []
+    sup = Supervisor(mon, lambda n, r: stops.append((n, r)),
+                     threading.Event(),
+                     policies={"default": FailurePolicy(
+                         max_crashes=max_crashes,
+                         restart_backoff_s=0.001, **kw)})
+    return sup, mon, stops
+
+
+def test_supervisor_restarts_crashed_loop_in_place():
+    sup, mon, stops = _supervisor()
+    calls = {"n": 0}
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise RuntimeError(f"boom {calls['n']}")
+
+    sup.run("w0", "oracle", flaky)
+    assert calls["n"] == 3 and stops == []
+    assert mon.c["runtime.thread_crashes"] == 2
+    assert mon.c["runtime.thread_restarts"] == 2
+    assert sup.total_restarts() == 2
+    assert sup.last_fault.thread == "w0"
+    assert "boom 2" in sup.last_fault.error
+
+
+def test_supervisor_escalates_past_crash_budget():
+    sup, mon, stops = _supervisor(max_crashes=2)
+    calls = {"n": 0}
+
+    def doomed():
+        calls["n"] += 1
+        raise RuntimeError("dead")
+
+    sup.run("w1", "oracle", doomed)
+    assert calls["n"] == 2                   # budget spent, no 3rd attempt
+    assert stops and stops[0][0] == "w1"
+    assert "max_crashes=2" in stops[0][1]
+    assert mon.c["supervisor.escalations"] == 1
+    assert mon.c["supervisor.crashes.oracle"] == 2
+
+
+def test_supervisor_max_crashes_one_is_fail_stop():
+    sup, mon, stops = _supervisor(max_crashes=1)
+    sup.run("w2", "oracle", lambda: (_ for _ in ()).throw(ValueError("x")))
+    assert len(stops) == 1
+    assert mon.c.get("runtime.thread_restarts", 0) == 0
+
+
+def test_supervisor_on_crash_and_should_stop():
+    sup, mon, stops = _supervisor()
+    cleaned = []
+    private = threading.Event()
+
+    def crash_then_signal():
+        if not cleaned:
+            raise RuntimeError("first")
+        private.set()                        # second incarnation: stop loop
+        raise RuntimeError("second")
+
+    sup.run("w3", "oracle", crash_then_signal,
+            on_crash=lambda e: cleaned.append(repr(e)),
+            should_stop=private.is_set)
+    assert cleaned == ["RuntimeError('first')", "RuntimeError('second')"]
+    assert stops == []                       # stopped, not escalated
+
+
+def test_backoff_delay_grows_and_caps():
+    sup, _, _ = _supervisor()
+    pol = FailurePolicy(task_backoff_s=0.1, backoff_factor=2.0,
+                        backoff_max_s=0.5, jitter=0.0)
+    delays = [sup.backoff_delay(pol, a) for a in range(5)]
+    assert delays == pytest.approx([0.1, 0.2, 0.4, 0.5, 0.5])
+
+
+# ---------------------------------------------------------------------------
+# PAL integration (legacy toy kernels — no jax on the hot path)
+# ---------------------------------------------------------------------------
+
+
+def _pal(tmp, chaos=None, limit=150, resume=False, **kw):
+    base = dict(result_dir=tmp, gene_process=4, orcl_process=3,
+                pred_process=2, ml_process=2, retrain_size=8,
+                std_threshold=0.05, patience=3,
+                loop_restart_backoff_s=0.01, oracle_task_backoff_s=0.002)
+    base.update(kw)
+    return PAL(PALRunConfig(**base),
+               make_generator=lambda r, d: ToyGene(r, d, limit=limit),
+               make_model=ToyModel, make_oracle=ToyOracle,
+               chaos=chaos, resume=resume)
+
+
+def test_transient_oracle_faults_retry_in_place():
+    """raise-kind faults at oracle.task are absorbed by per-task retries:
+    no task failure reaches the Manager, no thread crashes, the run
+    completes on the generator's own stop criterion."""
+    plan = FaultPlan(events=(
+        FaultEvent("oracle.task", 1, "raise", rank="oracle0"),
+        FaultEvent("oracle.task", 2, "raise", rank="oracle1"),
+    ))
+    pal = _pal(tempfile.mkdtemp(), chaos=plan)
+    tok = pal.run(timeout=60)
+    rep = pal.report()
+    assert "generator" in tok.origin
+    c = rep["counters"]
+    assert c.get("oracle.task_retries", 0) == 2
+    assert c.get("oracle.task_failures_reported", 0) == 0
+    assert c.get("runtime.thread_crashes", 0) == 0
+    assert rep["labeled_total"] > 0
+
+
+def test_oracle_crash_restarts_worker_and_run_survives():
+    plan = FaultPlan(events=(
+        FaultEvent("oracle.loop", 4, "crash", rank="oracle1"),))
+    pal = _pal(tempfile.mkdtemp(), chaos=plan)
+    tok = pal.run(timeout=60)
+    rep = pal.report()
+    assert "generator" in tok.origin                 # crash absorbed
+    assert rep["thread_restarts"] == 1
+    assert rep["last_fault"]["thread"] == "oracle1"
+    assert rep["last_fault"]["loop_class"] == "oracle"
+    assert "ChaosCrash" in rep["last_fault"]["error"]
+    assert rep["labeled_total"] > 0
+    assert rep["counters"].get("supervisor.escalations", 0) == 0
+
+
+def test_trainer_crash_restarts_and_training_continues():
+    plan = FaultPlan(events=(FaultEvent("trainer.loop", 1, "crash"),))
+    pal = _pal(tempfile.mkdtemp(), chaos=plan)
+    tok = pal.run(timeout=60)
+    rep = pal.report()
+    assert "generator" in tok.origin
+    assert rep["thread_restarts"] >= 1
+    assert rep["counters"]["train.retrains"] > 0     # trained after restart
+
+
+def test_supervise_false_reproduces_fail_stop():
+    plan = FaultPlan(events=(
+        FaultEvent("oracle.loop", 2, "crash", rank="oracle0"),))
+    pal = _pal(tempfile.mkdtemp(), chaos=plan, supervise=False,
+               limit=10 ** 9)
+    tok = pal.run(timeout=60)
+    rep = pal.report()
+    assert tok.origin == "oracle0"                   # first crash stops all
+    assert rep["thread_restarts"] == 0
+    assert rep["counters"]["supervisor.escalations"] == 1
+
+
+def test_escalation_after_repeated_crashes():
+    plan = FaultPlan(events=tuple(
+        FaultEvent("oracle.loop", n, "crash", rank="oracle0")
+        for n in (1, 2, 3)))
+    pal = _pal(tempfile.mkdtemp(), chaos=plan, loop_max_crashes=3,
+               limit=10 ** 9)
+    tok = pal.run(timeout=60)
+    rep = pal.report()
+    assert tok.origin == "oracle0"
+    assert "max_crashes=3" in tok.reason
+    assert rep["counters"]["supervisor.escalations"] == 1
+    assert rep["thread_restarts"] == 2               # restarts 1 and 2 only
+
+
+def test_nan_labels_rejected_and_relabeled():
+    plan = FaultPlan(events=(FaultEvent("oracle.label", 2, "nan_label"),))
+    pal = _pal(tempfile.mkdtemp(), chaos=plan)
+    tok = pal.run(timeout=60)
+    rep = pal.report()
+    assert "generator" in tok.origin
+    assert rep["counters"].get("oracle.nonfinite_labels", 0) == 1
+    # nothing non-finite is sitting in the training buffer
+    for inp, lab in pal.train_buffer.snapshot():
+        assert np.isfinite(np.asarray(lab)).all()
+    assert rep["labeled_total"] > 0
+
+
+def test_acceptance_plan_completes_without_stop_token():
+    """The ISSUE-6 acceptance sequence on the legacy toy runtime: 3
+    transient oracle failures + 1 oracle crash + 1 trainer crash, all
+    absorbed — the run ends on the generator stop criterion with healthy
+    labeled throughput and zero escalations."""
+    pal = _pal(tempfile.mkdtemp(), chaos=FaultPlan.acceptance())
+    tok = pal.run(timeout=90)
+    rep = pal.report()
+    assert "generator" in tok.origin, tok
+    assert rep["counters"].get("supervisor.escalations", 0) == 0
+    assert rep["thread_restarts"] == 2               # oracle + trainer
+    fired = rep["chaos_fired"]
+    assert sum(":raise@" in f for f in fired) == 3
+    assert sum(":crash@" in f for f in fired) == 2
+    assert rep["labeled_total"] > 0
+
+
+# ---------------------------------------------------------------------------
+# PAL integration (fused committee: quarantine + single-dispatch acceptance)
+# ---------------------------------------------------------------------------
+
+
+def test_fused_acceptance_quarantines_member_in_one_dispatch():
+    """The full acceptance plan against the fused-committee runtime: the
+    nan_member event poisons member 1 mid-campaign.  The run must (a)
+    finish on the generator stop criterion, (b) score every subsequent
+    round with the poisoned member quarantined (degraded K-1 committee),
+    (c) keep scoring in ONE fused dispatch per shape bucket — no
+    quarantine-induced retraces — and (d) fire all six planned events."""
+    class _SlowGene(FusedGene):
+        # stretch the campaign past the first train round's jit compile so
+        # the trainer reaches round 2 (the scheduled crash) and round 3
+        # (post-restart training) before the generators exhaust
+        def generate_new_data(self, data_to_gene):
+            stop, x = super().generate_new_data(data_to_gene)
+            time.sleep(0.005)
+            return stop, x
+
+    tmp = tempfile.mkdtemp()
+    cfg = PALRunConfig(
+        result_dir=tmp, gene_process=4, orcl_process=2, pred_process=1,
+        ml_process=3, retrain_size=6, std_threshold=0.05, patience=3,
+        train_steps=20, train_batch=8, train_lr=1e-2,
+        train_replay_capacity=128,
+        loop_restart_backoff_s=0.01, oracle_task_backoff_s=0.002)
+    pal = PAL(cfg, make_generator=lambda r, d: _SlowGene(r, d, limit=600),
+              make_oracle=FusedOracle,
+              committee=CommitteeSpec(_apply, cmte.stack_members(_members())),
+              loss_fn=_loss, chaos=FaultPlan.acceptance(member=1))
+    tok = pal.run(timeout=120)
+    rep = pal.report()
+    assert "generator" in tok.origin, tok
+    assert rep["counters"].get("supervisor.escalations", 0) == 0
+    assert len(rep["chaos_fired"]) == 6              # incl. nan_member
+    assert rep["counters"]["train.members_poisoned"] == 1
+    assert rep["counters"].get("train.member_rollbacks", 0) >= 1
+    # degraded-K quarantine: the poisoned member never counts again
+    assert rep["uq_finite_members_min"] == CK - 1
+    assert rep["uq_quarantine_rounds"] > 0
+    # acceptance: quarantined scoring stayed ONE fused dispatch per bucket
+    assert pal.engine.trace_counts, "fused engine never dispatched"
+    assert all(v == 1 for v in pal.engine.trace_counts.values()), \
+        pal.engine.trace_counts
+    assert rep["labeled_total"] > 0
+
+
+# ---------------------------------------------------------------------------
+# autosave + crash-kill-restore
+# ---------------------------------------------------------------------------
+
+
+def test_autosave_every_iters():
+    tmp = tempfile.mkdtemp()
+    pal = _pal(tmp, checkpoint_every_iters=10)
+    tok = pal.run(timeout=60)
+    assert "generator" in tok.origin
+    assert pal.checkpointer.saves >= 2               # periodic, not one-shot
+    assert glob.glob(os.path.join(tmp, "al_state_*.pkl"))
+    # a fresh runtime resumes from the autosaved state
+    pal2 = _pal(tmp, resume=True)
+    assert pal2.exchange.iteration > 0
+    assert pal2.monitor.count("runtime.restores") == 1
+
+
+def test_kill_during_autosave_restores_latest_intact_snapshot():
+    """A kill mid-checkpoint can leave a truncated newest snapshot (or a
+    stray writer tmp file).  Restore must fall back to the newest INTACT
+    snapshot and continue mid-schedule from it — never die, never start
+    from scratch."""
+    tmp = tempfile.mkdtemp()
+    pal = _pal(tmp)
+    pal.exchange.iteration = 40
+    pal.checkpoint()                                 # intact snapshot @40
+    pal.exchange.iteration = 50
+    path_newest = pal.checkpoint()                   # snapshot @50 ...
+    with open(path_newest, "r+b") as fh:             # ... truncated by a kill
+        fh.truncate(max(os.path.getsize(path_newest) // 3, 1))
+    # a stray half-written tmp file from the killed writer is ignored too
+    with open(os.path.join(tmp, ".alckpt_dead"), "wb") as fh:
+        fh.write(b"\x00garbage")
+
+    pal2 = _pal(tmp, resume=True)
+    assert pal2.checkpointer.corrupt_skipped == 1
+    assert pal2.exchange.iteration == 40             # mid-schedule, intact
+    assert pal2.monitor.count("runtime.restores") == 1
+
+
+def test_restore_skips_all_corrupt_snapshots_without_dying():
+    tmp = tempfile.mkdtemp()
+    for step in (1, 2):
+        with open(os.path.join(tmp, f"al_state_{step:08d}.pkl"),
+                  "wb") as fh:
+            fh.write(b"not a pickle")
+    pal = _pal(tmp, resume=True)                     # no crash, no restore
+    assert pal.checkpointer.corrupt_skipped == 2
+    assert pal.monitor.count("runtime.restores") == 0
+    assert pal.exchange.iteration == 0

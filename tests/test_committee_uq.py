@@ -34,8 +34,8 @@ def test_committee_uq_xla_vs_pallas_interpret(K, n, d):
     rng = np.random.RandomState(0)
     preds = jnp.asarray(rng.randn(K, n, d).astype(np.float32))
     t = 0.8
-    mx, sx, cx, kx = ops.committee_uq(preds, t, impl="xla")
-    mp, sp, cp, kp = ops.committee_uq(preds, t, impl="pallas_interpret")
+    mx, sx, cx, kx, fx = ops.committee_uq(preds, t, impl="xla")
+    mp, sp, cp, kp, fp = ops.committee_uq(preds, t, impl="pallas_interpret")
     np.testing.assert_allclose(np.asarray(mp), np.asarray(mx),
                                rtol=1e-5, atol=1e-6)
     np.testing.assert_allclose(np.asarray(sp), np.asarray(sx),
@@ -43,8 +43,10 @@ def test_committee_uq_xla_vs_pallas_interpret(K, n, d):
     np.testing.assert_allclose(np.asarray(cp), np.asarray(cx),
                                rtol=1e-4, atol=1e-6)
     np.testing.assert_array_equal(np.asarray(kp), np.asarray(kx))
+    np.testing.assert_array_equal(np.asarray(fp), np.asarray(fx))
+    assert (np.asarray(fx) == K).all()        # all-finite inputs
     assert mx.shape == (n, d) and sx.shape == (n,)
-    assert cx.shape == (n,) and kx.shape == (n,)
+    assert cx.shape == (n,) and kx.shape == (n,) and fx.shape == (n,)
 
 
 @pytest.mark.parametrize("impl", ["xla", "pallas_interpret"])
@@ -53,8 +55,8 @@ def test_committee_uq_matches_numpy_ddof1(impl):
     K, n, d = 6, 24, 3
     preds = rng.randn(K, n, d).astype(np.float32)
     t = 0.7
-    mean, sstd, cstd, mask = ops.committee_uq(jnp.asarray(preds), t,
-                                              impl=impl)
+    mean, sstd, cstd, mask, _ = ops.committee_uq(jnp.asarray(preds), t,
+                                                 impl=impl)
     std64 = preds.astype(np.float64).std(axis=0, ddof=1)
     want_sstd = std64.max(axis=-1)
     want_cstd = std64.mean(axis=-1)
@@ -72,7 +74,8 @@ def test_committee_uq_k1_zero_std(impl):
     """A single-member committee has zero disagreement by definition."""
     preds = jnp.asarray(np.random.RandomState(2).randn(1, 16, 4)
                         .astype(np.float32))
-    mean, sstd, cstd, mask = ops.committee_uq(preds, 1e-9, impl=impl)
+    mean, sstd, cstd, mask, finite = ops.committee_uq(preds, 1e-9, impl=impl)
+    assert (np.asarray(finite) == 1).all()
     np.testing.assert_allclose(np.asarray(mean), np.asarray(preds[0]),
                                rtol=1e-6)
     assert (np.asarray(sstd) == 0).all()
@@ -85,9 +88,100 @@ def test_committee_uq_mask_equals_anycomponent_semantics():
     rng = np.random.RandomState(3)
     preds = rng.randn(5, 20, 6).astype(np.float32)
     t = 0.9
-    _, _, _, mask = ops.committee_uq(jnp.asarray(preds), t, impl="xla")
+    _, _, _, mask, _ = ops.committee_uq(jnp.asarray(preds), t, impl="xla")
     want = (preds.std(axis=0, ddof=1) > t).any(axis=-1)
     np.testing.assert_array_equal(np.asarray(mask), want)
+
+
+# ---------------------------------------------------------------------------
+# member quarantine: degraded-K statistics inside the same pass
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("impl", ["xla", "pallas_interpret"])
+def test_committee_uq_quarantines_nonfinite_members(impl):
+    """A member with ANY non-finite component in a row is excluded from
+    that row's statistics; the remaining members produce exact degraded-K
+    mean/std and the finite count reports the degradation."""
+    rng = np.random.RandomState(7)
+    K, n, d = 5, 40, 3
+    preds = rng.randn(K, n, d).astype(np.float32)
+    bad = preds.copy()
+    bad[2, :10] = np.nan            # member 2 diverged on rows 0..9
+    bad[4, 10, 1] = np.inf          # member 4: one bad component on row 10
+    t = 0.5
+    m, s, c, k, f = (np.asarray(o) for o in ops.committee_uq(
+        jnp.asarray(bad), t, impl=impl))
+    want_f = np.full(n, K, np.int32)
+    want_f[:11] = K - 1
+    np.testing.assert_array_equal(f, want_f)
+    assert np.isfinite(m).all() and np.isfinite(s).all()
+    keep = preds[[0, 1, 3, 4]]      # the finite members on rows 0..9
+    std64 = keep[:, :10].astype(np.float64).std(axis=0, ddof=1)
+    np.testing.assert_allclose(m[:10], keep[:, :10].mean(axis=0),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(s[:10], std64.max(axis=-1),
+                               rtol=1e-4, atol=1e-6)
+    np.testing.assert_allclose(c[:10], std64.mean(axis=-1),
+                               rtol=1e-4, atol=1e-6)
+    # untouched rows: bit-identical to the all-finite committee
+    ref_out = [np.asarray(o) for o in ops.committee_uq(
+        jnp.asarray(preds), t, impl=impl)]
+    np.testing.assert_array_equal(m[11:], ref_out[0][11:])
+    np.testing.assert_array_equal(s[11:], ref_out[1][11:])
+
+
+@pytest.mark.parametrize("impl", ["xla", "pallas_interpret"])
+def test_committee_uq_zero_and_one_finite_member_rows(impl):
+    """cnt < 2 rows have std 0 (disagreement unmeasurable); cnt == 0 rows
+    are force-unselected however low the threshold."""
+    rng = np.random.RandomState(8)
+    preds = rng.randn(4, 12, 2).astype(np.float32)
+    preds[:, 3] = np.nan            # row 3: no finite member at all
+    preds[1:, 5] = np.nan           # row 5: exactly one finite member
+    m, s, c, k, f = (np.asarray(o) for o in ops.committee_uq(
+        jnp.asarray(preds), 0.0, impl=impl))
+    assert f[3] == 0 and f[5] == 1
+    assert s[3] == 0 and s[5] == 0 and np.isfinite(m).all()
+    assert not k[3]                 # zero finite members -> never selected
+    np.testing.assert_allclose(m[5], preds[0, 5], rtol=1e-6)
+
+
+def test_committee_uq_allfinite_bit_identical_to_unmasked_welford():
+    """The masked Welford recurrence degenerates to the historical unmasked
+    one when every member is finite — same compiled math, not merely
+    allclose."""
+    rng = np.random.RandomState(9)
+    preds = jnp.asarray(rng.randn(6, 32, 4).astype(np.float32))
+    m, s, c, k, f = ops.committee_uq(preds, 0.4, impl="pallas_interpret")
+    p64 = np.asarray(preds)
+    assert (np.asarray(f) == 6).all()
+    np.testing.assert_allclose(np.asarray(m), p64.mean(axis=0),
+                               rtol=1e-6, atol=1e-7)
+
+
+def test_fused_engine_reports_finite_members_single_dispatch():
+    """Quarantined-member scoring stays ONE fused dispatch per bucket: a
+    poisoned member changes trace_counts not at all, and UQResult carries
+    the finite count."""
+    members, cparams, apply_fn = _mlp()
+    eng = acq.FusedEngine(apply_fn, cparams, 0.3, impl="xla")
+    rng = np.random.RandomState(11)
+    gen = lambda n: [rng.randn(6).astype(np.float32) for _ in range(n)]
+    uq = eng.score(gen(8))
+    assert uq.finite_members is not None
+    assert (uq.finite_members == 4).all()
+    assert eng.last_finite_min == 4 and eng.quarantine_rounds == 0
+    # poison member 1's weights -> every row scores with K-1 finite members
+    import jax as _jax
+    poisoned = _jax.tree.map(
+        lambda l: l.at[1].set(jnp.nan), eng.cparams)
+    eng.cparams = poisoned
+    uq2 = eng.score(gen(8))
+    assert (uq2.finite_members == 3).all()
+    assert np.isfinite(uq2.mean).all() and np.isfinite(uq2.scalar_std).all()
+    assert eng.last_finite_min == 3 and eng.quarantine_rounds == 1
+    assert eng.trace_counts == {8: 1}          # no retrace, no extra dispatch
 
 
 # ---------------------------------------------------------------------------
@@ -151,7 +245,7 @@ def test_selection_from_uq_equals_prediction_check():
     preds = rng.randn(5, 12, 3)
     t = 0.8
     legacy = sel.prediction_check(inputs, preds, t)
-    mean, sstd, cstd, mask = ops.committee_uq(
+    mean, sstd, cstd, mask, _ = ops.committee_uq(
         jnp.asarray(preds, dtype=jnp.float32), t, impl="xla")
     uq = acq.UQResult(np.asarray(mean), np.asarray(sstd), np.asarray(cstd),
                       np.asarray(mask))

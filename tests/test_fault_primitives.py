@@ -1,0 +1,284 @@
+"""Timing-edge and concurrency property tests for the fault primitives
+(core/fault.py) plus the Manager's late-straggler dedupe path (ISSUE 6
+satellite): Heartbeat max_misses boundary and zero interval, TaskLedger
+timeout=0 and retry-exhaustion ordering, ElasticPool add/remove under
+concurrent dispatch, and the requeue->both-results-arrive sequence that
+used to waste (or could double-count) a perfectly good late label.
+"""
+import threading
+import time
+
+import numpy as np
+
+from repro.core.buffers import OracleInputBuffer, TrainingDataBuffer
+from repro.core.controller import (
+    Manager, ManagerConfig, OracleTaskFailure, _payload_fp,
+)
+from repro.core.fault import ElasticPool, Heartbeat, TaskLedger
+from repro.core.transport import Channel
+
+
+# ---------------------------------------------------------------------------
+# Heartbeat timing edges
+# ---------------------------------------------------------------------------
+
+
+def test_heartbeat_max_misses_boundary():
+    """Death is STRICTLY past interval*max_misses: at (or just under) the
+    boundary the worker is still alive; only beyond it is it dead."""
+    hb = Heartbeat(interval=0.2, max_misses=2)       # dead after >0.4s
+    hb.beat("w0")
+    time.sleep(0.05)
+    assert hb.dead_workers() == [] and not hb.is_dead("w0")
+    time.sleep(0.45)                                 # well past the boundary
+    assert hb.dead_workers() == ["w0"]
+    assert hb.dead_workers() == []                   # reported once, stays dead
+    assert hb.is_dead("w0")
+
+
+def test_heartbeat_zero_interval_marks_dead_immediately():
+    """interval=0: any elapsed time at all exceeds 0*max_misses — the next
+    sweep declares the worker dead (degenerate config must not divide or
+    hang, just behave as 'always expired')."""
+    hb = Heartbeat(interval=0.0, max_misses=3)
+    hb.beat("w0")
+    time.sleep(0.001)
+    assert hb.dead_workers() == ["w0"]
+    hb.beat("w0")                                    # resurrection still works
+    assert not hb.is_dead("w0")
+
+
+def test_heartbeat_forget_removes_all_state():
+    hb = Heartbeat(interval=0.0)
+    hb.beat("w0")
+    time.sleep(0.001)
+    assert hb.dead_workers() == ["w0"]
+    hb.forget("w0")
+    assert not hb.is_dead("w0")
+    assert hb.dead_workers() == []                   # no resurrected ghost
+
+
+# ---------------------------------------------------------------------------
+# TaskLedger timing edges
+# ---------------------------------------------------------------------------
+
+
+def test_task_ledger_zero_timeout_expires_on_first_sweep():
+    led = TaskLedger(timeout=0.0, max_retries=1)
+    tid = led.dispatch("p", "w0")
+    time.sleep(0.001)
+    exp = led.expired()
+    assert [t.task_id for t in exp] == [tid]
+    assert led.inflight_count() == 0
+    assert led.complete(tid) is None                 # straggler detected
+
+
+def test_task_ledger_retry_exhaustion_ordering():
+    """Tasks cycle requeue->redispatch until retries are spent, then land in
+    ``failed`` — in expiry order, never both requeued and failed."""
+    led = TaskLedger(timeout=0.0, max_retries=1)
+    led.dispatch("a", "w0")
+    led.dispatch("b", "w0")
+    time.sleep(0.001)
+    first = led.expired()
+    assert sorted(t.payload for t in first) == ["a", "b"]
+    assert led.failed == [] and led.requeued == 2
+    for t in first:                                  # last allowed attempt
+        led.dispatch(t.payload, "w1", retries=t.retries + 1)
+    time.sleep(0.001)
+    assert led.expired() == []                       # exhausted -> failed
+    assert sorted(t.payload for t in led.failed) == ["a", "b"]
+    assert all(t.retries == 1 for t in led.failed)
+    assert led.requeued == 2                         # failure isn't a requeue
+
+
+def test_task_ledger_fail_records_reported_failures():
+    led = TaskLedger(timeout=10.0, max_retries=0)
+    tid = led.dispatch("p", "w0")
+    t = led.complete(tid)
+    led.fail(t)
+    assert led.failed == [t]
+    assert led.inflight_count() == 0
+
+
+# ---------------------------------------------------------------------------
+# ElasticPool under concurrent resize
+# ---------------------------------------------------------------------------
+
+
+def test_elastic_pool_concurrent_add_remove():
+    """Racing add/remove/shrink from multiple threads never wedges the pool,
+    loses a stop event, or leaves threads running after shutdown."""
+    started, stopped = [], []
+    lock = threading.Lock()
+
+    def worker(rank, stop):
+        with lock:
+            started.append(rank)
+        stop.wait(10)
+        with lock:
+            stopped.append(rank)
+
+    pool = ElasticPool("w", worker)
+
+    def adder():
+        for _ in range(5):
+            pool.add(2)
+
+    def remover():
+        for _ in range(8):
+            ranks = pool.ranks()
+            if ranks:
+                pool.remove(ranks[0], join=False)
+            time.sleep(0.001)
+
+    threads = [threading.Thread(target=adder) for _ in range(2)] + \
+              [threading.Thread(target=remover) for _ in range(2)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(10)
+    assert pool.size() == len(pool.ranks())
+    pool.shutdown(timeout=10)
+    assert pool.size() == 0
+    deadline = time.time() + 5
+    while len(stopped) < len(started) and time.time() < deadline:
+        time.sleep(0.01)
+    assert sorted(stopped) == sorted(started)        # every worker exited
+
+
+# ---------------------------------------------------------------------------
+# Manager late-straggler dedupe (satellite: duplicate-label path)
+# ---------------------------------------------------------------------------
+
+
+def _mgr(timeout=0.03):
+    obuf = OracleInputBuffer()
+    tbuf = TrainingDataBuffer(retrain_size=100)
+    mgr = Manager(obuf, tbuf, [Channel("t0")],
+                  ManagerConfig(retrain_size=100, oracle_timeout=timeout,
+                                max_oracle_retries=2,
+                                heartbeat_interval=10.0))
+    return mgr, obuf, tbuf
+
+
+def test_dedupe_twin_delivers_first_then_straggler_dropped():
+    """timeout -> requeue -> twin labels it -> the ORIGINAL result finally
+    arrives: exactly one training row, straggler counted as duplicate."""
+    mgr, obuf, tbuf = _mgr()
+    slow = mgr.register_oracle("slow")
+    x = np.full(3, 1.5, np.float32)
+    obuf.put([x])
+    mgr.step()                                        # dispatch tid0
+    tid0, p0 = slow.jobs.recv()                       # worker starts... slowly
+    time.sleep(0.05)                                  # expire the deadline
+    mgr.step()                                        # requeue + redispatch
+    tid1, p1 = slow.jobs.recv()
+    assert tid1 != tid0
+    slow.results.isend((tid1, p1, p1 * 2.0))          # twin finishes FIRST
+    mgr._collect_results()
+    assert tbuf.total_labeled == 1
+    slow.results.isend((tid0, p0, p0 * 2.0))          # straggler arrives last
+    mgr._collect_results()
+    assert tbuf.total_labeled == 1                    # no duplicate row
+    assert mgr.monitor.count("oracle.duplicate_results") == 1
+    assert mgr.monitor.count("manager.late_results_used") == 0
+
+
+def test_dedupe_straggler_label_used_and_queued_twin_cancelled():
+    """timeout -> requeued into the buffer (no free worker) -> the original
+    result arrives: its label is USED and the waiting twin is removed, so
+    the oracle never recomputes work it already has."""
+    mgr, obuf, tbuf = _mgr()
+    slow = mgr.register_oracle("slow")
+    x = np.full(3, 2.5, np.float32)
+    obuf.put([x])
+    mgr.step()                                        # dispatched to slow
+    tid = slow.jobs.recv()[0]
+    time.sleep(0.05)
+    # expire; `slow` is the only endpoint and is freed, so the requeue
+    # redispatches to it -- pre-occupy it so the twin stays buffered
+    slow.busy_task = -1
+    mgr.step()
+    assert len(obuf) == 1                             # twin waits in buffer
+    slow.busy_task = None
+    slow.results.isend((tid, x, x * 2.0))             # straggler arrives
+    mgr._collect_results()
+    assert tbuf.total_labeled == 1                    # late label used
+    assert mgr.monitor.count("manager.late_results_used") == 1
+    assert len(obuf) == 0                             # twin cancelled
+    assert mgr.monitor.count("oracle.duplicate_results") == 0
+
+
+def test_dedupe_straggler_first_then_inflight_twin_dropped():
+    """Straggler arrives while the twin is ALREADY dispatched: the late
+    label is used and the twin's eventual result is dropped as a
+    duplicate — one training row either way."""
+    mgr, obuf, tbuf = _mgr()
+    a = mgr.register_oracle("a")
+    b = mgr.register_oracle("b")
+    x = np.full(3, 3.5, np.float32)
+    obuf.put([x])
+    mgr.step()
+    owner0 = a if a.busy_task is not None else b
+    tid0 = owner0.jobs.recv()[0]
+    time.sleep(0.05)
+    mgr.step()                                        # requeue+redispatch twin
+    owner1 = a if a.busy_task is not None else b
+    tid1, payload1 = owner1.jobs.recv()
+    # straggler first...
+    owner0.results.isend((tid0, x, x * 2.0))
+    mgr._collect_results()
+    assert tbuf.total_labeled == 1
+    assert mgr.monitor.count("manager.late_results_used") == 1
+    # ...then the in-flight twin completes: dropped
+    owner1.results.isend((tid1, payload1, payload1 * 2.0))
+    mgr._collect_results()
+    assert tbuf.total_labeled == 1
+    assert mgr.monitor.count("oracle.duplicate_results") == 1
+
+
+def test_task_failure_sentinel_redispatches_then_gives_up():
+    """OracleTaskFailure results consume ledger retries and finally land in
+    ``ledger.failed`` — never in the training buffer."""
+    mgr, obuf, tbuf = _mgr(timeout=10.0)
+    ep = mgr.register_oracle("w0")
+    x = np.full(3, 4.5, np.float32)
+    obuf.put([x])
+    for expected_retries in range(mgr.ledger.max_retries + 1):
+        mgr.step()
+        tid, payload = ep.jobs.recv()
+        ep.results.isend((tid, payload, OracleTaskFailure("boom")))
+        mgr._collect_results()
+    assert tbuf.total_labeled == 0
+    assert len(mgr.ledger.failed) == 1
+    assert mgr.monitor.count("oracle.task_gave_up") == 1
+    assert mgr.monitor.count("oracle.task_failures_reported") == 3
+    assert len(obuf) == 0                             # not requeued forever
+
+
+def test_nonfinite_labels_never_reach_training_buffer():
+    mgr, obuf, tbuf = _mgr(timeout=10.0)
+    ep = mgr.register_oracle("w0")
+    x = np.full(3, 5.5, np.float32)
+    obuf.put([x])
+    mgr.step()
+    tid, payload = ep.jobs.recv()
+    bad = np.full(3, np.nan, np.float32)
+    ep.results.isend((tid, payload, bad))
+    mgr._collect_results()
+    assert tbuf.total_labeled == 0
+    assert mgr.monitor.count("oracle.nonfinite_labels") == 1
+    mgr.step()                                        # redispatched
+    tid2, payload2 = ep.jobs.recv()
+    ep.results.isend((tid2, payload2, payload2 * 2.0))
+    mgr._collect_results()
+    assert tbuf.total_labeled == 1                    # finite retry admitted
+
+
+def test_payload_fingerprint_distinguishes_dtype_and_shape():
+    a = np.zeros(4, np.float32)
+    assert _payload_fp(a) == _payload_fp(a.copy())
+    assert _payload_fp(a) != _payload_fp(a.astype(np.float64))
+    assert _payload_fp(a) != _payload_fp(a.reshape(2, 2))
+    assert _payload_fp(a) != _payload_fp(np.ones(4, np.float32))

@@ -516,3 +516,102 @@ def test_pal_without_queue_has_no_serve_queue():
         assert pal.report()["oracle_rate_serve"] is None
     finally:
         pal.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# degradation-aware serving: load shedding + circuit breaker (ISSUE 6)
+# ---------------------------------------------------------------------------
+
+
+class _StubServer:
+    """Deterministic CommitteeServer stand-in: succeeds or fails on demand,
+    returning a shaped UQResult per microbatch."""
+
+    def __init__(self):
+        self.ok = True
+        self.calls = 0
+
+    def predict(self, rows):
+        self.calls += 1
+        if not self.ok:
+            raise RuntimeError("injected dispatch failure")
+        n = len(rows)
+        mean = np.zeros((n, OUT_DIM), np.float32)
+        z = np.zeros(n, np.float32)
+        return mean, acq.UQResult(mean, z, z.copy(), np.zeros(n, bool),
+                                  np.full(n, K, np.int32))
+
+
+def test_queue_load_shedding_raises_typed_overload():
+    from repro.serving.queue import QueueOverloaded, ServingRejected
+
+    srv = _StubServer()
+    # huge batch + huge deadline: nothing dispatches while we fill the
+    # backlog, so the shed bound is hit deterministically
+    q = ServingQueue(srv, QueueConfig(max_batch=1000, max_wait_ms=10_000.0,
+                                      shed_pending=4))
+    futs = [q.submit(_rows(1, seed=i)) for i in range(4)]
+    with pytest.raises(QueueOverloaded):
+        q.submit(_rows(1, seed=99))
+    assert issubclass(QueueOverloaded, ServingRejected)
+    assert q.shed_requests == 1
+    assert q.health()["shed_requests"] == 1
+    q.close(timeout=10)                       # drain flushes the admitted 4
+    for f in futs:
+        mean, uq = f.result(timeout=10)
+        assert mean.shape == (1, OUT_DIM)
+        assert int(uq.finite_members[0]) == K
+
+
+def test_queue_circuit_breaker_opens_probes_and_closes():
+    from repro.serving.queue import CircuitOpen
+
+    srv = _StubServer()
+    srv.ok = False
+    q = ServingQueue(srv, QueueConfig(max_batch=1, breaker_failures=2,
+                                      breaker_reset_s=0.15))
+    try:
+        # two consecutive dispatch failures (delivered on the futures, not
+        # raised at submit) open the circuit
+        for i in range(2):
+            with pytest.raises(RuntimeError, match="injected"):
+                q.submit(_rows(1, seed=i)).result(timeout=10)
+        assert q.health()["breaker_state"] == "open"
+        assert q.breaker_opens == 1
+        with pytest.raises(CircuitOpen):
+            q.submit(_rows(1, seed=2))
+        # cooldown elapses -> half-open probe admitted; it fails -> reopen
+        time.sleep(0.2)
+        with pytest.raises(RuntimeError, match="injected"):
+            q.submit(_rows(1, seed=3)).result(timeout=10)
+        assert q.health()["breaker_state"] == "open"
+        assert q.breaker_opens == 2
+        with pytest.raises(CircuitOpen):
+            q.submit(_rows(1, seed=4))
+        # service recovers: the next probe closes the circuit for good
+        srv.ok = True
+        time.sleep(0.2)
+        mean, _ = q.submit(_rows(1, seed=5)).result(timeout=10)
+        assert mean.shape == (1, OUT_DIM)
+        h = q.health()
+        assert h["breaker_state"] == "closed"
+        assert h["consecutive_failures"] == 0
+        assert h["dispatch_failures"] == 3
+    finally:
+        q.close(timeout=10)
+
+
+def test_pal_wires_breaker_knobs_and_reports_serve_health():
+    pal = _pal(serve_uq=True, serve_max_batch=8, serve_breaker_failures=3,
+               serve_breaker_reset_s=1.0, serve_shed_pending=64)
+    try:
+        qcfg = pal.serve_queue.cfg
+        assert qcfg.breaker_failures == 3
+        assert qcfg.breaker_reset_s == 1.0
+        assert qcfg.shed_pending == 64
+        rep = pal.report()
+        assert rep["serve_queue_health"]["breaker_state"] == "closed"
+        assert rep["last_fault"] is None
+        assert rep["thread_restarts"] == 0
+    finally:
+        pal.shutdown()

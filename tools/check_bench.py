@@ -62,6 +62,15 @@ HEADLINE = {
         ("queued_vs_percall_speedup", "ratio_min", 0.40),
         ("queue_reuses_engine_buckets", "flag", None),
     ),
+    "BENCH_fault_recovery.json": (
+        # labeled-throughput retention under the standard fault plan is
+        # scheduling-noisy around 1.0 -> wide band; the ISSUE acceptance
+        # floor (>= 0.70 of fault-free throughput) is absolute
+        ("throughput_retention", "ratio_min", 0.30),
+        # the chaos campaign must end on its own window, never on a
+        # fault-escalated StopToken
+        ("completed_without_stop", "flag", None),
+    ),
     "BENCH_committee_train.json": (
         # dispatch-count dominated, but still wall-clock -> wide band;
         # the >= 3x acceptance floor below is absolute
@@ -73,6 +82,7 @@ HEADLINE = {
 
 # absolute floors that hold regardless of baseline drift
 FLOORS = {
+    ("BENCH_fault_recovery.json", "throughput_retention"): 0.70,
     ("BENCH_serving_queue.json", "queued_vs_percall_speedup"): 3.0,
     ("BENCH_committee_uq.json", "speedup_wallclock"): 2.0,
     ("BENCH_committee_train.json", "speedup_fused_retrain"): 3.0,
