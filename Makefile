@@ -27,6 +27,7 @@ bench-smoke:
 	$(PY) benchmarks/serving_queue.py --quick
 	$(PY) -m benchmarks.run --only train --smoke
 	$(PY) benchmarks/fault_recovery.py --quick
+	$(PY) benchmarks/exploration_fleet.py --smoke
 	$(PY) examples/quickstart.py --timeout 20
 
 # regression gate: headline BENCH_*.json metrics vs the committed

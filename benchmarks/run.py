@@ -12,6 +12,8 @@
                  per-member training + weight-refresh host bytes
   fault        — labeled-throughput retention + recovery time under the
                  standard chaos FaultPlan (supervised runtime)
+  fleet        — device-resident exploration fleet (one fused
+                 advance+score+select dispatch) vs N host generators
   kernels      — Pallas-path microbenchmarks (XLA schedule, host timing)
 
 ``python -m benchmarks.run`` runs everything; ``--only <name>`` filters.
@@ -78,6 +80,12 @@ def bench_fault(smoke: bool):
     fault_recovery.main(["--smoke"] if smoke else [])
 
 
+def bench_fleet(smoke: bool):
+    from benchmarks import exploration_fleet
+    _section("Device-resident exploration fleet vs N host generators")
+    exploration_fleet.main(["--smoke"] if smoke else [])
+
+
 def bench_kernels():
     _section("Kernel microbenchmarks (XLA schedule on host)")
     import jax
@@ -127,7 +135,7 @@ def main():
     ap.add_argument("--only", default=None,
                     choices=["speedup", "overhead", "scaling", "kernels",
                              "committee_uq", "budget", "serving", "train",
-                             "fault"])
+                             "fault", "fleet"])
     ap.add_argument("--simulate", action="store_true",
                     help="run the measured PAL-runtime speedup simulation")
     ap.add_argument("--smoke", action="store_true",
@@ -151,6 +159,8 @@ def main():
         bench_train(args.smoke)
     if args.only in (None, "fault"):
         bench_fault(args.smoke)
+    if args.only in (None, "fleet"):
+        bench_fleet(args.smoke)
     if args.only in (None, "kernels"):
         bench_kernels()
     print(f"\n# total benchmark wall time: {time.time() - t0:.1f}s")

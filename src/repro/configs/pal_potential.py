@@ -147,6 +147,24 @@ class PALRunConfig:
                                      # (decorrelated members); False gives
                                      # every member the same data order
     train_replay_capacity: int = 2048  # device replay-ring rows
+    # --- device-resident exploration fleet (exploration/fleet.py) ---------
+    # fleet_walkers > 0 replaces the gene_process host generators with ONE
+    # stacked WalkerFleet: N walkers advanced, scored, and selected in a
+    # single fused dispatch per exchange iteration (requires a fused
+    # engine, i.e. committee=CommitteeSpec(...)).  Trusted initial states
+    # come from the first proposal of each make_generator(rank) — or an
+    # explicit fleet_init=(N, dim) array passed to PAL.
+    fleet_walkers: int = 0           # 0 keeps the host-generator path
+    fleet_sampler: str = "euler"     # 'euler' | 'langevin'
+    fleet_patience: int = 0          # consecutive-uncertain steps before a
+                                     # device restart; 0 falls back to
+                                     # `patience`
+    fleet_dt: float = 0.002          # sampler time step
+    fleet_noise: float = 0.01        # thermal-noise scale (0 = deterministic)
+    fleet_clip: float = 20.0         # per-component force clip
+    fleet_friction: float = 0.1      # 'langevin' velocity damping
+    fleet_max_steps: int = 0         # stop the exchange after N fleet steps
+                                     # (0 = run until another stop source)
 
 
 DEFAULT = PotentialConfig()

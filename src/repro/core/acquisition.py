@@ -100,6 +100,31 @@ class UQResult:
 
 
 @dataclasses.dataclass
+class FusedStepOut:
+    """Host-side outcome of one ``FusedEngine.score_after`` round — the
+    fused walker-advance + scoring dispatch used by the exploration fleet
+    (``exploration/fleet.py``).
+
+    Unlike ``UQResult``, the per-row statistics stay DEVICE-resident
+    (``mask``/``scalar_std``/... are jax arrays over the padded bucket):
+    the exchange loop never needs them on host, and transferring them for
+    N walkers every iteration would reintroduce exactly the per-row host
+    traffic the fleet exists to remove.  The only host fields are
+    ``n_selected`` (one int32 scalar) and ``selected`` — the selected
+    rows, packed to the front of the bucket on device and sliced, so
+    unselected walkers cost zero host bytes.
+    """
+
+    n_selected: int             # rows selected this round (host int)
+    selected: np.ndarray        # (n_selected, d) host — the oracle candidates
+    mask: Any                   # (nb,) bool, device
+    mean: Any                   # (nb, d), device
+    scalar_std: Any             # (nb,), device
+    component_std: Any          # (nb,), device
+    finite_members: Any         # (nb,) int32, device
+
+
+@dataclasses.dataclass
 class UQStats:
     """Per-round statistics handed to selection rules.
 
@@ -401,6 +426,13 @@ class FusedEngine(UQEngine):
         self.version = -1                      # last WeightStore version seen
         self._cache: Dict[int, Callable] = {}
         self.trace_counts: Dict[int, int] = {}
+        # score_after (fused step+score, exploration fleet) keeps its OWN
+        # jit cache and trace counter: its programs are keyed by (caller
+        # key, bucket) and must not perturb the plain score() cache whose
+        # per-bucket trace counts tests assert exactly
+        self._step_cache: Dict[Tuple[str, int], Callable] = {}
+        self.step_trace_counts: Dict[Tuple[str, int], int] = {}
+        self._step_warmed: set = set()
         # the Exchange and Manager threads score through the SAME engine:
         # the compile cache and traffic counters need a lock or two threads
         # hitting a fresh bucket would both trace it (duplicate multi-second
@@ -564,6 +596,103 @@ class FusedEngine(UQEngine):
                 if self.last_finite_min < self.size:
                     self.quarantine_rounds += 1
         return UQResult(mean[:n], sstd[:n], cstd[:n], mask[:n], finite_n)
+
+    # ------------------------------------------------- fused step + score
+    def _step_compiled_locked(self, ckey: str, nb: int, step_fn: Callable,
+                              react_fn: Optional[Callable]) -> Callable:
+        # caller holds self._compile_lock
+        key = (ckey, nb)
+        fn = self._step_cache.get(key)
+        if fn is None:
+            def fused(cparams, carry, n_valid, stream, rstate):
+                self.step_trace_counts[key] = \
+                    self.step_trace_counts.get(key, 0) + 1
+                x, mid = step_fn(carry)
+                preds = self.apply(cparams, x)
+                mean, sstd, cstd, _, finite = self._ops.committee_uq(
+                    preds, self.threshold, impl=self.impl,
+                    block_n=self.block_n)
+                valid = jnp.arange(nb) < n_valid
+                stats = UQStats(x=x, mean=mean, scalar_std=sstd,
+                                component_std=cstd, valid=valid,
+                                n_valid=n_valid, stream=stream,
+                                finite_members=finite)
+                mask = valid
+                new_state, si = [], 0
+                for rule in self.rules:
+                    if rule.stateful:
+                        stats, mask, ns = rule.apply_stateful(
+                            stats, mask, rstate[si])
+                        mask = jnp.asarray(mask) & valid
+                        new_state.append(ns)
+                        si += 1
+                    else:
+                        mask = jnp.asarray(rule.apply(stats, mask)) & valid
+                mask = mask & (finite > 0)
+                new_carry = react_fn(mid, stats, mask) \
+                    if react_fn is not None else mid
+                # pack selected rows to the front (stable order) so the
+                # host can slice exactly n_selected rows off the device —
+                # unselected walkers never cross the boundary
+                order = jnp.argsort(~mask)
+                sel_x = jnp.take(x, order, axis=0)
+                n_sel = jnp.sum(mask).astype(jnp.int32)
+                return (new_carry, mean, sstd, cstd, mask, finite,
+                        n_sel, sel_x, tuple(new_state))
+            donate = self.donate and jax.default_backend() != "cpu"
+            kw: Dict[str, Any] = {"donate_argnums": (1,)} if donate else {}
+            fn = jax.jit(fused, **kw)
+            self._step_cache[key] = fn
+        return fn
+
+    def score_after(self, step_fn: Callable, carry: Any, n: int, nb: int,
+                    *, react_fn: Optional[Callable] = None,
+                    cache_key: str = "step", advance: bool = True,
+                    stream: int = STREAM_EXCHANGE
+                    ) -> Tuple[Any, FusedStepOut]:
+        """Fuse a caller-supplied advance step with committee scoring:
+        ``step_fn(carry) -> (x, mid)`` produces the (nb, in_dim) proposal
+        batch INSIDE the compiled dispatch, then the committee forward,
+        the ``committee_uq`` Welford statistics, and the selection-rule
+        pipeline run exactly as in :meth:`score`, and finally
+        ``react_fn(mid, stats, mask) -> new_carry`` (e.g. the fleet's
+        patience/restart update) folds the round's outcome back into the
+        carried state — one device program per (cache_key, bucket).
+
+        ``carry`` is a device-resident pytree the caller owns (the fleet's
+        stacked walker state); it never crosses to host.  ``n`` is the
+        true row count, ``nb`` the padded bucket (the caller pads once at
+        construction, so the hot loop has zero uploads).  Host traffic per
+        call is the int32 selected count plus the selected rows only.
+
+        Stateful-rule state is shared with :meth:`score` — both entry
+        points thread ``self.rule_state`` under the same ``_state_guard``,
+        so a budget controller meters fleet and host traffic jointly.
+        """
+        key = (cache_key, nb)
+        with self._state_guard(advance):
+            args = (self.cparams, carry, np.int32(n), np.int32(stream),
+                    self.rule_state)
+            if key in self._step_warmed:
+                out = self._step_cache[key](*args)
+            else:
+                with self._compile_lock:
+                    out = self._step_compiled_locked(
+                        cache_key, nb, step_fn, react_fn)(*args)
+                    self._step_warmed.add(key)
+            if advance:
+                self.rule_state = out[8]
+        new_carry, mean, sstd, cstd, mask, finite, n_sel_d, sel_x = out[:8]
+        n_sel = int(n_sel_d)                       # one int32 to host
+        if n_sel:
+            selected = np.asarray(sel_x[:n_sel])   # selected rows only
+        else:
+            selected = np.zeros((0,) + tuple(sel_x.shape[1:]), np.float32)
+        with self._counter_lock:
+            self.bytes_to_host += 4 + selected.nbytes
+        return new_carry, FusedStepOut(
+            n_selected=n_sel, selected=selected, mask=mask, mean=mean,
+            scalar_std=sstd, component_std=cstd, finite_members=finite)
 
     # -------------------------------------------------------------- weights
     def refresh_from(self, store) -> int:

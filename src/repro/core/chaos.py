@@ -23,6 +23,10 @@ Instrumentation sites (rank = worker rank or channel name where noted):
   ``trainer.nan_member`` consumed by the runtime to call
                       ``CommitteeTrainer.poison_member(arg)``
   ``exchange.loop``   top of each exchange iteration
+  ``fleet.step``      before each fused exploration-fleet step (``take``
+                      site: ``nan_walker`` poisons walker ``int(arg)``,
+                      which the fleet's restart gate must reset — never a
+                      crash; generic kinds run via ``execute``)
   ``transport.send``  inside ``Channel.isend`` (rank = channel name);
                       installed process-wide via ``transport.install_chaos``
 
@@ -36,6 +40,8 @@ Event kinds:
               named for plans that target the heartbeat/ledger timeout)
   ``nan_label``   corrupt the oracle label to NaN (``corrupt_label``)
   ``nan_member``  poison committee member ``int(arg)`` (``take`` site)
+  ``nan_walker``  poison fleet walker ``int(arg)`` to NaN (``take`` site;
+              the next fused step resets it to its trusted state)
 
 Nothing here imports the runtime — the injector is a passive oracle the
 runtime queries, so it is equally usable against a bare Manager or
@@ -81,18 +87,25 @@ class FaultPlan:
     seed: int = 0
 
     @staticmethod
-    def acceptance(member: int = 0) -> "FaultPlan":
+    def acceptance(member: int = 0, fleet: bool = False) -> "FaultPlan":
         """The ISSUE-6 acceptance plan: 3 transient oracle failures, 1
         oracle-thread crash, 1 trainer crash mid-schedule, 1 NaN-weights
-        member.  A supervised run absorbs ALL of it without a StopToken."""
-        return FaultPlan(events=(
+        member.  A supervised run absorbs ALL of it without a StopToken.
+
+        ``fleet=True`` appends the exploration-fleet event (a poisoned
+        walker on the 3rd fused step) for runs driving a ``WalkerFleet``
+        — opt-in so plans against fleetless runs still fire completely."""
+        events = [
             FaultEvent("oracle.task", 2, "raise", rank="oracle0"),
             FaultEvent("oracle.task", 4, "raise", rank="oracle1"),
             FaultEvent("oracle.task", 6, "raise", rank="oracle0"),
             FaultEvent("oracle.loop", 9, "crash", rank="oracle1"),
             FaultEvent("trainer.loop", 2, "crash"),
             FaultEvent("trainer.nan_member", 1, "nan_member", arg=member),
-        ))
+        ]
+        if fleet:
+            events.append(FaultEvent("fleet.step", 3, "nan_walker", arg=0.0))
+        return FaultPlan(events=tuple(events))
 
 
 class ChaosInjector:
@@ -137,15 +150,21 @@ class ChaosInjector:
         Call it INSIDE the try-scope whose recovery path should absorb the
         fault."""
         ev = self._match(site, rank)
-        if ev is None:
-            return
+        if ev is not None:
+            self.execute(ev, rank=rank)
+
+    def execute(self, ev: FaultEvent, rank: str = ""):
+        """Run a matched event's generic effect (raise/crash/delay/hang).
+        Public so ``take`` sites — whose special kinds the caller realizes
+        itself (``nan_member``, ``nan_walker``) — can still honor generic
+        kinds without ticking the counter twice."""
         if ev.kind in ("delay", "hang"):
             time.sleep(float(ev.arg))
         elif ev.kind == "raise":
-            raise ChaosFault(f"injected transient fault at {site}"
+            raise ChaosFault(f"injected transient fault at {ev.site}"
                              f"{f' ({rank})' if rank else ''} n={ev.nth}")
         elif ev.kind == "crash":
-            raise ChaosCrash(f"injected crash at {site}"
+            raise ChaosCrash(f"injected crash at {ev.site}"
                              f"{f' ({rank})' if rank else ''} n={ev.nth}")
 
     def corrupt_label(self, label, rank: str = ""):

@@ -150,31 +150,43 @@ class Exchange:
         oracle_buffer: OracleInputBuffer,
         cfg: ExchangeConfig,
         monitor: Optional[Monitor] = None,
+        fleet=None,                              # exploration.WalkerFleet
     ):
         self.generators = list(generators)
         self.prediction = prediction
         self.oracle_buffer = oracle_buffer
         self.cfg = cfg
         self.monitor = monitor or Monitor()
+        self.fleet = fleet
         if self.prediction.engine is None:
             self.prediction.engine = acq.LegacyEngine(
                 self.prediction.predict_all, cfg.std_threshold)
         n = len(self.generators)
         self.data_to_gene: List[Optional[np.ndarray]] = [None] * n
+        # gather buffer, preallocated and reused across iterations — the
+        # per-iteration list rebuild was measurable against the fused
+        # engine's single-dispatch scoring
+        self._gather: List[Optional[np.ndarray]] = [None] * n
         self.patience = sel.PatienceTracker(n, cfg.patience)
         self.iteration = 0
         self._last_save = time.time()
 
     def step(self) -> Optional[StopToken]:
+        if self.fleet is not None:
+            return self._step_fleet()
         t0 = time.perf_counter()
         # 1. gather proposals from every generator (paper: MPI gather)
-        inputs: List[np.ndarray] = []
+        inputs = self._gather
         for i, g in enumerate(self.generators):
             stop, x = g.generate_new_data(self.data_to_gene[i])
             if stop:
+                # proposals gathered BEFORE the stopping generator would
+                # otherwise be dropped un-scored — drain them first
+                self._drain_on_stop(i)
                 return StopToken(f"generator{i}", "generator stop criterion")
-            inputs.append(np.asarray(x))
+            inputs[i] = np.asarray(x)
         t_gen = time.perf_counter() - t0
+        self.monitor.incr("exchange.gather_ns", int(t_gen * 1e9))
 
         # 2. committee inference + UQ + selection rules — one engine call
         #    (one device dispatch on fused backends)
@@ -184,7 +196,8 @@ class Exchange:
 
         # 3. realize the selection; queue to oracle; scatter back
         t1 = time.perf_counter()
-        res = sel.selection_from_uq(inputs, uq)
+        res = sel.selection_from_uq(inputs, uq,
+                                    scatter_out=self.data_to_gene)
         # acquisition accounting: queued_to_oracle/proposals is the
         # realized oracle rate the cross-round budget controller
         # (core/budget.BudgetRule) steers toward PALRunConfig.oracle_budget
@@ -194,11 +207,10 @@ class Exchange:
             self.monitor.incr("exchange.queued_to_oracle",
                               len(res.inputs_to_oracle))
         restart = self.patience.step(res.uncertain_mask)
-        out: List[Optional[np.ndarray]] = list(res.data_to_generators)
+        out = res.data_to_generators          # == self.data_to_gene, reused
         if self.cfg.flag_restart_with_none:
             for i in np.where(restart)[0]:
                 out[int(i)] = None
-        self.data_to_gene = out
         self.monitor.timer("exchange.comm").add(
             t_gen + (time.perf_counter() - t1))
         self.monitor.incr("exchange.iterations")
@@ -209,6 +221,49 @@ class Exchange:
             for g in self.generators:
                 g.save_progress()
             self._last_save = time.time()
+        if self.cfg.min_interval:
+            left = self.cfg.min_interval - (time.perf_counter() - t0)
+            if left > 0:
+                time.sleep(left)
+        return None
+
+    def _drain_on_stop(self, n_gathered: int):
+        """A StopToken mid-gather used to silently drop the proposals
+        already gathered from earlier generators this iteration.  Score
+        that prefix (advance=False — a partial round must not consume
+        cross-round budget state) and queue whatever is selected, so no
+        proposal vanishes on stop."""
+        if n_gathered <= 0:
+            return
+        inputs = [self._gather[i] for i in range(n_gathered)]
+        uq = self.prediction.engine.score(inputs, advance=False)
+        res = sel.selection_from_uq(inputs, uq)
+        if res.inputs_to_oracle:
+            self.oracle_buffer.put(res.inputs_to_oracle)
+            self.monitor.incr("exchange.queued_to_oracle",
+                              len(res.inputs_to_oracle))
+        self.monitor.incr("exchange.drained_on_stop", n_gathered)
+
+    def _step_fleet(self) -> Optional[StopToken]:
+        """Fleet fast path: the whole gather → score → select → scatter
+        cycle is ONE fused device dispatch inside ``WalkerFleet.step``.
+        The only per-iteration host traffic is the selected oracle
+        candidates (plus one int32 count); patience/restart run as device
+        rules, so the host ``PatienceTracker`` stays untouched."""
+        t0 = time.perf_counter()
+        if self.iteration % max(1, self.cfg.weight_pull_every) == 0:
+            self.prediction.refresh_weights()
+        with self.monitor.timer("exchange.predict"):
+            out = self.fleet.step()
+        self.monitor.incr("exchange.proposals", self.fleet.n_walkers)
+        if out.n_selected:
+            self.oracle_buffer.put(list(out.selected))
+            self.monitor.incr("exchange.queued_to_oracle", out.n_selected)
+        self.monitor.incr("exchange.iterations")
+        self.iteration += 1
+        max_steps = self.fleet.cfg.max_steps
+        if max_steps and self.fleet.steps_done >= max_steps:
+            return StopToken("fleet", "fleet max_steps reached")
         if self.cfg.min_interval:
             left = self.cfg.min_interval - (time.perf_counter() - t0)
             if left > 0:

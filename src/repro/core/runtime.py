@@ -85,6 +85,7 @@ class PAL:
         sharding_rules=None,
         resume: bool = False,
         chaos: Optional[Union[FaultPlan, ChaosInjector]] = None,
+        fleet_init: Optional[np.ndarray] = None,
     ):
         self.cfg = run_cfg
         self.monitor = Monitor()
@@ -108,8 +109,13 @@ class PAL:
         fused_training = loss_fn is not None
 
         # --- kernel instances (paper: one object per MPI process) ----------
-        self.generators = [make_generator(i, rd)
-                           for i in range(run_cfg.gene_process)]
+        # fleet_walkers > 0: the gene_process host generators are replaced
+        # by ONE device-resident WalkerFleet (built below, after the
+        # engine) — host generator instances are only touched to derive
+        # the fleet's trusted initial states when no fleet_init= is given
+        use_fleet = getattr(run_cfg, "fleet_walkers", 0) > 0
+        self.generators = [] if use_fleet else \
+            [make_generator(i, rd) for i in range(run_cfg.gene_process)]
         # per-member prediction models exist only for the legacy backend
         # without a predict_all_override; fused engines score the stacked
         # committee directly (and an override supplies raw predictions
@@ -177,6 +183,42 @@ class PAL:
                 sharding_rules=sharding_rules,
                 seed=run_cfg.seed,
                 monitor=self.monitor)
+        # --- device-resident exploration fleet (exploration/fleet.py) ------
+        # one stacked walker state on the engine's device, advanced +
+        # scored + selected in a single fused dispatch per exchange
+        # iteration; trusted initial states come from fleet_init= or the
+        # first proposal of each make_generator(rank)
+        self.fleet = None
+        if use_fleet:
+            from repro.exploration.fleet import FleetConfig, WalkerFleet
+
+            if not hasattr(self.engine, "score_after"):
+                raise ValueError(
+                    "fleet_walkers > 0 needs a fused acquisition engine — "
+                    "pass committee=CommitteeSpec(apply_fn, cparams) (the "
+                    "legacy per-member backend cannot fuse the walker "
+                    "advance with scoring)")
+            if fleet_init is not None:
+                x0 = np.asarray(fleet_init, np.float32)
+            else:
+                x0 = np.stack([
+                    np.asarray(make_generator(i, rd).generate_new_data(
+                        None)[1], np.float32).reshape(-1)
+                    for i in range(run_cfg.fleet_walkers)])
+            self.fleet = WalkerFleet(
+                self.engine, x0,
+                FleetConfig(
+                    dt=run_cfg.fleet_dt,
+                    clip=run_cfg.fleet_clip,
+                    noise=run_cfg.fleet_noise,
+                    friction=run_cfg.fleet_friction,
+                    sampler=run_cfg.fleet_sampler,
+                    patience=(run_cfg.fleet_patience
+                              or run_cfg.patience),
+                    max_steps=run_cfg.fleet_max_steps,
+                    seed=run_cfg.seed,
+                ),
+                monitor=self.monitor, chaos=self.chaos)
         self.exchange = Exchange(
             self.generators, self.prediction_pool, self.oracle_buffer,
             ExchangeConfig(
@@ -187,6 +229,7 @@ class PAL:
                 min_interval=run_cfg.exchange_min_interval,
             ),
             self.monitor,
+            fleet=self.fleet,
         )
 
         def fresh_score(items):
@@ -609,6 +652,11 @@ class PAL:
             # RNG cursor + replay ring: a resumed run continues
             # mid-schedule instead of resetting its optimizer
             state["train_state"] = self.committee_trainer.state_dict()
+        if self.fleet is not None:
+            # full walker carry incl. per-walker RNG keys and step counter:
+            # a restored fleet replays the exact trajectory (bit-identical
+            # resume, tested)
+            state["fleet"] = self.fleet.state_dict()
         self._last_ckpt_iter = self.exchange.iteration
         return self.checkpointer.save(self.exchange.iteration, state)
 
@@ -625,6 +673,8 @@ class PAL:
             self.exchange.patience.load_state_dict(state["patience"])
         if state.get("engine_state"):
             self.engine.load_state_dict(state["engine_state"])
+        if state.get("fleet") is not None and self.fleet is not None:
+            self.fleet.load_state_dict(state["fleet"])
         if (state.get("train_state") is not None
                 and self.committee_trainer is not None):
             self.committee_trainer.load_state_dict(state["train_state"])
@@ -648,6 +698,9 @@ class PAL:
         if self.committee_trainer is not None:
             r["train_fused_steps"] = self.committee_trainer.steps_done
             r["train_replay_rows"] = len(self.committee_trainer.replay)
+        if self.fleet is not None:
+            # fleet health: one device->host snapshot, off the hot path
+            r["fleet"] = self.fleet.stats()
         # realized oracle rate: queued / scored over the whole run, the
         # quantity the budget controller steers toward oracle_budget.
         # Serving traffic counts too — with serve_uq the server shares the

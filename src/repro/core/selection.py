@@ -75,6 +75,7 @@ def prediction_check_fast(
     scalar_std: np.ndarray,                     # (n_gen,)
     uncertain_mask: np.ndarray,                 # (n_gen,) bool
     flag_value: Optional[float] = None,
+    scatter_out: Optional[List[Any]] = None,
 ) -> SelectionResult:
     """Fast-path ``prediction_check`` consuming precomputed device UQ.
 
@@ -84,6 +85,11 @@ def prediction_check_fast(
     recompute, no (K, n_gen, out_dim) host tensor.  Semantics match
     ``prediction_check`` exactly (same SelectionResult for the same
     committee outputs).
+
+    ``scatter_out``: an optional preallocated per-generator list to fill
+    in place (and return as ``data_to_generators``) instead of allocating
+    a fresh scatter list every round — the Exchange hot loop reuses its
+    buffer through this.
     """
     mean = np.asarray(mean)
     mask = np.asarray(uncertain_mask, dtype=bool)
@@ -93,23 +99,32 @@ def prediction_check_fast(
     if flag_value is not None:
         mean = mean.copy()
         mean[mask] = flag_value
-    return SelectionResult(inputs_to_oracle, list(mean), mask, scalar_std)
+    if scatter_out is None:
+        scatter = list(mean)
+    else:
+        for i in range(len(mean)):
+            scatter_out[i] = mean[i]
+        scatter = scatter_out
+    return SelectionResult(inputs_to_oracle, scatter, mask, scalar_std)
 
 
 def selection_from_uq(
     list_data_to_pred: Sequence[np.ndarray],
     uq,                                         # acquisition.UQResult
     flag_value: Optional[float] = None,
+    scatter_out: Optional[List[Any]] = None,
 ) -> SelectionResult:
     """Route an acquisition-engine ``UQResult`` into a SelectionResult.
 
     The engine already computed mean / std statistics AND the final rule
     mask (device-side on fused backends); this only materializes the
-    per-generator scatter lists.  Semantics match ``prediction_check``
-    exactly for the default threshold rule.
+    per-generator scatter lists (into ``scatter_out`` when the caller
+    reuses a buffer).  Semantics match ``prediction_check`` exactly for
+    the default threshold rule.
     """
     return prediction_check_fast(list_data_to_pred, uq.mean, uq.scalar_std,
-                                 uq.mask, flag_value)
+                                 uq.mask, flag_value,
+                                 scatter_out=scatter_out)
 
 
 def adjust_input_for_oracle(
@@ -166,7 +181,13 @@ class PatienceTracker:
 
     A trajectory may continue through up to ``patience`` consecutive
     uncertain steps; beyond that the generator should restart (reset to a
-    trusted state).  One counter per generator rank."""
+    trusted state).  One counter per generator rank.
+
+    This is the HOST realization, used by the per-generator Exchange path.
+    The device-resident exploration fleet applies the identical update as
+    ``exploration.fleet.PatienceRestart`` — stacked ``jnp.where`` counters
+    folded into the fused dispatch — and the parity test holds the two to
+    the same counts/restarts/flags step for step."""
 
     def __init__(self, n_generators: int, patience: int):
         self.patience = patience

@@ -1,0 +1,6 @@
+"""Device-resident exploration: stacked walker fleets advanced, scored,
+and selected in one fused dispatch (``exploration.fleet.WalkerFleet``)."""
+
+from repro.exploration.fleet import (  # noqa: F401
+    FleetConfig, PatienceRestart, WalkerFleet, make_sampler,
+)

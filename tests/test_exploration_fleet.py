@@ -1,0 +1,461 @@
+"""Device-resident exploration fleet tests.
+
+Fleet-vs-host parity: an N=1 ``WalkerFleet`` with the deterministic
+(noise=0) Euler sampler reproduces the host generator trajectory and the
+same selection decisions through the legacy per-generator Exchange path,
+on both fused backends; the device ``PatienceRestart`` rule matches the
+host ``PatienceTracker`` counter semantics including restart flags.  Plus:
+zero-per-iteration-host-bytes accounting, bit-identical checkpoint
+resume, the chaos ``nan_walker`` reset, the Exchange fleet fast path, and
+the legacy-path satellite fixes (gather_ns counter, drain-on-stop).
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.pal_potential import PALRunConfig
+from repro.core import PAL
+from repro.core import acquisition as acq
+from repro.core import budget as bud
+from repro.core import committee as cmte
+from repro.core import selection as sel
+from repro.core.buffers import OracleInputBuffer
+from repro.core.chaos import ChaosInjector, FaultEvent, FaultPlan
+from repro.core.controller import Exchange, ExchangeConfig, PredictionPool
+from repro.exploration.fleet import (
+    FleetConfig, PatienceRestart, WalkerFleet,
+)
+
+D = 6
+IMPLS = ["xla", "pallas_interpret"]
+DT, CLIP = 0.002, 20.0
+
+
+def _committee(seed=0, k=4, scale=0.03):
+    """K slightly-perturbed linear force fields f = x @ W + b: smooth
+    committee disagreement that grows with |x|, so trajectories drift
+    between certain and uncertain regions."""
+    rng = np.random.RandomState(seed)
+    members = [
+        {"w": jnp.asarray(-0.05 * np.eye(D) + scale * rng.randn(D, D),
+                          jnp.float32),
+         "b": jnp.asarray(scale * rng.randn(D), jnp.float32)}
+        for _ in range(k)]
+    return cmte.stack_members(members), (lambda p, x: x @ p["w"] + p["b"])
+
+
+class DetGene:
+    """Host reference walker with the fleet's exact deterministic update:
+    first call and restarts propose the trusted state; otherwise
+    ``x + dt * clip(f, ±clip)`` on the scattered committee mean."""
+
+    def __init__(self, x0, max_steps=10 ** 9):
+        self.x0 = np.asarray(x0, np.float32)
+        self.x = self.x0.copy()
+        self.steps = 0
+        self.max_steps = max_steps
+        self.trajectory = []
+
+    def generate_new_data(self, data_to_gene):
+        self.steps += 1
+        if self.steps > self.max_steps:
+            return True, self.x
+        if data_to_gene is None and self.steps > 1:
+            self.x = self.x0.copy()
+        elif data_to_gene is not None:
+            f = np.clip(np.asarray(data_to_gene, np.float32), -CLIP, CLIP)
+            self.x = (self.x + np.float32(DT) * f).astype(np.float32)
+        self.trajectory.append(self.x.copy())
+        return False, self.x
+
+    def save_progress(self):
+        pass
+
+    def stop_run(self):
+        pass
+
+
+def _det_cfg(patience, **kw):
+    kw.setdefault("dt", DT)
+    kw.setdefault("clip", CLIP)
+    kw.setdefault("noise", 0.0)
+    return FleetConfig(patience=patience, **kw)
+
+
+# ---------------------------------------------------------------------------
+# tentpole: fleet-vs-host parity
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("impl", IMPLS)
+def test_fleet_matches_host_generator_trajectory(impl):
+    """N=1 deterministic fleet ≡ host generator through the legacy
+    Exchange: same trajectory, same oracle queue, same restart counts."""
+    cparams, apply_fn = _committee()
+    x0 = np.full(D, 0.8, np.float32)
+    threshold, patience, steps = 0.012, 3, 40
+
+    # host path: one generator through the legacy per-generator Exchange
+    eng_h = acq.FusedEngine(apply_fn, cparams, threshold, impl=impl)
+    gen = DetGene(x0)
+    ex = Exchange([gen], PredictionPool([], None, engine=eng_h),
+                  OracleInputBuffer(),
+                  ExchangeConfig(std_threshold=threshold, patience=patience,
+                                 min_interval=0.0))
+    for _ in range(steps):
+        assert ex.step() is None
+    host_queue = ex.oracle_buffer.snapshot()
+
+    # fleet path: the same walker as a 1-walker fleet (padded to the same
+    # engine bucket, so both backends see one compiled shape)
+    eng_f = acq.FusedEngine(apply_fn, cparams, threshold, impl=impl)
+    fleet = WalkerFleet(eng_f, x0[None, :], _det_cfg(patience))
+    fleet_traj, fleet_queue = [], []
+    for _ in range(steps):
+        out = fleet.step()
+        fleet_traj.append(fleet.positions()[0])
+        fleet_queue.extend(list(out.selected))
+
+    host_traj = np.stack(gen.trajectory)
+    fleet_traj = np.stack(fleet_traj)
+    # same dynamics, device vs host fp32 (FMA contraction differs)
+    np.testing.assert_allclose(fleet_traj, host_traj, atol=5e-5, rtol=0)
+    # identical selection decisions -> identical oracle queues
+    assert len(fleet_queue) == len(host_queue)
+    for a, b in zip(fleet_queue, host_queue):
+        np.testing.assert_allclose(a, np.asarray(b, np.float32),
+                                   atol=5e-5, rtol=0)
+    # identical restart realizations — and the scenario exercises both
+    assert fleet.stats()["restarts"] == int(ex.patience.restarts[0])
+    assert fleet.stats()["restarts"] > 0
+    assert len(host_queue) > 0
+
+
+@pytest.mark.parametrize("impl", IMPLS)
+def test_fleet_selection_results_match_engine_score(impl):
+    """Per-step parity of the selection decision itself: the fused
+    step+score dispatch selects exactly what scoring the same proposals
+    through ``UQEngine.score`` / ``selection_from_uq`` would."""
+    cparams, apply_fn = _committee(seed=3)
+    x0 = np.stack([np.full(D, 0.5 + 0.3 * i, np.float32) for i in range(3)])
+    eng_f = acq.FusedEngine(apply_fn, cparams, 0.01, impl=impl)
+    eng_s = acq.FusedEngine(apply_fn, cparams, 0.01, impl=impl)
+    fleet = WalkerFleet(eng_f, x0, _det_cfg(patience=4))
+    n = fleet.n_walkers
+    for _ in range(12):
+        out = fleet.step()
+        proposals = list(fleet.positions())
+        res = sel.selection_from_uq(proposals, eng_s.score(proposals))
+        assert np.array_equal(np.asarray(out.mask)[:n], res.uncertain_mask)
+        np.testing.assert_allclose(np.asarray(out.scalar_std)[:n], res.std,
+                                   rtol=1e-6)
+        assert out.n_selected == len(res.inputs_to_oracle)
+        for a, b in zip(out.selected, res.inputs_to_oracle):
+            np.testing.assert_array_equal(a, b)
+
+
+def test_patience_restart_matches_host_tracker():
+    """Device PatienceRestart ≡ host PatienceTracker, step for step,
+    including the restart flags."""
+    rng = np.random.RandomState(0)
+    n, patience = 7, 3
+    host = sel.PatienceTracker(n, patience)
+    rule = PatienceRestart(patience)
+    counts = jnp.zeros(n, jnp.int32)
+    restarts = jnp.zeros(n, jnp.int32)
+    for _ in range(60):
+        mask = rng.rand(n) < 0.7
+        flag_host = host.step(mask)
+        counts, restarts, flag = rule.apply(counts, restarts,
+                                            jnp.asarray(mask))
+        assert np.array_equal(np.asarray(flag), flag_host)
+        assert np.array_equal(np.asarray(counts), host.counts)
+        assert np.array_equal(np.asarray(restarts), host.restarts)
+
+
+# ---------------------------------------------------------------------------
+# host-byte accounting and jit-cache isolation
+# ---------------------------------------------------------------------------
+
+
+def test_fleet_zero_host_bytes_for_unselected_walkers():
+    """The hot loop uploads nothing and downloads only the selected rows
+    plus one int32 count — nothing per unselected walker."""
+    cparams, apply_fn = _committee()
+    # huge threshold: nothing is ever selected
+    eng = acq.FusedEngine(apply_fn, cparams, 1e6, impl="xla")
+    fleet = WalkerFleet(eng, np.ones((16, D), np.float32),
+                        _det_cfg(patience=1000, noise=0.01))
+    fleet.step()                               # warm the (fleet, bucket) jit
+    b2d0, b2h0 = eng.bytes_to_device, eng.bytes_to_host
+    iters = 20
+    for _ in range(iters):
+        out = fleet.step()
+        assert out.n_selected == 0
+    assert eng.bytes_to_device - b2d0 == 0
+    assert eng.bytes_to_host - b2h0 == 4 * iters   # the int32 count only
+
+
+def test_score_after_keeps_plain_score_cache_clean():
+    """score_after's jit cache and trace counter are separate from
+    score()'s — the fleet must not perturb the bucketed-score contract
+    (``trace_counts`` is asserted exactly elsewhere)."""
+    cparams, apply_fn = _committee()
+    eng = acq.FusedEngine(apply_fn, cparams, 0.01, impl="xla")
+    fleet = WalkerFleet(eng, np.ones((4, D), np.float32), _det_cfg(2))
+    for _ in range(3):
+        fleet.step()
+    assert eng.trace_counts == {}
+    assert list(eng.step_trace_counts.values()) == [1]
+    eng.score([np.ones(D, np.float32)] * 4)
+    assert eng.trace_counts == {8: 1}
+    assert list(eng.step_trace_counts.values()) == [1]
+
+
+def test_stop_drain_does_not_advance_rule_state():
+    """Satellite 2 corollary: the mid-gather drain scores with
+    advance=False, so a partial round must not consume cross-round
+    budget-controller state."""
+    cparams, apply_fn = _committee()
+    eng = acq.FusedEngine(
+        apply_fn, cparams, 0.01,
+        rules=(bud.BudgetRule(target=0.5, thr_init=0.01, horizon=8),),
+        impl="xla")
+    gens = [DetGene(np.full(D, 0.5, np.float32)),
+            DetGene(np.full(D, 1.0, np.float32), max_steps=1)]
+    ex = Exchange(gens, PredictionPool([], None, engine=eng),
+                  OracleInputBuffer(),
+                  ExchangeConfig(std_threshold=0.01, min_interval=0.0))
+    assert ex.step() is None                   # full round: rounds -> 1
+    assert int(np.asarray(eng.rule_state[0]["rounds"])) == 1
+    tok = ex.step()                            # gen1 stops mid-gather
+    assert tok is not None and tok.origin == "generator1"
+    assert int(np.asarray(eng.rule_state[0]["rounds"])) == 1
+
+
+# ---------------------------------------------------------------------------
+# checkpoint: bit-identical resume mid-trajectory
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("impl", IMPLS)
+def test_fleet_state_roundtrip_bit_identical(impl):
+    cparams, apply_fn = _committee()
+    eng = acq.FusedEngine(apply_fn, cparams, 0.01, impl=impl)
+    fleet = WalkerFleet(
+        eng, np.random.RandomState(0).randn(5, D).astype(np.float32),
+        _det_cfg(patience=2, noise=0.02, seed=9))
+    for _ in range(7):
+        fleet.step()
+    snap = fleet.state_dict()
+    for _ in range(6):
+        fleet.step()
+    ref = fleet.state_dict()
+
+    resumed = WalkerFleet(eng, np.zeros((5, D), np.float32),
+                          _det_cfg(patience=2, noise=0.02, seed=9))
+    resumed.load_state_dict(snap)
+    for _ in range(6):
+        resumed.step()
+    got = resumed.state_dict()
+    assert set(got) == set(ref)
+    for k in ref:
+        assert np.array_equal(got[k], ref[k]), k   # BIT-identical
+
+
+def test_fleet_snapshot_key_mismatch_rejected():
+    cparams, apply_fn = _committee()
+    eng = acq.FusedEngine(apply_fn, cparams, 0.01, impl="xla")
+    fleet = WalkerFleet(eng, np.ones((2, D), np.float32), _det_cfg(2))
+    snap = fleet.state_dict()
+    snap.pop("key")
+    with pytest.raises(ValueError, match="snapshot keys"):
+        fleet.load_state_dict(snap)
+
+
+# ---------------------------------------------------------------------------
+# chaos: nan_walker resets through the restart gate
+# ---------------------------------------------------------------------------
+
+
+def test_chaos_nan_walker_resets_not_crashes():
+    cparams, apply_fn = _committee()
+    eng = acq.FusedEngine(apply_fn, cparams, 1e6, impl="xla")
+    plan = FaultPlan(events=(
+        FaultEvent("fleet.step", 3, "nan_walker", arg=1.0),))
+    chaos = ChaosInjector(plan)
+    x0 = np.random.RandomState(1).randn(4, D).astype(np.float32)
+    fleet = WalkerFleet(eng, x0, _det_cfg(patience=1000), chaos=chaos)
+    fleet.step()
+    fleet.step()
+    fleet.step()        # event fires here: walker 1 poisoned, then reset
+    assert len(chaos.fired) == 1
+    assert fleet.stats()["nan_resets"] == 1
+    # the poisoned walker restarted from its trusted state this very step
+    np.testing.assert_array_equal(fleet.positions()[1], x0[1])
+    for _ in range(3):
+        fleet.step()
+    assert np.isfinite(fleet.positions()).all()
+    assert fleet.stats()["nan_resets"] == 1    # reset once, not every step
+
+
+def test_acceptance_plan_fleet_event_is_opt_in():
+    assert len(FaultPlan.acceptance().events) == 6
+    plan = FaultPlan.acceptance(fleet=True)
+    assert len(plan.events) == 7
+    assert plan.events[-1].site == "fleet.step"
+    assert plan.events[-1].kind == "nan_walker"
+
+
+# ---------------------------------------------------------------------------
+# Exchange fleet fast path
+# ---------------------------------------------------------------------------
+
+
+def test_exchange_fleet_path_counters_and_stop():
+    cparams, apply_fn = _committee()
+    eng = acq.FusedEngine(apply_fn, cparams, -1.0, impl="xla")
+    buf = OracleInputBuffer()
+    fleet = WalkerFleet(eng, np.ones((4, D), np.float32),
+                        _det_cfg(patience=1000, max_steps=5))
+    ex = Exchange([], PredictionPool([], None, engine=eng), buf,
+                  ExchangeConfig(min_interval=0.0), fleet=fleet)
+    tokens = [ex.step() for _ in range(5)]
+    assert tokens[:4] == [None] * 4
+    assert tokens[4] is not None and tokens[4].origin == "fleet"
+    c = ex.monitor.report()["counters"]
+    assert c["exchange.iterations"] == 5
+    assert c["exchange.proposals"] == 20       # 4 walkers x 5 steps
+    assert c["exchange.queued_to_oracle"] == len(buf) == 20
+
+
+# ---------------------------------------------------------------------------
+# legacy-path satellites: gather buffer reuse + drain-on-stop
+# ---------------------------------------------------------------------------
+
+
+def _legacy_exchange(gens, threshold=-1.0):
+    cparams, apply_fn = _committee()
+    eng = acq.FusedEngine(apply_fn, cparams, threshold, impl="xla")
+    buf = OracleInputBuffer()
+    ex = Exchange(gens, PredictionPool([], None, engine=eng), buf,
+                  ExchangeConfig(std_threshold=threshold, patience=1000,
+                                 min_interval=0.0))
+    return ex, buf
+
+
+def test_legacy_gather_buffer_reused_and_timed():
+    gens = [DetGene(np.full(D, 0.5 * (i + 1), np.float32))
+            for i in range(3)]
+    ex, _ = _legacy_exchange(gens)
+    ex.step()
+    gather0, scatter0 = ex._gather, ex.data_to_gene
+    ex.step()
+    # satellite 1: gather and scatter lists are the same objects across
+    # iterations (filled in place), and gather time is accounted
+    assert ex._gather is gather0
+    assert ex.data_to_gene is scatter0
+    assert ex.monitor.report()["counters"]["exchange.gather_ns"] > 0
+
+
+def test_stop_mid_gather_drains_earlier_proposals():
+    """Regression (satellite 2): generator 2 stopping used to drop
+    generators 0 and 1's already-gathered proposals un-scored."""
+    gens = [DetGene(np.full(D, 0.5, np.float32)),
+            DetGene(np.full(D, 1.0, np.float32)),
+            DetGene(np.full(D, 1.5, np.float32), max_steps=2)]
+    ex, buf = _legacy_exchange(gens)
+    assert ex.step() is None
+    assert len(buf) == 3                       # threshold -1: all selected
+    assert ex.step() is None
+    assert len(buf) == 6
+    tok = ex.step()                            # gen2 stops on its 3rd call
+    assert tok is not None and tok.origin == "generator2"
+    # gens 0 and 1 proposed before the stop: both drained to the oracle
+    assert len(buf) == 8
+    c = ex.monitor.report()["counters"]
+    assert c["exchange.drained_on_stop"] == 2
+
+
+# ---------------------------------------------------------------------------
+# PAL runtime wiring
+# ---------------------------------------------------------------------------
+
+
+class _NullModel:
+    """Legacy-trainer placeholder (never driven: these tests step the
+    exchange synchronously and never start the runtime threads)."""
+
+    def __init__(self, *a):
+        pass
+
+    def stop_run(self):
+        pass
+
+    def save_progress(self):
+        pass
+
+
+class _FleetOracle:
+    def __init__(self, rank, rd):
+        pass
+
+    def run_calc(self, inp):
+        return inp, (np.sin(np.asarray(inp)) * 0.1).astype(np.float32)
+
+    def stop_run(self):
+        pass
+
+    def save_progress(self):
+        pass
+
+
+def _mk_gen(rank, rd):
+    rng = np.random.RandomState(rank)
+    return DetGene((0.5 + 0.1 * rng.randn(D)).astype(np.float32))
+
+
+def _fleet_cfg(tmp, **kw):
+    base = dict(result_dir=tmp, gene_process=4, orcl_process=1,
+                pred_process=1, ml_process=1, retrain_size=4,
+                std_threshold=0.01, patience=3, exchange_min_interval=0.0,
+                fleet_walkers=4, fleet_noise=0.0, fleet_max_steps=6,
+                checkpoint_every=0.0)
+    base.update(kw)
+    return PALRunConfig(**base)
+
+
+def _fleet_pal(tmp, cfg_kw=None, **kw):
+    cparams, apply_fn = _committee()
+    return PAL(_fleet_cfg(tmp, **(cfg_kw or {})),
+               make_generator=_mk_gen,
+               make_model=lambda r, rd, d, m: _NullModel(),
+               make_oracle=_FleetOracle,
+               committee=acq.CommitteeSpec(apply_fn, cparams), **kw)
+
+
+def test_pal_builds_and_checkpoints_fleet(tmp_path):
+    tmp = str(tmp_path)
+    pal = _fleet_pal(tmp)
+    assert pal.fleet is not None and pal.generators == []
+    assert pal.exchange.fleet is pal.fleet
+    for _ in range(4):                         # drive the fleet synchronously
+        assert pal.exchange.step() is None
+    pal.checkpoint()
+    rep = pal.report()
+    assert rep["fleet"]["steps"] == 4
+    assert rep["counters"]["exchange.proposals"] == 16
+    mid = pal.fleet.state_dict()
+
+    resumed = _fleet_pal(tmp, resume=True)
+    got = resumed.fleet.state_dict()
+    for k in mid:
+        assert np.array_equal(got[k], mid[k]), k
+
+
+def test_pal_fleet_requires_fused_engine(tmp_path):
+    cfg = _fleet_cfg(str(tmp_path), uq_impl="legacy")
+    with pytest.raises(ValueError, match="fused"):
+        PAL(cfg, make_generator=_mk_gen,
+            make_model=lambda r, rd, d, m: _NullModel(),
+            make_oracle=_FleetOracle)

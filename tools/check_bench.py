@@ -78,6 +78,14 @@ HEADLINE = {
         # trainer -> engine weight handoff must stay device-to-device
         ("refresh_device_zero_host_bytes", "flag", None),
     ),
+    "BENCH_exploration_fleet.json": (
+        # python-call-count dominated, but still wall-clock -> wide band;
+        # the >= 5x acceptance floor below is absolute
+        ("speedup_proposals_per_s", "ratio_min", 0.40),
+        # the fleet hot loop must never upload per-iteration bytes —
+        # unselected walkers stay on device
+        ("fleet_zero_upload_bytes", "flag", None),
+    ),
 }
 
 # absolute floors that hold regardless of baseline drift
@@ -86,6 +94,7 @@ FLOORS = {
     ("BENCH_serving_queue.json", "queued_vs_percall_speedup"): 3.0,
     ("BENCH_committee_uq.json", "speedup_wallclock"): 2.0,
     ("BENCH_committee_train.json", "speedup_fused_retrain"): 3.0,
+    ("BENCH_exploration_fleet.json", "speedup_proposals_per_s"): 5.0,
 }
 
 
