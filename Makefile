@@ -26,6 +26,7 @@ bench-smoke:
 	$(PY) benchmarks/budget_controller.py --quick
 	$(PY) benchmarks/serving_queue.py --quick
 	$(PY) -m benchmarks.run --only train --smoke
+	$(PY) -m benchmarks.run --only memory --smoke
 	$(PY) benchmarks/fault_recovery.py --quick
 	$(PY) benchmarks/exploration_fleet.py --smoke
 	$(PY) examples/quickstart.py --timeout 20

@@ -1,0 +1,201 @@
+"""Benchmark: big-committee memory diet — stacked TrainState bytes and
+fused step time across K x MemoryPolicy.
+
+Committee size K is the UQ quality lever, and the stacked fp32 TrainState
+is the memory wall that caps it.  ``optim/memory_policy.MemoryPolicy``
+makes per-member storage a policy (fp32 | bf16 | int8 QTensor moments);
+this benchmark demonstrates the ISSUE's acceptance claim: a K=64 committee
+trains AND scores through the existing fused one-dispatch paths with int8
+moments at a fraction of the fp32 optimizer-state bytes and near-K=8
+per-member-normalized step time.
+
+Metrics written to ``BENCH_committee_memory.json`` (one cell per
+K x policy):
+
+* measured stacked TrainState bytes (total + optimizer subtree) — and an
+  exactness cross-check against ``launch/dryrun.committee_state_bytes``
+  (the eval_shape estimator) -> ``estimate_matches_measured``;
+* ms per fused train step (median over rounds) and per-member-normalized
+  step time;
+* HEADLINE ``opt_bytes_ratio_int8_vs_fp32_k64`` (gate: <= 0.40) and
+  ``steptime_per_member_ratio_int8_k64_vs_fp32_k8`` (gate: <= 1.5x),
+  enforced by ``tools/check_bench.py``;
+* ``k64_scores_fused_all_backends`` — the K=64 int8-trained committee
+  scores through ``FusedEngine`` on BOTH fused UQ backends ('xla' and
+  'pallas_interpret') via the zero-copy device handoff.
+
+Usage:  PYTHONPATH=src python benchmarks/committee_memory.py [--smoke] [--out F]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import statistics
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import acquisition as acq
+from repro.core import committee as cmte
+from repro.optim.memory_policy import MemoryPolicy, stacked_state_nbytes
+from repro.training.committee_trainer import CommitteeTrainer
+
+K_LIST = (8, 32, 64)
+POLICIES = ("fp32", "bf16", "int8")
+IN_DIM = 16
+HIDDEN = 64
+OUT_DIM = 4
+N_DATA = 512
+BATCH = 32
+LR = 1e-3
+UQ_BACKENDS = ("xla", "pallas_interpret")
+
+
+def _mlp_apply(p, x):
+    h = jnp.tanh(x @ p["w1"] + p["b1"])
+    return h @ p["w2"] + p["b2"]
+
+
+def _loss(p, batch):
+    pred = _mlp_apply(p, batch["x"])
+    return jnp.mean((pred - batch["y"]) ** 2), {}
+
+
+def _make_members(rng, k):
+    return [{
+        "w1": jnp.asarray(rng.randn(IN_DIM, HIDDEN).astype(np.float32) * 0.3),
+        "b1": jnp.asarray(rng.randn(HIDDEN).astype(np.float32) * 0.1),
+        "w2": jnp.asarray(rng.randn(HIDDEN, OUT_DIM).astype(np.float32) * 0.3),
+        "b2": jnp.asarray(rng.randn(OUT_DIM).astype(np.float32) * 0.1),
+    } for _ in range(k)]
+
+
+def _tree_nbytes(tree) -> int:
+    return sum(int(np.asarray(l).nbytes) for l in jax.tree.leaves(tree))
+
+
+def bench_cell(k, policy_name, xs_h, ys_h, steps, rounds):
+    """One K x policy cell: build, train, measure bytes + ms/step."""
+    rng = np.random.RandomState(0)
+    members = _make_members(rng, k)
+    cparams = cmte.stack_members(members)
+    policy = MemoryPolicy.named(policy_name)
+    tr = CommitteeTrainer(_loss, cparams, steps=steps, batch=BATCH, lr=LR,
+                          bootstrap=True, replay_capacity=N_DATA, seed=0,
+                          memory_policy=policy)
+    tr.add_blocks(list(zip(xs_h, ys_h)))
+
+    tr.train(steps=2)                            # compile + warmup
+    times = []
+    for _ in range(rounds):
+        t0 = time.perf_counter()
+        tr.train(steps=steps)
+        jax.tree.map(lambda a: a.block_until_ready(), tr.cparams)
+        times.append((time.perf_counter() - t0) / steps)
+    ms_per_step = statistics.median(times) * 1e3
+
+    total = _tree_nbytes(tr.cstate)
+    opt = _tree_nbytes(tr.cstate.opt)
+    est = stacked_state_nbytes(members[0], k, policy)
+    final_loss = tr._last_metrics["loss"] if tr._last_metrics else None
+    return tr, {
+        "K": k, "policy": policy_name,
+        "state_bytes_total": total,
+        "state_bytes_opt": opt,
+        "state_bytes_estimated": est,
+        "estimate_exact": est == total,
+        "ms_per_step": ms_per_step,
+        "ms_per_step_per_member": ms_per_step / k,
+        "loss_finite": bool(np.all(np.isfinite(np.asarray(final_loss)))),
+    }
+
+
+def score_all_backends(trainer, xs_h):
+    """K=64 committee through BOTH fused UQ backends via the zero-copy
+    device handoff — finite stds, zero packed host bytes."""
+    out = {}
+    for impl in UQ_BACKENDS:
+        eng = acq.FusedEngine(_mlp_apply, trainer.cparams, 0.5, impl=impl)
+        eng.refresh_host_bytes = 0
+        eng.refresh_from_device(trainer.snapshot_cparams())
+        res = eng.score(xs_h[:32])
+        out[impl] = {
+            "std_finite": bool(np.all(np.isfinite(res.scalar_std))),
+            "refresh_host_bytes": int(eng.refresh_host_bytes),
+        }
+        out[impl]["ok"] = (out[impl]["std_finite"]
+                           and out[impl]["refresh_host_bytes"] == 0)
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", "--quick", dest="smoke", action="store_true",
+                    help="few iterations (CI smoke)")
+    ap.add_argument("--steps", type=int, default=None)
+    ap.add_argument("--rounds", type=int, default=None)
+    ap.add_argument("--out", default="BENCH_committee_memory.json")
+    args = ap.parse_args(argv)
+    steps = args.steps or (10 if args.smoke else 40)
+    rounds = args.rounds or (3 if args.smoke else 7)
+
+    rng = np.random.RandomState(1)
+    xs_h = rng.randn(N_DATA, IN_DIM).astype(np.float32)
+    ys_h = rng.randn(N_DATA, OUT_DIM).astype(np.float32)
+
+    cells = {}
+    trainers = {}
+    for k in K_LIST:
+        for pol in POLICIES:
+            tr, cell = bench_cell(k, pol, xs_h, ys_h, steps, rounds)
+            cells[f"K{k}_{pol}"] = cell
+            trainers[(k, pol)] = tr
+            print(f"K={k:3d} {pol:5s}: "
+                  f"state {cell['state_bytes_total']:>9d} B "
+                  f"(opt {cell['state_bytes_opt']:>9d} B)  "
+                  f"{cell['ms_per_step']:.2f} ms/step  "
+                  f"{cell['ms_per_step_per_member'] * 1e3:.1f} us/member",
+                  flush=True)
+
+    kmax = K_LIST[-1]
+    opt_ratio = (cells[f"K{kmax}_int8"]["state_bytes_opt"]
+                 / cells[f"K{kmax}_fp32"]["state_bytes_opt"])
+    step_ratio = (cells[f"K{kmax}_int8"]["ms_per_step_per_member"]
+                  / cells[f"K{K_LIST[0]}_fp32"]["ms_per_step_per_member"])
+    backends = score_all_backends(trainers[(kmax, "int8")], xs_h)
+
+    report = {
+        "config": {"K_list": list(K_LIST), "policies": list(POLICIES),
+                   "in_dim": IN_DIM, "hidden": HIDDEN, "out_dim": OUT_DIM,
+                   "n_data": N_DATA, "batch": BATCH,
+                   "steps_per_round": steps, "rounds": rounds,
+                   "backend": jax.default_backend()},
+        "cells": cells,
+        "k64_uq_backends": backends,
+        "opt_bytes_ratio_int8_vs_fp32_k64": opt_ratio,
+        "steptime_per_member_ratio_int8_k64_vs_fp32_k8": step_ratio,
+        "estimate_matches_measured": all(c["estimate_exact"]
+                                         for c in cells.values()),
+        "k64_scores_fused_all_backends": all(b["ok"]
+                                             for b in backends.values()),
+        "all_losses_finite": all(c["loss_finite"] for c in cells.values()),
+    }
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2)
+
+    print(f"\nopt-state bytes  int8 K{kmax} / fp32 K{kmax}: "
+          f"{opt_ratio:.3f}  (gate <= 0.40)")
+    print(f"per-member step  int8 K{kmax} / fp32 K{K_LIST[0]}: "
+          f"{step_ratio:.2f}x (gate <= 1.5x)")
+    print(f"K{kmax} scores on fused backends {UQ_BACKENDS}: "
+          f"{report['k64_scores_fused_all_backends']}")
+    print(f"estimator exact on all {len(cells)} cells: "
+          f"{report['estimate_matches_measured']}")
+    print(f"wrote {args.out}")
+    return report
+
+
+if __name__ == "__main__":
+    main()

@@ -10,6 +10,8 @@
                  per-call CommitteeServer.predict at request size 1
   train        — fused one-dispatch K-member retraining vs sequential
                  per-member training + weight-refresh host bytes
+  memory       — big-committee memory diet: stacked TrainState bytes +
+                 step time across K x MemoryPolicy (fp32/bf16/int8)
   fault        — labeled-throughput retention + recovery time under the
                  standard chaos FaultPlan (supervised runtime)
   fleet        — device-resident exploration fleet (one fused
@@ -74,6 +76,12 @@ def bench_train(smoke: bool):
     committee_train.main(["--smoke"] if smoke else [])
 
 
+def bench_memory(smoke: bool):
+    from benchmarks import committee_memory
+    _section("Big-committee memory diet (K x MemoryPolicy)")
+    committee_memory.main(["--smoke"] if smoke else [])
+
+
 def bench_fault(smoke: bool):
     from benchmarks import fault_recovery
     _section("Fault recovery: throughput retention under the standard plan")
@@ -135,7 +143,7 @@ def main():
     ap.add_argument("--only", default=None,
                     choices=["speedup", "overhead", "scaling", "kernels",
                              "committee_uq", "budget", "serving", "train",
-                             "fault", "fleet"])
+                             "memory", "fault", "fleet"])
     ap.add_argument("--simulate", action="store_true",
                     help="run the measured PAL-runtime speedup simulation")
     ap.add_argument("--smoke", action="store_true",
@@ -157,6 +165,8 @@ def main():
         bench_serving(args.smoke)
     if args.only in (None, "train"):
         bench_train(args.smoke)
+    if args.only in (None, "memory"):
+        bench_memory(args.smoke)
     if args.only in (None, "fault"):
         bench_fault(args.smoke)
     if args.only in (None, "fleet"):

@@ -176,7 +176,11 @@ class TrainConfig:
     min_lr_ratio: float = 0.1
     accum_steps: int = 1
     zero1: bool = True                # shard opt state over `data` where divisible
-    quantized_opt_state: bool = False # int8 blockwise Adam moments
+    quantized_opt_state: bool = False # legacy alias for opt_moments="int8"
+    opt_moments: str = ""             # "" | fp32 | bf16 | int8 — AdamW
+                                      # moment storage (optim/adamw.py
+                                      # resolve_moments; "" defers to
+                                      # quantized_opt_state)
     grad_compression: str = "none"    # none | bf16 (cast at DP-reduce point)
     z_loss_coef: float = 0.0
 

@@ -147,6 +147,13 @@ class PALRunConfig:
                                      # (decorrelated members); False gives
                                      # every member the same data order
     train_replay_capacity: int = 2048  # device replay-ring rows
+    train_memory_policy: str = "fp32"  # stacked-TrainState storage preset:
+                                     # fp32 | bf16 | int8 (QTensor moments)
+                                     # — optim/memory_policy.MemoryPolicy;
+                                     # the K=64 memory-diet knob
+    train_replay_dtype: str = "float32"  # replay-ring row storage (bfloat16
+                                     # halves the ring + append bytes;
+                                     # gathers are fp32 either way)
     # --- device-resident exploration fleet (exploration/fleet.py) ---------
     # fleet_walkers > 0 replaces the gene_process host generators with ONE
     # stacked WalkerFleet: N walkers advanced, scored, and selected in a

@@ -170,8 +170,16 @@ class PAL:
         # scores the committee on one placement
         self.committee_trainer = None
         if fused_training:
+            import dataclasses as _dc
+
+            from repro.optim.memory_policy import MemoryPolicy
             from repro.training.committee_trainer import CommitteeTrainer
 
+            policy = _dc.replace(
+                MemoryPolicy.named(
+                    getattr(run_cfg, "train_memory_policy", "fp32")),
+                replay_dtype=getattr(run_cfg, "train_replay_dtype",
+                                     "float32"))
             self.committee_trainer = CommitteeTrainer(
                 loss_fn, committee.cparams,
                 steps=run_cfg.train_steps,
@@ -182,7 +190,8 @@ class PAL:
                 mesh=getattr(self.engine, "mesh", None),
                 sharding_rules=sharding_rules,
                 seed=run_cfg.seed,
-                monitor=self.monitor)
+                monitor=self.monitor,
+                memory_policy=policy)
         # --- device-resident exploration fleet (exploration/fleet.py) ------
         # one stacked walker state on the engine's device, advanced +
         # scored + selected in a single fused dispatch per exchange

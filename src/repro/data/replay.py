@@ -23,7 +23,12 @@ import numpy as np
 class ReplayTrainingBuffer:
     """Fixed-capacity device-resident (x, y) training store.
 
-    Rows are float32, flattened 1-D per sample; feature widths are fixed by
+    Rows are flattened 1-D per sample in a configurable storage ``dtype``
+    (``float32`` default; ``bfloat16`` halves the ring's device footprint —
+    the big-committee memory-diet knob).  Rows are cast to the storage
+    dtype ON HOST before the block transfer (half the append bytes too) and
+    the fused train step gathers minibatches back to fp32 on device, so
+    the loss math never sees the narrow dtype.  Feature widths are fixed by
     the first appended block.  Appends write a contiguous block into a ring
     (oldest rows overwritten once full) through a jitted
     ``dynamic_update_slice`` whose destination buffer is DONATED where the
@@ -40,11 +45,12 @@ class ReplayTrainingBuffer:
     handles a step in flight is about to dispatch with.
     """
 
-    def __init__(self, capacity: int):
+    def __init__(self, capacity: int, dtype: str = "float32"):
         assert capacity > 0
         self.capacity = int(capacity)
-        self._x = None                  # (capacity, dx) jnp.float32
-        self._y = None                  # (capacity, dy) jnp.float32
+        self.dtype = str(dtype)         # storage dtype (gathers are fp32)
+        self._x = None                  # (capacity, dx) in storage dtype
+        self._y = None                  # (capacity, dy) in storage dtype
         self._cursor = 0
         self._size = 0
         self._lock = threading.Lock()
@@ -64,12 +70,21 @@ class ReplayTrainingBuffer:
 
         self._write = jax.jit(write, **kw)
 
-    def append(self, xs, ys) -> int:
-        """Append matching (n, dx)/(n, dy) host blocks; returns n kept."""
+    def _storage_dtype(self):
+        """numpy-compatible storage dtype (ml_dtypes backs bfloat16)."""
         import jax.numpy as jnp
 
-        xs = np.asarray(xs, np.float32).reshape(len(xs), -1)
-        ys = np.asarray(ys, np.float32).reshape(len(ys), -1)
+        return jnp.dtype(self.dtype)
+
+    def append(self, xs, ys) -> int:
+        """Append matching (n, dx)/(n, dy) host blocks; returns n kept.
+        Rows are cast to the storage dtype on host, so a bf16 ring also
+        halves the host->device bytes of every block append."""
+        import jax.numpy as jnp
+
+        dt = self._storage_dtype()
+        xs = np.asarray(xs, np.float32).reshape(len(xs), -1).astype(dt)
+        ys = np.asarray(ys, np.float32).reshape(len(ys), -1).astype(dt)
         if len(xs) != len(ys):
             raise ValueError(f"x/y row mismatch: {len(xs)} vs {len(ys)}")
         if len(xs) == 0:
@@ -79,8 +94,8 @@ class ReplayTrainingBuffer:
         with self._lock:
             if self._x is None:
                 self._init_write()
-                self._x = jnp.zeros((self.capacity, xs.shape[1]), jnp.float32)
-                self._y = jnp.zeros((self.capacity, ys.shape[1]), jnp.float32)
+                self._x = jnp.zeros((self.capacity, xs.shape[1]), dt)
+                self._y = jnp.zeros((self.capacity, ys.shape[1]), dt)
             if (xs.shape[1] != self._x.shape[1]
                     or ys.shape[1] != self._y.shape[1]):
                 raise ValueError(
@@ -116,10 +131,11 @@ class ReplayTrainingBuffer:
     def state_dict(self) -> Dict[str, np.ndarray]:
         with self._lock:
             if self._x is None:
-                return {"size": 0}
+                return {"size": 0, "dtype": self.dtype}
+            # rows snapshot in the STORAGE dtype (no widen-on-save blowup)
             return {"x": np.asarray(self._x), "y": np.asarray(self._y),
                     "cursor": self._cursor, "size": self._size,
-                    "total_added": self.total_added}
+                    "total_added": self.total_added, "dtype": self.dtype}
 
     def load_state_dict(self, state):
         import jax.numpy as jnp
@@ -129,9 +145,14 @@ class ReplayTrainingBuffer:
                 return
             if self._write is None:
                 self._init_write()
-            self._x = jnp.asarray(np.asarray(state["x"], np.float32))
-            self._y = jnp.asarray(np.asarray(state["y"], np.float32))
-            self.capacity = int(self._x.shape[0])   # snapshot wins on resume
+            # snapshot wins on resume: capacity AND storage dtype (legacy
+            # f32 snapshots restore as f32 rings regardless of the knob)
+            self.dtype = str(state.get("dtype",
+                                       np.asarray(state["x"]).dtype))
+            dt = self._storage_dtype()
+            self._x = jnp.asarray(np.asarray(state["x"]).astype(dt))
+            self._y = jnp.asarray(np.asarray(state["y"]).astype(dt))
+            self.capacity = int(self._x.shape[0])
             self._cursor = int(state["cursor"])
             self._size = int(state["size"])
             self.total_added = int(state.get("total_added", self._size))

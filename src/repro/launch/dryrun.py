@@ -131,6 +131,31 @@ def state_shardings(rules: MeshRules, model, train_cfg) -> Tuple[Any, Any]:
     return state_sds, state_sh
 
 
+def committee_state_bytes(member_params, k: int, train_cfg=None,
+                          policy=None) -> int:
+    """Exact bytes of a K-member stacked committee ``TrainState``.
+
+    The old estimate here was per-(single-)model only: it ignored committee
+    stacking entirely and always priced fp32 moments, so a K=64 plan under-
+    reported optimizer memory by K x and over-reported quantized runs ~4x.
+    Delegates to ``optim/memory_policy.stacked_state_nbytes`` (eval_shape of
+    the trainer's own constructor — QTensor scale arrays included).
+    ``policy`` wins over ``train_cfg``; both absent means fp32."""
+    from repro.optim.adamw import resolve_moments
+    from repro.optim.memory_policy import (
+        MemoryPolicy, resolve_policy, stacked_state_nbytes)
+
+    p = resolve_policy(policy)
+    if p is None:
+        fmt = "fp32"
+        if train_cfg is not None:
+            fmt = resolve_moments(getattr(train_cfg, "opt_moments", ""),
+                                  getattr(train_cfg, "quantized_opt_state",
+                                          False))
+        p = MemoryPolicy(name=fmt, moments=fmt)
+    return stacked_state_nbytes(member_params, k, p)
+
+
 # ---------------------------------------------------------------------------
 # HLO analysis
 # ---------------------------------------------------------------------------

@@ -1,4 +1,8 @@
 from repro.optim.adamw import (  # noqa: F401
-    AdamWState, adamw_init, adamw_update, global_norm, clip_by_global_norm,
+    AdamWState, QTensor, adamw_init, adamw_update, clip_by_global_norm,
+    dequantize, global_norm, quantize, resolve_moments,
+)
+from repro.optim.memory_policy import (  # noqa: F401
+    MemoryPolicy, member_state_nbytes, resolve_policy, stacked_state_nbytes,
 )
 from repro.optim.schedule import make_schedule  # noqa: F401

@@ -115,19 +115,43 @@ class AdamWState(NamedTuple):
     nu: Any
 
 
+MOMENT_FORMATS = ("fp32", "bf16", "int8")
+
+
+def resolve_moments(moments: str = "", quantized: bool = False) -> str:
+    """Moment storage format: an explicit ``moments`` wins; the legacy
+    ``quantized`` boolean maps to ``int8``; default ``fp32``."""
+    m = moments or ("int8" if quantized else "fp32")
+    if m not in MOMENT_FORMATS:
+        raise ValueError(f"unknown moment format {m!r}; expected one of "
+                         f"{MOMENT_FORMATS}")
+    return m
+
+
 @dataclasses.dataclass(frozen=True)
 class AdamWConfig:
     beta1: float = 0.9
     beta2: float = 0.95
     eps: float = 1e-8
     weight_decay: float = 0.1
-    quantized: bool = False
+    quantized: bool = False          # legacy alias for moments="int8"
+    moments: str = ""                # "" | fp32 | bf16 | int8
+
+    def moment_format(self) -> str:
+        return resolve_moments(self.moments, self.quantized)
 
 
-def adamw_init(params: Any, quantized: bool = False) -> AdamWState:
+def adamw_init(params: Any, quantized: bool = False,
+               moments: str = "") -> AdamWState:
+    fmt = resolve_moments(moments, quantized)
+
     def zero(p):
         z = jnp.zeros(p.shape, jnp.float32)
-        return quantize(z) if quantized else z
+        if fmt == "int8":
+            return quantize(z)
+        if fmt == "bf16":
+            return z.astype(jnp.bfloat16)
+        return z
 
     return AdamWState(
         step=jnp.zeros((), jnp.int32),
@@ -160,15 +184,21 @@ def adamw_update(
     b1, b2 = cfg.beta1, cfg.beta2
     c1 = 1.0 - b1 ** step.astype(jnp.float32)
     c2 = 1.0 - b2 ** step.astype(jnp.float32)
-    is_q = lambda x: isinstance(x, QTensor)
+    fmt = cfg.moment_format()
 
     def upd(g, m, v, p):
         g = g.astype(jnp.float32)
-        mf = dequantize(m) if cfg.quantized else m
-        # nu is stored as sqrt(nu): the Adam denominator is sqrt(vhat), so
-        # int8 error enters it linearly instead of being amplified for
-        # small-magnitude entries sharing a block with a large absmax.
-        vf = dequantize(v) ** 2 if cfg.quantized else v
+        if fmt == "int8":
+            mf = dequantize(m)
+            # nu is stored as sqrt(nu): the Adam denominator is sqrt(vhat),
+            # so int8 error enters it linearly instead of being amplified
+            # for small-magnitude entries sharing a block with a large
+            # absmax.  bf16 storage keeps nu direct (no shared scale, and
+            # squaring a rounded sqrt would double the relative error).
+            vf = dequantize(v) ** 2
+        else:
+            mf = m.astype(jnp.float32)
+            vf = v.astype(jnp.float32)
         mf = b1 * mf + (1 - b1) * g
         vf = b2 * vf + (1 - b2) * g * g
         mhat = mf / c1
@@ -176,11 +206,12 @@ def adamw_update(
         pf = p.astype(jnp.float32)
         new_p = pf - lr * (mhat / (jnp.sqrt(vhat) + cfg.eps)
                            + cfg.weight_decay * pf)
-        if cfg.quantized:
+        if fmt == "int8":
             mf, vf = quantize(mf), quantize(jnp.sqrt(vf))
+        elif fmt == "bf16":
+            mf, vf = mf.astype(jnp.bfloat16), vf.astype(jnp.bfloat16)
         return new_p.astype(p.dtype), mf, vf
 
-    del is_q
     flat_g, treedef = jax.tree.flatten(grads)
     # flatten_up_to stops at grads' leaf positions, so QTensor moment
     # subtrees come back whole.

@@ -1,0 +1,127 @@
+"""MemoryPolicy: per-member dtype/layout of the stacked committee TrainState.
+
+Committee size K is the UQ quality lever (paper §2.1), and the stacked
+``TrainState`` of ``training/committee_trainer.py`` — K x fp32 params plus
+2 x fp32 AdamW moments plus the replay ring, all device-resident — is the
+memory wall that caps K.  This module makes the storage format a POLICY
+instead of a hard-coded fp32 stack:
+
+  * ``moments``  — AdamW moment storage: ``fp32`` (the seed layout),
+    ``bf16`` (mu/nu cast to bfloat16 between steps, math still fp32), or
+    ``int8`` (per-block absmax ``QTensor`` mu + sqrt(nu) from
+    ``optim/adamw.py`` — ~6x smaller than fp32 moments);
+  * ``params_dtype`` — stacked parameter storage (``float32`` default;
+    ``bfloat16`` halves the K x params term at the cost of master-weight
+    precision — the update math stays fp32 either way);
+  * ``replay_dtype`` — ``data/replay.ReplayTrainingBuffer`` row storage
+    (``bfloat16`` halves the ring; minibatches are gathered back to fp32
+    on device before the loss sees them).
+
+Quantize/dequantize happens INSIDE the same single jitted vmapped train
+step, so the dispatch count per step is unchanged (1) under every policy.
+Checkpoints carry the quantized leaves natively — a ``QTensor`` moment is
+pickled as its int8 ``q`` + fp32 ``scale``, never dequantized on save —
+and restoring a snapshot whose storage format mismatches the configured
+policy raises instead of silently re-formatting.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Union
+
+MOMENT_FORMATS = ("fp32", "bf16", "int8")
+_STORAGE_DTYPES = ("float32", "bfloat16")
+
+
+@dataclasses.dataclass(frozen=True)
+class MemoryPolicy:
+    """Storage policy for one committee member (applied uniformly to the
+    stack).  ``named()`` gives the presets the ``PALRunConfig.
+    train_memory_policy`` knob selects; fields compose freely via
+    ``dataclasses.replace``."""
+
+    name: str = "fp32"
+    moments: str = "fp32"            # fp32 | bf16 | int8 (QTensor sqrt-nu)
+    params_dtype: str = "float32"    # float32 | bfloat16
+    replay_dtype: str = "float32"    # float32 | bfloat16
+
+    def __post_init__(self):
+        if self.moments not in MOMENT_FORMATS:
+            raise ValueError(
+                f"unknown moment format {self.moments!r}; expected one of "
+                f"{MOMENT_FORMATS}")
+        for field in ("params_dtype", "replay_dtype"):
+            v = getattr(self, field)
+            if v not in _STORAGE_DTYPES:
+                raise ValueError(
+                    f"unknown {field} {v!r}; expected one of "
+                    f"{_STORAGE_DTYPES}")
+
+    @staticmethod
+    def named(name: str) -> "MemoryPolicy":
+        if name not in MOMENT_FORMATS:
+            raise ValueError(
+                f"unknown memory policy {name!r}; expected one of "
+                f"{MOMENT_FORMATS}")
+        return MemoryPolicy(name=name, moments=name if name != "bf16"
+                            else "bf16")
+
+    def describe(self) -> str:
+        return (f"{self.name}(moments={self.moments}, "
+                f"params={self.params_dtype}, replay={self.replay_dtype})")
+
+
+def resolve_policy(policy: Union[str, MemoryPolicy, None]
+                   ) -> Optional[MemoryPolicy]:
+    """None passes through (caller keeps legacy TrainConfig semantics);
+    a string selects a named preset; a MemoryPolicy is validated as-is."""
+    if policy is None:
+        return None
+    if isinstance(policy, str):
+        return MemoryPolicy.named(policy)
+    if isinstance(policy, MemoryPolicy):
+        return policy
+    raise TypeError(f"memory_policy must be str | MemoryPolicy | None, "
+                    f"got {type(policy).__name__}")
+
+
+# ---------------------------------------------------------------------------
+# Footprint accounting (exact, allocation-free)
+# ---------------------------------------------------------------------------
+
+
+def member_state_nbytes(member_params: Any, policy: MemoryPolicy) -> int:
+    """Exact per-member ``TrainState`` bytes under ``policy``, via
+    ``jax.eval_shape`` of the same constructor the trainer runs — params
+    (in ``params_dtype``), AdamW mu/nu in the ``moments`` format
+    (including the per-block fp32 scale arrays of int8 ``QTensor``
+    moments), and the two int32 step counters.  No buffers allocated."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.configs.base import TrainConfig
+    from repro.training.train_step import make_train_state
+
+    pd = jnp.dtype(policy.params_dtype)
+
+    def as_sds(p):
+        shape = tuple(getattr(p, "shape", ()))
+        dt = jnp.dtype(getattr(p, "dtype", jnp.float32))
+        if jnp.issubdtype(dt, jnp.floating):
+            dt = pd
+        return jax.ShapeDtypeStruct(shape, dt)
+
+    abstract = jax.tree.map(as_sds, member_params)
+    tcfg = TrainConfig(opt_moments=policy.moments)
+    sds = jax.eval_shape(lambda p: make_train_state(p, tcfg), abstract)
+    return sum(int(np.prod(l.shape)) * np.dtype(l.dtype).itemsize
+               for l in jax.tree.leaves(sds))
+
+
+def stacked_state_nbytes(member_params: Any, k: int,
+                         policy: MemoryPolicy) -> int:
+    """Exact stacked K-member committee ``TrainState`` bytes: stacking
+    gives every leaf (params, moments, scales, steps) a leading K axis,
+    so the footprint is exactly K x the per-member state."""
+    return int(k) * member_state_nbytes(member_params, policy)

@@ -4,3 +4,4 @@ from repro.training.train_step import (  # noqa: F401
 from repro.training.committee_trainer import (  # noqa: F401
     CommitteeTrainer, default_train_config,
 )
+from repro.optim.memory_policy import MemoryPolicy  # noqa: F401

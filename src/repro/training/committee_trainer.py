@@ -27,15 +27,27 @@ what PRs 1–4 did for scoring and serving:
     ``WeightStore``'s packed 1-D round trip remains only for the
     legacy per-member backend and checkpoint wire format.
 
+Per-member storage is a POLICY, not hard-coded fp32: ``memory_policy``
+(``optim/memory_policy.MemoryPolicy`` or a preset name) picks the AdamW
+moment format (fp32 | bf16 | int8 ``QTensor``), the stacked-param storage
+dtype, and the replay-ring row dtype.  Quantize/dequantize lives INSIDE
+the one fused dispatch (``optim/adamw.py``), so K=64 with int8 moments
+trains through the same single jitted vmapped step as K=8 fp32.  Update
+math is fp32 under every policy.
+
 ``state_dict``/``load_state_dict`` snapshot the FULL TrainState (params,
 Adam moments, per-member step) plus the RNG cursor and the replay ring, so
 a restored run continues mid-schedule instead of resetting its optimizer.
+Quantized moments checkpoint NATIVELY (int8 ``q`` + fp32 ``scale``, never
+dequantized on save); restoring a snapshot whose storage format mismatches
+the configured policy raises instead of silently re-formatting.
 """
 from __future__ import annotations
 
+import dataclasses
 import logging
 import threading
-from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple, Union
 
 log = logging.getLogger(__name__)
 
@@ -46,6 +58,8 @@ import numpy as np
 from repro.configs.base import TrainConfig
 from repro.core.committee import committee_size, member
 from repro.data.replay import ReplayTrainingBuffer
+from repro.optim.adamw import QTensor, resolve_moments
+from repro.optim.memory_policy import MemoryPolicy, resolve_policy
 from repro.training.train_step import make_train_state, make_train_step
 
 
@@ -84,15 +98,35 @@ class CommitteeTrainer:
         sharding_rules=None,
         seed: int = 0,
         monitor=None,
+        memory_policy: Union[str, MemoryPolicy, None] = None,
     ):
         self.size = committee_size(cparams)
         self.steps = int(steps)
         self.batch = int(batch)
         self.bootstrap = bool(bootstrap)
         self.monitor = monitor
-        self.replay = ReplayTrainingBuffer(replay_capacity)
         tcfg = train_cfg if train_cfg is not None else default_train_config(lr)
+        policy = resolve_policy(memory_policy)
+        if policy is None:
+            # legacy path: derive the effective policy from TrainConfig so
+            # snapshots always carry storage metadata, but leave tcfg alone
+            fmt = resolve_moments(getattr(tcfg, "opt_moments", ""),
+                                  tcfg.quantized_opt_state)
+            policy = MemoryPolicy(name=fmt, moments=fmt)
+        else:
+            tcfg = dataclasses.replace(
+                tcfg, opt_moments=policy.moments,
+                quantized_opt_state=(policy.moments == "int8"))
+        self.policy = policy
+        self.replay = ReplayTrainingBuffer(replay_capacity,
+                                           dtype=policy.replay_dtype)
         self._member_step = make_train_step(loss_fn, tcfg)
+        if policy.params_dtype != "float32":
+            pd = jnp.dtype(policy.params_dtype)
+            cparams = jax.tree.map(
+                lambda x: x.astype(pd)
+                if jnp.issubdtype(jnp.asarray(x).dtype, jnp.floating) else x,
+                cparams)
 
         # stacked TrainState: every leaf (step, params, mu, nu) grows a
         # leading K axis; adamw moments start as zeros_like(params) so the
@@ -164,7 +198,10 @@ class CommitteeTrainer:
 
         def fused(cstate, xb, yb, size, key):
             idx = self._draw_indices(key, size)             # (K, B)
-            mb = {"x": xb[idx], "y": yb[idx]}               # (K, B, d) gather
+            # (K, B, d) gather; cast back to fp32 ON DEVICE so a bf16
+            # replay ring never leaks its storage dtype into the loss math
+            mb = {"x": xb[idx].astype(jnp.float32),
+                  "y": yb[idx].astype(jnp.float32)}
             new_state, metrics = jax.vmap(self._member_step)(cstate, mb)
             # per-member quarantine: a member whose step produced a
             # non-finite loss or any non-finite parameter is rolled back to
@@ -316,20 +353,68 @@ class CommitteeTrainer:
         host conversion finishes before the next step can donate the
         buffers away."""
         with self._state_lock:
+            # QTensor moments snapshot NATIVELY: tree.map hits their int8
+            # ``q`` / fp32 ``scale`` leaves, never a dequantized fp32 blob
             return {
                 "cstate": jax.tree.map(np.asarray, self.cstate),
+                "memory_policy": dataclasses.asdict(self.policy),
                 "step_seq": self._step_seq,
                 "steps_done": self.steps_done,
                 "rounds": self.rounds,
                 "replay": self.replay.state_dict(),
             }
 
+    @staticmethod
+    def _snapshot_formats(cstate) -> Optional[Dict[str, str]]:
+        """Infer {moments, params_dtype} from a snapshot's leaves (legacy
+        snapshots carry no policy metadata).  None if the structure is too
+        foreign to inspect — the structural check below handles that."""
+        try:
+            mu_leaves = jax.tree.leaves(
+                cstate.opt.mu, is_leaf=lambda x: isinstance(x, QTensor))
+            p_leaves = jax.tree.leaves(cstate.params)
+        except AttributeError:
+            return None
+        if any(isinstance(l, QTensor) for l in mu_leaves):
+            moments = "int8"
+        elif any(np.asarray(l).dtype == jnp.bfloat16
+                 for l in jax.tree.leaves(cstate.opt.mu)):
+            moments = "bf16"
+        else:
+            moments = "fp32"
+        params_dtype = ("bfloat16" if any(
+            np.asarray(l).dtype == jnp.bfloat16 for l in p_leaves)
+            else "float32")
+        return {"moments": moments, "params_dtype": params_dtype}
+
     def load_state_dict(self, state: Dict[str, Any]):
         """Restore a ``state_dict`` snapshot if it structurally matches the
         current committee; mismatches (different K, param shapes, or
         optimizer layout) are skipped with a warning — training re-starts
-        from the constructor state instead of crashing at trace time."""
+        from the constructor state instead of crashing at trace time.
+
+        A MEMORY-POLICY mismatch is different: the snapshot is valid data
+        in another storage format, and silently re-quantizing (or worse,
+        reinterpreting sqrt-space int8 nu as fp32) would corrupt the run —
+        so it raises ``ValueError`` instead."""
         restored = jax.tree.map(jnp.asarray, state["cstate"])
+        snap_policy = state.get("memory_policy")
+        if snap_policy is None:
+            snap_policy = self._snapshot_formats(restored)
+        if snap_policy is not None:
+            mine = {"moments": self.policy.moments,
+                    "params_dtype": self.policy.params_dtype}
+            bad = {k: (snap_policy[k], mine[k]) for k in mine
+                   if k in snap_policy and snap_policy[k] != mine[k]}
+            if bad:
+                raise ValueError(
+                    "committee-trainer snapshot memory policy does not "
+                    "match the configured policy — refusing to silently "
+                    "re-format optimizer state: "
+                    + ", ".join(f"{k}: snapshot={s!r} vs config={c!r}"
+                                for k, (s, c) in sorted(bad.items()))
+                    + ". Restore with a matching memory_policy (or retrain "
+                    "from scratch).")
         cur_leaves, cur_def = jax.tree.flatten(self.cstate)
         new_leaves, new_def = jax.tree.flatten(restored)
         if cur_def != new_def or any(

@@ -31,7 +31,8 @@ def make_train_state(params: Any, train_cfg: TrainConfig) -> TrainState:
     return TrainState(
         step=jnp.zeros((), jnp.int32),
         params=params,
-        opt=adamw_init(params, quantized=train_cfg.quantized_opt_state),
+        opt=adamw_init(params, quantized=train_cfg.quantized_opt_state,
+                       moments=getattr(train_cfg, "opt_moments", "")),
     )
 
 
@@ -50,6 +51,7 @@ def make_train_step(
         beta1=train_cfg.beta1, beta2=train_cfg.beta2, eps=train_cfg.eps,
         weight_decay=train_cfg.weight_decay,
         quantized=train_cfg.quantized_opt_state,
+        moments=getattr(train_cfg, "opt_moments", ""),
     )
     grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
     accum = max(1, train_cfg.accum_steps)

@@ -1,0 +1,550 @@
+"""Memory-diet committee scaling tests (optim/memory_policy.py):
+
+* property suite for ``optim/adamw.py`` int8 block quantization —
+  roundtrip error bounded by the per-block absmax scale, shape/axis/dtype
+  preservation, zero/constant/non-divisible-block/0-d edges, double-
+  quantize idempotence, in-block monotonicity (the sqrt(nu) ordering the
+  Adam denominator relies on);
+* parity — ``CommitteeTrainer`` under int8/bf16 moment policies tracks the
+  fp32 baseline at IDENTICAL data order over a full retrain schedule, and
+  ``poison_member`` quarantine stays exact under every policy;
+* checkpoint — a quantized stacked TrainState survives state_dict /
+  ``PAL.checkpoint`` restore BIT-identically (QTensor q/scale leaves
+  included, never dequantized on save), and restoring a snapshot whose
+  policy mismatches the configured one raises a clear error;
+* ``launch/dryrun.committee_state_bytes`` — the committee-stacking-aware
+  optimizer-memory estimate is pinned against measured buffer bytes;
+* tentpole acceptance — bf16 replay ring halves storage and append bytes,
+  K=32 int8 committee trains and scores through the fused one-dispatch
+  engine path, policies compose on the host mesh bit-identically.
+"""
+import pickle
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                                  # tier-1 has no hypothesis
+    from _hypothesis_fallback import given, settings, st
+
+from repro.configs.pal_potential import PALRunConfig
+from repro.core import CommitteeSpec, PAL, UserGene, UserOracle
+from repro.core import committee as cmte
+from repro.data.replay import ReplayTrainingBuffer
+from repro.optim.adamw import QTensor, dequantize, quantize
+from repro.optim.memory_policy import (
+    MemoryPolicy, member_state_nbytes, resolve_policy, stacked_state_nbytes,
+)
+from repro.training.committee_trainer import CommitteeTrainer
+
+K, IN_DIM, HIDDEN, OUT_DIM = 4, 6, 16, 3
+POLICIES = ("fp32", "bf16", "int8")
+
+
+def _apply(p, x):
+    return jnp.tanh(x @ p["w1"] + p["b1"]) @ p["w2"] + p["b2"]
+
+
+def _loss(p, batch):
+    pred = _apply(p, batch["x"])
+    return jnp.mean((pred - batch["y"]) ** 2), {}
+
+
+def _members(seed=0, k=K):
+    rng = np.random.RandomState(seed)
+    return [{
+        "w1": jnp.asarray(rng.randn(IN_DIM, HIDDEN).astype(np.float32) * .3),
+        "b1": jnp.asarray(rng.randn(HIDDEN).astype(np.float32) * .1),
+        "w2": jnp.asarray(rng.randn(HIDDEN, OUT_DIM).astype(np.float32) * .3),
+        "b2": jnp.asarray(rng.randn(OUT_DIM).astype(np.float32) * .1),
+    } for _ in range(k)]
+
+
+def _data(n=40, seed=1):
+    rng = np.random.RandomState(seed)
+    return (rng.randn(n, IN_DIM).astype(np.float32),
+            rng.randn(n, OUT_DIM).astype(np.float32))
+
+
+def _trainer(policy, cparams=None, **kw):
+    if cparams is None:
+        cparams = cmte.stack_members(_members())
+    kw.setdefault("steps", 10)
+    kw.setdefault("batch", 8)
+    kw.setdefault("lr", 1e-2)
+    kw.setdefault("replay_capacity", 64)
+    kw.setdefault("seed", 0)
+    return CommitteeTrainer(_loss, cparams, memory_policy=policy, **kw)
+
+
+def _leaves_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    return len(la) == len(lb) and all(
+        np.array_equal(np.asarray(x), np.asarray(y))
+        for x, y in zip(la, lb))
+
+
+def _per_element_scale(t: QTensor) -> np.ndarray:
+    """Broadcast the blocked scale back to the source shape."""
+    s = np.asarray(t.scale, np.float32)
+    if s.ndim == 0:
+        return s
+    sm = np.moveaxis(s, t.axis, -1)
+    full = np.repeat(sm, t.block, axis=-1)
+    return np.moveaxis(full, -1, t.axis)
+
+
+# ---------------------------------------------------------------------------
+# int8 block quantization — property suite
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.tuples(st.integers(1, 5), st.integers(1, 40)),
+       st.floats(min_value=-3.0, max_value=3.0),
+       st.integers(0, 10 ** 6))
+def test_quantize_roundtrip_error_bounded_by_block_scale(shape, offset, seed):
+    """|x - deq(q(x))| <= scale/2 per element: round-to-nearest against the
+    per-block absmax scale is the whole error budget — no outlier in one
+    block may inflate the error bound of another block."""
+    rng = np.random.RandomState(seed % (2 ** 31))
+    x = (rng.randn(*shape) * rng.uniform(1e-3, 10.0)
+         + offset).astype(np.float32)
+    t = quantize(jnp.asarray(x))
+    y = np.asarray(dequantize(t))
+    bound = 0.5 * _per_element_scale(t) + 1e-7
+    assert np.all(np.abs(x - y) <= bound)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.tuples(st.integers(1, 7), st.integers(1, 130)),
+       st.integers(0, 10 ** 6))
+def test_quantize_preserves_shape_axis_and_dtypes(shape, seed):
+    rng = np.random.RandomState(seed % (2 ** 31))
+    x = rng.randn(*shape).astype(np.float32)
+    t = quantize(jnp.asarray(x))
+    assert t.q.shape == x.shape
+    assert t.q.dtype == jnp.int8
+    assert t.scale.dtype == jnp.float32
+    n = x.shape[t.axis]
+    assert n % t.block == 0                      # block divides the axis
+    want = list(x.shape)
+    want[t.axis] = n // t.block
+    assert t.scale.shape == tuple(want)
+    assert np.asarray(dequantize(t)).shape == x.shape
+
+
+def test_quantize_zero_and_constant_tensors_are_exact():
+    z = quantize(jnp.zeros((3, 256)))
+    assert np.all(np.asarray(z.q) == 0)
+    assert np.all(np.asarray(dequantize(z)) == 0.0)
+    # a constant block hits absmax exactly: q = ±127, roundtrip exact
+    for c in (2.5, -0.125):
+        t = quantize(jnp.full((4, 128), c, jnp.float32))
+        np.testing.assert_allclose(np.asarray(dequantize(t)), c, rtol=1e-6)
+
+
+def test_quantize_non_divisible_and_scalar_edges():
+    # 7 is prime: block collapses to 7 (one block per row-dim)
+    t7 = quantize(jnp.arange(7, dtype=jnp.float32))
+    assert t7.block == 7 and t7.scale.shape == (1,)
+    # 130 = 2*5*13: largest divisor <= 128 is 65 -> scale dim 2, in place
+    x130 = np.random.RandomState(0).randn(3, 130).astype(np.float32)
+    t130 = quantize(jnp.asarray(x130), axis=1)
+    assert t130.block == 65 and t130.axis == 1
+    assert t130.scale.shape == (3, 2)
+    bound = 0.5 * _per_element_scale(t130) + 1e-7
+    assert np.all(np.abs(x130 - np.asarray(dequantize(t130))) <= bound)
+    # 0-d scalar round-trips through the [None] path
+    s = quantize(jnp.float32(-1.75))
+    assert s.q.shape == () and s.scale.shape == ()
+    np.testing.assert_allclose(np.asarray(dequantize(s)), -1.75, rtol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 128), st.integers(0, 10 ** 6))
+def test_double_quantize_is_idempotent(n, seed):
+    """quantize(dequantize(t)) reproduces t: q bitwise, scale allclose —
+    re-checkpointing quantized moments must not drift."""
+    rng = np.random.RandomState(seed % (2 ** 31))
+    x = jnp.asarray(rng.randn(2, n).astype(np.float32) * 4.0)
+    t1 = quantize(x)
+    t2 = quantize(dequantize(t1), axis=t1.axis)
+    assert np.array_equal(np.asarray(t1.q), np.asarray(t2.q))
+    np.testing.assert_allclose(np.asarray(t1.scale), np.asarray(t2.scale),
+                               rtol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 128), st.integers(0, 10 ** 6))
+def test_quantize_monotone_within_block(n, seed):
+    """Order-preserving inside a block (shared scale + round-to-nearest):
+    nu is stored as sqrt(nu), and a monotonicity violation there would let
+    a SMALLER second moment produce a SMALLER Adam denominator."""
+    rng = np.random.RandomState(seed % (2 ** 31))
+    x = np.sort(np.abs(rng.randn(n)).astype(np.float32))
+    t = quantize(jnp.asarray(x))
+    y = np.asarray(dequantize(t))
+    if t.scale.shape == (1,):                    # single shared block only
+        assert np.all(np.diff(y) >= 0)
+
+
+def test_sqrt_nu_storage_bounds_denominator_error():
+    """The reason for sqrt-space storage: quantizing sqrt(nu) keeps the
+    roundtrip error of the Adam DENOMINATOR linear in the block scale even
+    for tiny nu entries sharing a block with a large absmax."""
+    nu = np.concatenate([np.full(127, 1e-6), [4.0]]).astype(np.float32)
+    snu = np.sqrt(nu)
+    deq = np.asarray(dequantize(quantize(jnp.asarray(snu))))
+    # denominator error <= half an int8 step of the sqrt-space scale
+    assert np.max(np.abs(deq - snu)) <= 0.5 * (snu.max() / 127.0) + 1e-7
+
+
+# ---------------------------------------------------------------------------
+# MemoryPolicy resolution + footprint accounting
+# ---------------------------------------------------------------------------
+
+
+def test_policy_presets_and_validation():
+    assert MemoryPolicy.named("int8").moments == "int8"
+    assert resolve_policy(None) is None
+    assert resolve_policy("bf16").moments == "bf16"
+    p = MemoryPolicy(name="x", moments="int8", replay_dtype="bfloat16")
+    assert resolve_policy(p) is p
+    with pytest.raises(ValueError, match="unknown"):
+        MemoryPolicy.named("fp16")
+    with pytest.raises(ValueError, match="unknown"):
+        MemoryPolicy(moments="int4")
+    with pytest.raises(ValueError, match="replay_dtype"):
+        MemoryPolicy(replay_dtype="float16")
+    with pytest.raises(TypeError):
+        resolve_policy(42)
+
+
+def _opt_nbytes(member_params, moments):
+    """Optimizer-subtree bytes per member under a moment format."""
+    from repro.configs.base import TrainConfig
+    from repro.training.train_step import make_train_state
+    sds = jax.eval_shape(
+        lambda p: make_train_state(p, TrainConfig(opt_moments=moments)),
+        member_params)
+    return sum(int(np.prod(l.shape)) * np.dtype(l.dtype).itemsize
+               for l in jax.tree.leaves(sds.opt))
+
+
+def test_stacked_footprint_shrinks_with_policy():
+    """int8 moments must land well under the 40%-of-fp32 optimizer-state
+    gate at the accounting level (the benchmark measures the same on
+    device); total TrainState bytes shrink monotonically too."""
+    m = _members(k=1)[0]
+    by = {p: stacked_state_nbytes(m, 64, MemoryPolicy.named(p))
+          for p in POLICIES}
+    assert by["fp32"] == 64 * member_state_nbytes(m, MemoryPolicy.named("fp32"))
+    assert by["int8"] < by["bf16"] < by["fp32"]
+    opt = {p: 64 * _opt_nbytes(m, p) for p in POLICIES}
+    assert opt["int8"] <= 0.40 * opt["fp32"]     # the ISSUE's bytes gate
+    assert opt["bf16"] <= 0.55 * opt["fp32"]
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_estimate_matches_measured_buffer_bytes(policy):
+    """satellite: the dryrun committee estimate == sum of the actual device
+    buffer nbytes of the stacked TrainState, for every policy."""
+    tr = _trainer(policy)                        # backend init BEFORE dryrun
+    measured = sum(int(np.asarray(l).nbytes)
+                   for l in jax.tree.leaves(tr.cstate))
+    from repro.launch.dryrun import committee_state_bytes
+    est = committee_state_bytes(_members(k=1)[0], K, policy=tr.policy)
+    assert est == measured
+
+
+def test_dryrun_estimate_accounts_for_stacking_and_quantization():
+    from repro.configs.base import TrainConfig
+    from repro.launch.dryrun import committee_state_bytes
+    m = _members(k=1)[0]
+    one = committee_state_bytes(m, 1)
+    assert committee_state_bytes(m, 16) == 16 * one          # K-aware
+    q = committee_state_bytes(m, 16,
+                              train_cfg=TrainConfig(quantized_opt_state=True))
+    assert q == committee_state_bytes(m, 16, policy="int8")  # legacy knob
+    assert q < committee_state_bytes(m, 16)                  # format-aware
+
+
+# ---------------------------------------------------------------------------
+# parity under identical data order
+# ---------------------------------------------------------------------------
+
+
+def test_policy_parity_full_schedule_same_data_order():
+    """bootstrap=False => every policy sees the IDENTICAL minibatch
+    sequence; narrow moment storage must track the fp32 loss trajectory
+    over a full retrain schedule, not just one step."""
+    rng = np.random.RandomState(1)
+    xs = rng.randn(48, IN_DIM).astype(np.float32)
+    ys = np.tile(np.sin(2 * xs[:, :1]), (1, OUT_DIM)).astype(np.float32)
+    batch = {"x": jnp.asarray(xs), "y": jnp.asarray(ys)}
+
+    def full_loss(tr):                           # per-member, whole dataset
+        return np.array([float(_loss(cmte.member(tr.cparams, i), batch)[0])
+                         for i in range(K)])
+
+    final = {}
+    for policy in POLICIES:
+        tr = _trainer(policy, bootstrap=False, seed=3)
+        tr.add_blocks(list(zip(xs, ys)))
+        before = full_loss(tr)
+        tr.train(steps=30)
+        final[policy] = full_loss(tr)
+        assert np.all(final[policy] < before)    # every member learned
+    for policy in ("bf16", "int8"):
+        np.testing.assert_allclose(final[policy], final["fp32"],
+                                   rtol=0.15, atol=5e-3)
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_poison_quarantine_exact_under_every_policy(policy):
+    """poison_member + the fused step's non-finite rollback must stay exact
+    whatever the moment storage: the poisoned member's params AND stored
+    moments (QTensor leaves included) are bitwise frozen while the healthy
+    members keep advancing."""
+    xs, ys = _data()
+    tr = _trainer(policy, bootstrap=True, seed=7)
+    tr.add_blocks(list(zip(xs, ys)))
+    tr.train(steps=3)
+    tr.poison_member(1)
+    frozen_mu = jax.tree.map(
+        lambda l: np.asarray(l[1]).copy(), tr.cstate.opt.mu)
+    frozen_step = int(np.asarray(tr.cstate.step[1]))
+    healthy_w1 = np.asarray(tr.cparams["w1"][0]).copy()
+
+    tr.train(steps=4)
+    assert tr.last_member_ok is not None
+    assert not tr.last_member_ok[1]
+    assert tr.last_member_ok[[0, 2, 3]].all()
+    # poisoned member rolled back every step: moments + step bitwise frozen
+    assert _leaves_equal(
+        frozen_mu, jax.tree.map(lambda l: np.asarray(l[1]), tr.cstate.opt.mu))
+    assert int(np.asarray(tr.cstate.step[1])) == frozen_step
+    assert np.all(np.isnan(np.asarray(tr.cparams["w1"][1])))
+    # healthy members advanced and stayed finite
+    assert not np.array_equal(np.asarray(tr.cparams["w1"][0]), healthy_w1)
+    for i in (0, 2, 3):
+        assert np.all(np.isfinite(np.asarray(tr.cparams["w1"][i])))
+
+
+def test_host_mesh_int8_bit_identical_to_unsharded():
+    """The degenerate 1x1 host mesh must not perturb quantized training:
+    committee_shardings over QTensor leaves is layout-only."""
+    from repro.launch.mesh import make_host_mesh
+    xs, ys = _data()
+    tr_plain = _trainer("int8", bootstrap=True, seed=11)
+    tr_mesh = _trainer("int8", bootstrap=True, seed=11,
+                       mesh=make_host_mesh())
+    for tr in (tr_plain, tr_mesh):
+        tr.add_blocks(list(zip(xs, ys)))
+        tr.train(steps=6)
+    assert _leaves_equal(tr_plain.cstate, tr_mesh.cstate)
+
+
+# ---------------------------------------------------------------------------
+# replay-ring storage dtype
+# ---------------------------------------------------------------------------
+
+
+def test_replay_bf16_halves_ring_and_append_bytes():
+    xs, ys = _data(32)
+    buf32 = ReplayTrainingBuffer(64)
+    buf16 = ReplayTrainingBuffer(64, dtype="bfloat16")
+    buf32.append(xs, ys)
+    buf16.append(xs, ys)
+    x32, _, n32 = buf32.arrays()
+    x16, _, n16 = buf16.arrays()
+    assert n32 == n16 == 32
+    assert x16.dtype == jnp.bfloat16 and x32.dtype == jnp.float32
+    assert x16.nbytes * 2 == x32.nbytes
+    assert buf16.bytes_to_device * 2 == buf32.bytes_to_device
+    # gather values agree up to bf16 rounding
+    np.testing.assert_allclose(np.asarray(x16[:n16], np.float32),
+                               np.asarray(x32[:n32]), rtol=1e-2, atol=1e-2)
+
+
+def test_replay_snapshot_preserves_storage_dtype():
+    xs, ys = _data(16)
+    buf = ReplayTrainingBuffer(32, dtype="bfloat16")
+    buf.append(xs, ys)
+    sd = buf.state_dict()
+    assert sd["dtype"] == "bfloat16"
+    assert np.asarray(sd["x"]).dtype == jnp.bfloat16  # no widen-on-save
+    fresh = ReplayTrainingBuffer(32)                  # fp32-configured
+    fresh.load_state_dict(sd)
+    assert fresh.dtype == "bfloat16"                  # snapshot wins
+    assert fresh.arrays()[0].dtype == jnp.bfloat16
+    # legacy fp32 snapshot (no dtype key) restores as fp32
+    buf32 = ReplayTrainingBuffer(32)
+    buf32.append(xs, ys)
+    legacy = buf32.state_dict()
+    legacy.pop("dtype")
+    into = ReplayTrainingBuffer(32, dtype="bfloat16")
+    into.load_state_dict(legacy)
+    assert into.dtype == "float32"
+
+
+# ---------------------------------------------------------------------------
+# checkpoint: native quantized leaves + policy-mismatch refusal
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_trainer_snapshot_roundtrip_bit_identical(policy):
+    """state_dict -> pickle wire -> load restores the stacked TrainState
+    BIT-identically under every policy (QTensor q/scale leaves native),
+    and continued training is bit-identical to the original."""
+    xs, ys = _data()
+    tr = _trainer(policy, seed=4)
+    tr.add_blocks(list(zip(xs, ys)))
+    tr.train(steps=5)
+    wire = pickle.dumps(tr.state_dict())
+
+    tr2 = _trainer(policy, seed=4)
+    tr2.load_state_dict(pickle.loads(wire))
+    assert _leaves_equal(tr.cstate, tr2.cstate)
+    if policy == "int8":
+        mu_leaves = jax.tree.leaves(
+            tr2.cstate.opt.mu, is_leaf=lambda x: isinstance(x, QTensor))
+        assert all(isinstance(l, QTensor) for l in mu_leaves)
+        assert all(l.q.dtype == jnp.int8 for l in mu_leaves)
+    tr.train(steps=3)
+    tr2.train(steps=3)
+    assert _leaves_equal(tr.cstate, tr2.cstate)
+
+
+def test_snapshot_policy_mismatch_raises_not_dequantizes():
+    """An int8 snapshot into an fp32-policy trainer (and vice versa) is a
+    hard error naming the mismatch — never a silent re-format."""
+    xs, ys = _data()
+    tr_i8 = _trainer("int8")
+    tr_i8.add_blocks(list(zip(xs, ys)))
+    tr_i8.train(steps=2)
+    snap = tr_i8.state_dict()
+    with pytest.raises(ValueError, match="memory policy"):
+        _trainer("fp32").load_state_dict(snap)
+    with pytest.raises(ValueError, match="int8"):
+        _trainer("bf16").load_state_dict(snap)
+    # legacy snapshot without metadata: format is INFERRED from the leaves
+    snap2 = {k: v for k, v in snap.items() if k != "memory_policy"}
+    with pytest.raises(ValueError, match="memory policy"):
+        _trainer("fp32").load_state_dict(snap2)
+    # and the matching policy still restores it
+    tr_ok = _trainer("int8")
+    tr_ok.load_state_dict(snap2)
+    assert _leaves_equal(tr_i8.cstate, tr_ok.cstate)
+
+
+def test_params_dtype_mismatch_raises():
+    bf = MemoryPolicy(name="w", moments="fp32", params_dtype="bfloat16")
+    tr_bf = _trainer(bf)
+    with pytest.raises(ValueError, match="params_dtype"):
+        _trainer("fp32").load_state_dict(tr_bf.state_dict())
+
+
+# ---------------------------------------------------------------------------
+# PAL runtime integration
+# ---------------------------------------------------------------------------
+
+
+class _Gene(UserGene):
+    def __init__(self, rank, rd):
+        super().__init__(rank, rd)
+        self.rng = np.random.RandomState(rank)
+
+    def generate_new_data(self, data_to_gene):
+        return False, self.rng.randn(IN_DIM).astype(np.float32)
+
+
+class _Oracle(UserOracle):
+    def run_calc(self, inp):
+        y = np.tile(np.sin(2 * inp[:1]), OUT_DIM).astype(np.float32)
+        return inp, y
+
+
+def _pal(tmp, **kw):
+    cfg = PALRunConfig(
+        result_dir=tmp, gene_process=2, orcl_process=1, pred_process=1,
+        ml_process=2, retrain_size=6, std_threshold=0.05, patience=3,
+        train_steps=20, train_batch=8, train_lr=1e-2,
+        train_replay_capacity=128, **kw)
+    return PAL(cfg, make_generator=_Gene, make_oracle=_Oracle,
+               committee=CommitteeSpec(_apply, cmte.stack_members(_members())),
+               loss_fn=_loss)
+
+
+def test_pal_checkpoint_roundtrip_quantized_policy():
+    """PAL.checkpoint under train_memory_policy='int8': the quantized
+    stacked TrainState survives save/restore bit-identically and the
+    restored weights publish to the engine device-to-device."""
+    tmp = tempfile.mkdtemp()
+    pal = _pal(tmp, train_memory_policy="int8",
+               train_replay_dtype="bfloat16")
+    assert pal.committee_trainer.policy.moments == "int8"
+    assert pal.committee_trainer.replay.dtype == "bfloat16"
+    xs, ys = _data(20)
+    pal.committee_trainer.add_blocks(list(zip(xs, ys)))
+    pal.committee_trainer.train(steps=7)
+    pal.checkpoint()
+
+    pal2 = _pal(tmp, train_memory_policy="int8",
+                train_replay_dtype="bfloat16")
+    pal2._restore()
+    t1, t2 = pal.committee_trainer, pal2.committee_trainer
+    assert t2.steps_done == t1.steps_done == 7
+    assert _leaves_equal(t1.cstate, t2.cstate)
+    assert t2.replay.dtype == "bfloat16"
+    assert pal2.engine.refresh_host_bytes == 0   # zero-copy handoff intact
+    t1.train(steps=2)
+    t2.train(steps=2)
+    assert _leaves_equal(t1.cstate, t2.cstate)
+
+
+def test_pal_restore_policy_mismatch_raises():
+    tmp = tempfile.mkdtemp()
+    pal = _pal(tmp, train_memory_policy="int8")
+    xs, ys = _data(20)
+    pal.committee_trainer.add_blocks(list(zip(xs, ys)))
+    pal.committee_trainer.train(steps=3)
+    pal.checkpoint()
+    pal2 = _pal(tmp)                             # fp32-configured run
+    with pytest.raises(ValueError, match="memory policy"):
+        pal2._restore()
+
+
+# ---------------------------------------------------------------------------
+# tentpole acceptance: big-K committee through the fused paths
+# ---------------------------------------------------------------------------
+
+
+def test_k32_int8_trains_and_scores_through_fused_engine():
+    """K=32 with int8 moments + bf16 replay: trains through the ONE fused
+    dispatch and scores through FusedEngine via the zero-copy device
+    handoff — the memory-diet K-scaling path end to end."""
+    from repro.core.acquisition import FusedEngine
+    k = 32
+    cparams = cmte.stack_members(_members(seed=2, k=k))
+    pol = MemoryPolicy(name="diet", moments="int8", replay_dtype="bfloat16")
+    tr = CommitteeTrainer(_loss, cparams, steps=4, batch=8, lr=1e-2,
+                          replay_capacity=64, seed=0, memory_policy=pol)
+    xs, ys = _data()
+    tr.add_blocks(list(zip(xs, ys)))
+    out = tr.train()
+    assert out["loss"].shape == (k,)
+    assert np.all(np.isfinite(out["loss"]))
+
+    eng = FusedEngine(_apply, cparams, 0.05, impl="xla")
+    eng.refresh_from_device(tr.snapshot_cparams())
+    res = eng.score(xs[:8])
+    assert res.scalar_std.shape == (8,)
+    assert np.all(np.isfinite(res.scalar_std))
+    assert eng.refresh_host_bytes == 0
