@@ -4,7 +4,7 @@
 PY := python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: check test bench-smoke bench bench-check docs-check
+.PHONY: check test bench-smoke bench bench-check docs docs-check
 
 # sequential by construction (recipe lines, not prerequisites): under
 # `make -j` prerequisite targets run concurrently, and bench-check must
@@ -25,6 +25,7 @@ bench-smoke:
 	$(PY) benchmarks/committee_uq.py --quick
 	$(PY) benchmarks/budget_controller.py --quick
 	$(PY) benchmarks/serving_queue.py --quick
+	$(PY) benchmarks/serving_tier.py --quick
 	$(PY) -m benchmarks.run --only train --smoke
 	$(PY) -m benchmarks.run --only memory --smoke
 	$(PY) benchmarks/fault_recovery.py --quick
@@ -36,9 +37,16 @@ bench-smoke:
 bench-check:
 	$(PY) tools/check_bench.py
 
-# docs smoke: run every ```python snippet in README.md / docs/*.md and
-# verify intra-repo markdown links resolve
+# regenerate the generated docs (docs/config.md from the config
+# dataclasses) — run after changing PALRunConfig / PotentialConfig
+docs:
+	$(PY) tools/gen_config_docs.py
+
+# docs smoke: docs/config.md must be byte-identical to a fresh
+# regeneration, every ```python snippet in README.md / docs/*.md must
+# run, and intra-repo markdown links must resolve
 docs-check:
+	$(PY) tools/gen_config_docs.py --check
 	$(PY) tools/check_docs.py
 
 bench:

@@ -11,28 +11,32 @@ from typing import Tuple
 
 @dataclass(frozen=True)
 class PotentialConfig:
-    name: str = "pal-potential"
-    n_atoms: int = 8
+    name: str = "pal-potential"      # scenario tag (result paths, logs)
+    n_atoms: int = 8                 # atoms per configuration
     committee_size: int = 4          # paper §3.1 uses 4 NNs
-    hidden: Tuple[int, ...] = (128, 128)
+    hidden: Tuple[int, ...] = (128, 128)  # MLP hidden-layer widths
     n_rbf: int = 32                  # radial basis features per pair
-    r_cut: float = 6.0
-    dtype: str = "float32"
+    r_cut: float = 6.0               # descriptor cutoff radius (Å)
+    dtype: str = "float32"           # parameter/descriptor dtype
 
 
 @dataclass(frozen=True)
 class PALRunConfig:
     """Mirrors the paper's AL_SETTING block (SI S3)."""
 
-    result_dir: str = "results/pal_run"
+    result_dir: str = "results/pal_run"  # checkpoints / progress output dir
     pred_process: int = 1            # committee is one vmapped SPMD program
-    orcl_process: int = 4
-    gene_process: int = 8
-    ml_process: int = 1
+    orcl_process: int = 4            # oracle worker threads (ab initio ranks)
+    gene_process: int = 8            # host generator threads (ignored when
+                                     # fleet_walkers > 0)
+    ml_process: int = 1              # per-member trainer threads (legacy
+                                     # path; the fused trainer is one loop)
     retrain_size: int = 20           # batch size of increment retraining set
-    dynamic_oracle_list: bool = True
-    fixed_size_data: bool = True
-    progress_save_interval: float = 60.0
+    dynamic_oracle_list: bool = True  # oracles register/deregister at
+                                     # runtime (elastic pool)
+    fixed_size_data: bool = True     # pad labeled blocks to fixed shapes
+                                     # (stable jit signatures)
+    progress_save_interval: float = 60.0  # seconds between progress dumps
     std_threshold: float = 0.05      # prediction_check uncertainty threshold
     patience: int = 5                # generator steps allowed in high-uncertainty
     weight_sync_every: int = 1       # publish weights every N retrain rounds
@@ -43,12 +47,13 @@ class PALRunConfig:
                                      # inference is an implicit throttle)
     rolling_buffer_size: int = 0     # >0 enables rolling training set (Use Case 2)
     oracle_timeout: float = 30.0     # fault tolerance: requeue after timeout
-    max_oracle_retries: int = 2
+    max_oracle_retries: int = 2      # redispatches before a task FAILS
     checkpoint_every: float = 0.0    # seconds; 0 disables
     checkpoint_every_iters: int = 0  # autosave every N exchange iterations
                                      # (progress-based twin of
                                      # checkpoint_every; 0 disables)
-    seed: int = 0
+    seed: int = 0                    # base RNG seed (committee init, LSH
+                                     # projections, jitter)
     # --- supervised fault tolerance (core/supervisor.py) ------------------
     supervise: bool = True           # False: first loop crash escalates to
                                      # a StopToken (the seed's fail-stop),
@@ -130,7 +135,44 @@ class PALRunConfig:
     serve_max_wait_ms: float = 2.0   # queue deadline: a pending request is
                                      # dispatched at the latest this many
                                      # ms after it was enqueued, even if
-                                     # the microbatch is not full
+                                     # the microbatch is not full (the
+                                     # INITIAL deadline when the latency
+                                     # controller is on)
+    # --- multi-tenant serving tier (ISSUE 9) ------------------------------
+    serve_rate_limit: float = 0.0    # >0: per-client token-bucket rate
+                                     # limit (rows/second); a client over
+                                     # its bucket gets a typed RateLimited
+                                     # rejection instead of queue space.
+                                     # 0 disables rate limiting
+    serve_rate_burst: float = 0.0    # token-bucket capacity (rows); 0
+                                     # defaults to one second of burst
+                                     # (max(serve_rate_limit, 1))
+    serve_latency_target_ms: float = 0.0  # >0: adaptive deadline — a
+                                     # latency PI controller (the oracle
+                                     # budget controller re-aimed at p99)
+                                     # steers the effective queue deadline
+                                     # toward this served-p99 target.
+                                     # 0 keeps the static serve_max_wait_ms
+    serve_wait_min_ms: float = 0.05  # adaptive-deadline lower authority
+                                     # bound (ms)
+    serve_wait_max_ms: float = 50.0  # adaptive-deadline upper authority
+                                     # bound (ms)
+    serve_latency_window: int = 64   # served requests per p99 measurement
+                                     # / controller update
+    serve_cache_buckets: int = 0     # >0: LSH answer cache — confident
+                                     # repeat requests short-circuit before
+                                     # the device (hash-space size; entries
+                                     # bounded by 4 per bucket).  The cache
+                                     # invalidates wholesale on every
+                                     # weight refresh.  0 disables
+    serve_cache_std_max: float = 0.0  # only answers with scalar_std <=
+                                     # this (and not rule-selected) are
+                                     # cached; 0 falls back to
+                                     # std_threshold
+    serve_cache_tol: float = 0.0     # L-inf match radius around the cached
+                                     # key row; 0 = bit-identical rows only
+                                     # (cache hit == fresh dispatch,
+                                     # exactly)
     # --- fused committee training (training/committee_trainer.py) ---------
     # Active when BOTH committee=CommitteeSpec(...) AND loss_fn= are passed
     # to PAL: the per-member ml_process trainer threads collapse into ONE

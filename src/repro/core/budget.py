@@ -44,6 +44,23 @@ from repro.core.acquisition import (
 
 
 # ---------------------------------------------------------------------------
+# Locality-sensitive bucketing (shared by RollingReweightRule and the
+# serving tier's LSH answer cache)
+# ---------------------------------------------------------------------------
+
+
+def lsh_projection(in_dim: int, seed: int, n_proj: int = 1) -> np.ndarray:
+    """The fixed random projection both LSH consumers hash with: a seeded
+    ``(in_dim, n_proj)`` float32 Gaussian matrix.  ``RollingReweightRule``
+    uses one column (its trace-time constant); ``serving/cache.
+    LSHAnswerCache`` stacks several columns to cut bucket collisions.
+    Deterministic in ``(in_dim, seed, n_proj)`` so bucket assignment is
+    stable across processes and restarts."""
+    return np.random.RandomState(seed).randn(in_dim, n_proj) \
+        .astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
 # Oracle-rate controller (pure jnp — traceable into the fused dispatch)
 # ---------------------------------------------------------------------------
 
@@ -110,6 +127,80 @@ class OracleBudgetController:
         ema = state["ema_rate"] + (rate - state["ema_rate"]) * alpha
         return {"threshold": thr, "integral": integral, "ema_rate": ema,
                 "rounds": state["rounds"] + 1}
+
+
+# ---------------------------------------------------------------------------
+# Latency controller (the SAME multiplicative PI, steering a queue deadline
+# toward a served-p99 target instead of a threshold toward an oracle rate)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class LatencyController:
+    """Adaptive ``ServingQueue`` deadline: steer ``max_wait_ms`` so the
+    observed per-request p99 tracks ``target_ms``.
+
+    This is the :class:`OracleBudgetController` control law re-aimed —
+    the observed-over-target p99 ratio plays the role of the realized
+    oracle rate (target 1.0), and the steered "threshold" is the queue
+    deadline (same leaky integral, same multiplicative-exponential step,
+    same clip bounds; host floats instead of device scalars because the
+    update runs between microbatch dispatches, not inside one).  The
+    gains are NEGATED relative to the budget rule because the plant
+    responds the other way around: p99 above target must SHRINK the
+    deadline (smaller microbatches, less queueing delay), p99 under
+    target can GROW it (bigger microbatches, better amortization) — the
+    queue trades batch size for deadline automatically as load shifts.
+    The multiplicative-exponential update keeps the gains scale-free: the
+    same ``kp``/``ki`` work for a 1 ms and a 100 ms target.
+
+    ``wait_min_ms``/``wait_max_ms`` bound the controller's authority the
+    same way ``thr_min``/``thr_max`` bound the budget rule: a load spike
+    cannot push the deadline somewhere it takes a whole horizon to
+    recover from, and the deadline can never go to zero (which would
+    forfeit all batching) or to seconds (which would blow every SLO).
+    """
+
+    target_ms: float
+    kp: float = 0.7
+    ki: float = 0.12
+    horizon: int = 12             # update windows: integral leak + EMA
+    wait_min_ms: float = 0.05
+    wait_max_ms: float = 50.0
+
+    def init_state(self, wait_init_ms: float) -> Dict[str, Any]:
+        return {
+            "threshold": float(np.clip(wait_init_ms, self.wait_min_ms,
+                                       self.wait_max_ms)),
+            "integral": 0.0,
+            "ema_rate": 1.0,
+            "rounds": 0,
+        }
+
+    def update(self, state: Dict[str, Any], p99_ms) -> Dict[str, Any]:
+        """One control step from one observed p99 window (the
+        OracleBudgetController law with ``rate = p99/target``, ``target =
+        1.0``, gains negated).  Host-side floats rather than jnp scalars:
+        the update runs in the serving dispatcher thread between
+        microbatch dispatches, where a handful of eager device ops per
+        window would stall the very latencies being controlled.  Returns
+        the new state; ``wait_ms(state)`` reads the steered deadline."""
+        rel = float(p99_ms) / max(self.target_ms, 1e-6)
+        err = rel - 1.0
+        leak = 1.0 - 1.0 / max(self.horizon, 1)
+        integral = state["integral"] * leak + err
+        wait = float(np.clip(
+            state["threshold"] * np.exp(-(self.kp * err
+                                          + self.ki * integral)),
+            self.wait_min_ms, self.wait_max_ms))
+        alpha = 1.0 / max(self.horizon, 1)
+        ema = state["ema_rate"] + (rel - state["ema_rate"]) * alpha
+        return {"threshold": wait, "integral": integral, "ema_rate": ema,
+                "rounds": state["rounds"] + 1}
+
+    @staticmethod
+    def wait_ms(state: Dict[str, Any]) -> float:
+        return float(state["threshold"])
 
 
 # ---------------------------------------------------------------------------
@@ -233,8 +324,7 @@ class RollingReweightRule(SelectionRule):
     def _bucket_ids(self, x):
         x = jnp.asarray(x, jnp.float32)
         in_dim = int(x.shape[-1])          # static under jit
-        proj = np.random.RandomState(self.seed).randn(in_dim) \
-            .astype(np.float32)            # trace-time constant
+        proj = lsh_projection(in_dim, self.seed)[:, 0]  # trace-time constant
         z = x @ jnp.asarray(proj)
         idx = jnp.floor(z / jnp.float32(self.bucket_width)).astype(jnp.int32)
         return jnp.mod(idx, self.n_buckets)

@@ -278,11 +278,23 @@ class PAL:
 
             self.server = CommitteeServer(
                 self.engine, self.oracle_buffer, monitor=self.monitor)
-            # queue-batched serving: many small requests -> one fused
-            # dispatch (serving/queue.py); size-or-deadline trigger
+            # queue-batched serving tier: many small requests -> one fused
+            # dispatch (serving/queue.py), multi-tenant fairness + rate
+            # limits + adaptive deadline + LSH answer cache (ISSUE 9)
             if getattr(run_cfg, "serve_max_batch", 0) > 0:
                 from repro.serving.queue import QueueConfig, ServingQueue
 
+                cache = None
+                if int(getattr(run_cfg, "serve_cache_buckets", 0)) > 0:
+                    from repro.serving.cache import LSHAnswerCache
+
+                    cache = LSHAnswerCache(
+                        int(run_cfg.serve_cache_buckets),
+                        std_max=float(
+                            getattr(run_cfg, "serve_cache_std_max", 0.0)
+                            or run_cfg.std_threshold),
+                        tol=float(getattr(run_cfg, "serve_cache_tol", 0.0)),
+                        seed=int(run_cfg.seed))
                 self.serve_queue = ServingQueue(
                     self.server,
                     QueueConfig(
@@ -294,8 +306,21 @@ class PAL:
                         breaker_failures=int(getattr(
                             run_cfg, "serve_breaker_failures", 0)),
                         breaker_reset_s=float(getattr(
-                            run_cfg, "serve_breaker_reset_s", 5.0))),
-                    monitor=self.monitor)
+                            run_cfg, "serve_breaker_reset_s", 5.0)),
+                        rate_limit=float(getattr(
+                            run_cfg, "serve_rate_limit", 0.0)),
+                        rate_burst=float(getattr(
+                            run_cfg, "serve_rate_burst", 0.0)),
+                        latency_target_ms=float(getattr(
+                            run_cfg, "serve_latency_target_ms", 0.0)),
+                        wait_min_ms=float(getattr(
+                            run_cfg, "serve_wait_min_ms", 0.05)),
+                        wait_max_ms=float(getattr(
+                            run_cfg, "serve_wait_max_ms", 50.0)),
+                        latency_window=int(getattr(
+                            run_cfg, "serve_latency_window", 64))),
+                    monitor=self.monitor,
+                    cache=cache)
 
         # --- runtime machinery ----------------------------------------------
         self.stop_event = threading.Event()
@@ -311,6 +336,11 @@ class PAL:
             self.stop_event,
             policies=policies_from_config(run_cfg),
             seed=run_cfg.seed)
+        # the serving tier reports through the supervisor too: one
+        # snapshot() is the whole degradation surface (docs/operations.md)
+        if self.serve_queue is not None:
+            self.supervisor.register_health(
+                "serve_queue", self.serve_queue.health)
         # trainer crash recovery: the parked trainer-channel irecv and the
         # trained-round dirty flag live OUTSIDE the loop body, so a
         # supervised restart resumes the round (replay ring + TrainState are
@@ -732,18 +762,20 @@ class PAL:
                                      else None)
         r["oracle_rate_serve"] = sv_queued / sv_scored if sv_scored else None
         if self.serve_queue is not None:
-            r["serve_queue_dispatches"] = self.serve_queue.dispatches
-            r["serve_queue_batched_requests"] = \
-                self.serve_queue.batched_requests
-            # degradation-aware serving health: breaker state, shed/failure
-            # counts — the signal operators act on before the run degrades
-            r["serve_queue_health"] = self.serve_queue.health()
+            # ONE health() snapshot (taken under the queue's lock) feeds
+            # every serve_queue_* key — dispatch counts can never be torn
+            # against the breaker state / per-client counters they explain
+            qh = self.serve_queue.health()
+            r["serve_queue_dispatches"] = qh["dispatches"]
+            r["serve_queue_batched_requests"] = qh["batched_requests"]
+            r["serve_queue_health"] = qh
         # fault-tolerance observability (ISSUE 6): last crash + restart
         # tally from the supervisor, committee quarantine floor from the
         # engine (min finite members seen in any scored round), chaos
         # events fired so far when a FaultPlan is installed
         sup = self.supervisor.snapshot()
         r["last_fault"] = sup["last_fault"]
+        r["supervisor"] = sup       # incl. registered component health
         r["thread_restarts"] = self.supervisor.total_restarts()
         r["uq_finite_members_min"] = getattr(
             self.engine, "last_finite_min", None)

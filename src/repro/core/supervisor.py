@@ -110,6 +110,7 @@ class Supervisor:
         self._rng = random.Random(seed)
         self.last_fault: Optional[FaultRecord] = None
         self.faults: List[FaultRecord] = []
+        self._health: Dict[str, Callable[[], Any]] = {}
 
     # -------------------------------------------------------------- policy
     def policy(self, loop_class: str) -> FailurePolicy:
@@ -154,15 +155,36 @@ class Supervisor:
         with self._lock:
             return sum(self._restarts.values())
 
+    def register_health(self, name: str, fn: Callable[[], Any]):
+        """Attach a component health probe (e.g. the serving queue's
+        ``health``): ``snapshot()['components'][name]`` carries its latest
+        payload, so one supervisor snapshot is the whole degradation
+        surface."""
+        with self._lock:
+            self._health[name] = fn
+
     def snapshot(self) -> Dict[str, Any]:
         """Observability payload for ``PAL.report()``."""
         with self._lock:
-            return {
+            probes = dict(self._health)
+            snap = {
                 "last_fault": (self.last_fault.as_dict()
                                if self.last_fault else None),
                 "faults_total": len(self.faults),
                 "restarts": dict(self._restarts),
             }
+        # probes run OUTSIDE self._lock: each takes its component's own
+        # lock (the serving queue's health() does) and nesting the
+        # supervisor lock around them invites lock-order inversions
+        if probes:
+            comps: Dict[str, Any] = {}
+            for name, fn in probes.items():
+                try:
+                    comps[name] = fn()
+                except BaseException as e:  # noqa: BLE001 — probe, not fatal
+                    comps[name] = {"error": repr(e)}
+            snap["components"] = comps
+        return snap
 
     # ----------------------------------------------------------------- run
     def run(self, name: str, loop_class: str, fn: Callable, *args,

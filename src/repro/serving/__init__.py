@@ -1,4 +1,8 @@
+from repro.serving.cache import LSHAnswerCache  # noqa: F401
 from repro.serving.engine import (  # noqa: F401
     CommitteeServer, GenerationResult, ServeEngine,
 )
-from repro.serving.queue import QueueConfig, ServingQueue  # noqa: F401
+from repro.serving.queue import (  # noqa: F401
+    CircuitOpen, QueueConfig, QueueOverloaded, RateLimited,
+    ServingQueue, ServingRejected,
+)

@@ -79,6 +79,17 @@ class CommitteeServer:
         # ``out_dim=`` if callers vstack a stream that may START empty
         self._out_dim = int(out_dim)
 
+    def weights_generation(self) -> Tuple[int, ...]:
+        """Identity of the weights currently answering requests: the
+        engine's ``refresh_from`` version plus its ``refresh_from_device``
+        count.  Moves exactly when a weight refresh lands — the serving
+        tier's ``LSHAnswerCache`` tags every fill with this and drops
+        everything the moment it changes (a cached answer never outlives
+        the weights that produced it)."""
+        eng = self.engine
+        return (int(getattr(eng, "version", 0)),
+                int(getattr(eng, "device_refreshes", 0)))
+
     def predict(self, batch_inputs: Sequence[np.ndarray]
                 ) -> Tuple[np.ndarray, Any]:
         """Score one request batch: rows of shape (in_dim,) (or anything

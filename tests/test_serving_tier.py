@@ -1,0 +1,555 @@
+"""Multi-tenant serving tier tests (ISSUE 9).
+
+* **Fairness**: deficit-round-robin microbatch composition under a
+  skewed backlog — a flooding tenant is bounded to its share, small
+  tenants finish early, nobody starves (deterministic: the dispatcher is
+  stalled while the backlog builds, then every composed batch is
+  inspected).
+* **Rate limiting**: per-client token buckets with an injected clock —
+  shedding is a deterministic function of (submitted rows, virtual
+  time), isolated per client, typed ``RateLimited``.
+* **Answer cache**: a cache hit is BIT-IDENTICAL to a fresh dispatch;
+  uncertain rows are never cached; partial hits dispatch fresh (bypass);
+  every weight refresh invalidates.
+* **Adaptive deadline**: ``LatencyController`` converges onto the p99
+  target from both over- and under-shoot on a synthetic plant (within
+  the 25% acceptance band), and the live queue steers
+  ``effective_wait_ms`` in the right direction from both sides.
+* **Observability**: ``health()`` is one consistent snapshot with
+  per-client counters; ``PAL.report()`` derives every serve_queue_* key
+  from it; the supervisor snapshot carries the queue as a component.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import acquisition as acq
+from repro.core import budget as bud
+from repro.core import committee as cmte
+from repro.serving import (
+    CircuitOpen, CommitteeServer, LSHAnswerCache, QueueConfig,
+    QueueOverloaded, RateLimited, ServingQueue, ServingRejected,
+)
+
+import jax.numpy as jnp
+
+K, IN_DIM, OUT_DIM = 5, 6, 3
+
+
+def _committee(seed=0):
+    rng = np.random.RandomState(seed)
+    members = [{"w": jnp.asarray(rng.randn(IN_DIM, OUT_DIM)
+                                 .astype(np.float32) * 0.5)}
+               for _ in range(K)]
+    return members, cmte.stack_members(members), (lambda p, x: x @ p["w"])
+
+
+def _server(threshold=0.4, seed=0, **kw):
+    _, cparams, apply_fn = _committee(seed)
+    eng = acq.FusedEngine(apply_fn, cparams, threshold, impl="xla")
+    return CommitteeServer(eng, None, **kw), eng
+
+
+def _rows(n, seed=1, scale=1.0):
+    rng = np.random.RandomState(seed)
+    return [(rng.randn(IN_DIM) * scale).astype(np.float32)
+            for _ in range(n)]
+
+
+class _StubServer:
+    """Deterministic server: records every microbatch's client ids
+    (encoded in row[0]) and can stall so a backlog builds up."""
+
+    def __init__(self):
+        self.batches = []                 # list of lists of client ids
+        self.stall = None                 # threading.Event to wait on
+        self.started = threading.Event()  # set when a dispatch arrives
+
+    def predict(self, rows):
+        self.started.set()
+        if self.stall is not None:
+            self.stall.wait(10)
+            self.stall = None             # stall only the first dispatch
+        self.batches.append([int(r[0]) for r in rows])
+        n = len(rows)
+        mean = np.zeros((n, OUT_DIM), np.float32)
+        z = np.zeros(n, np.float32)
+        return mean, acq.UQResult(mean, z, z.copy(), np.zeros(n, bool),
+                                  np.full(n, K, np.int32))
+
+
+def _tagged_row(client_id):
+    r = np.zeros(IN_DIM, np.float32)
+    r[0] = client_id
+    return r
+
+
+# ---------------------------------------------------------------------------
+# typed rejection hierarchy
+# ---------------------------------------------------------------------------
+
+
+def test_rejection_hierarchy():
+    assert issubclass(QueueOverloaded, ServingRejected)
+    assert issubclass(CircuitOpen, ServingRejected)
+    assert issubclass(RateLimited, ServingRejected)
+    assert issubclass(ServingRejected, RuntimeError)
+
+
+# ---------------------------------------------------------------------------
+# fairness: deficit round-robin under a skewed backlog
+# ---------------------------------------------------------------------------
+
+
+def test_drr_bounds_flooding_tenant_to_its_share():
+    """One tenant floods 64 requests before 7 small tenants submit 8
+    each.  FIFO would serve the flood first (small tenants finish after
+    batch 8); DRR gives every backlogged tenant its share of each
+    microbatch, so the small tenants all finish by batch ~5 while the
+    hog still gets its share — nobody starves."""
+    srv = _StubServer()
+    srv.stall = threading.Event()
+    q = ServingQueue(srv, QueueConfig(max_batch=16, max_wait_ms=2.0))
+    try:
+        # primer occupies the dispatcher so the backlog builds atomically
+        primer = q.submit([_tagged_row(0)], client="hog")
+        assert srv.started.wait(10)
+        futs = [q.submit([_tagged_row(0)], client="hog")
+                for _ in range(64)]
+        for c in range(1, 8):
+            futs += [q.submit([_tagged_row(c)], client=f"t{c}")
+                     for _ in range(8)]
+        srv.stall.set()
+        primer.result(timeout=10)
+        for f in futs:
+            f.result(timeout=30)
+    finally:
+        q.close(timeout=10)
+    batches = srv.batches[1:]             # drop the primer batch
+    # while all 8 tenants are backlogged every batch carries each
+    # tenant's share (quantum = 16 rows / 8 tenants = 2)
+    for b in batches[:4]:
+        counts = {c: b.count(c) for c in range(8)}
+        assert all(counts[c] == 2 for c in range(8)), counts
+    # small tenants are fully served by batch 4; under FIFO the flood's
+    # 64 rows would have consumed the first 4 batches outright
+    served_small = sum(b.count(c) for b in batches[:4] for c in range(1, 8))
+    assert served_small == 7 * 8
+    # and the flooding tenant was never starved either
+    assert all(b.count(0) >= 1 for b in batches[:4])
+    # fairness bound over the contended window: min/max served >= 0.5
+    per_client = [sum(b.count(c) for b in batches[:4]) for c in range(8)]
+    assert min(per_client) / max(per_client) >= 0.5
+    h = q.health()
+    assert h["clients"]["hog"]["served"] == 65
+    assert all(h["clients"][f"t{c}"]["served"] == 8 for c in range(1, 8))
+
+
+def test_drr_single_client_degenerates_to_fifo():
+    """All traffic under one (default) client tag is plain FIFO — the
+    PR-4 ordering guarantee is unchanged."""
+    server, eng = _server()
+    rows = _rows(12, seed=2)
+    direct = eng.score(rows, advance=False)
+    with ServingQueue(server, QueueConfig(max_batch=12,
+                                          max_wait_ms=200.0)) as q:
+        outs = [f.result(timeout=10)
+                for f in [q.submit([r]) for r in rows]]
+    assert q.dispatches == 1
+    for i, (mean, uq) in enumerate(outs):
+        np.testing.assert_array_equal(mean[0], direct.mean[i])
+        np.testing.assert_array_equal(uq.mask[0], direct.mask[i])
+
+
+def test_drr_oversized_request_still_dispatched_alone():
+    srv = _StubServer()
+    with ServingQueue(srv, QueueConfig(max_batch=4, max_wait_ms=20.0)) as q:
+        mean, uq = q.predict([_tagged_row(9) for _ in range(11)],
+                             client="big")
+    assert mean.shape == (11, OUT_DIM) and len(uq.mask) == 11
+    assert q.dispatches == 1
+
+
+# ---------------------------------------------------------------------------
+# per-client token-bucket rate limiting (deterministic via injected clock)
+# ---------------------------------------------------------------------------
+
+
+class _FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def _limited_queue(clock, rate=10.0, burst=5.0, **kw):
+    srv = _StubServer()
+    q = ServingQueue(srv, QueueConfig(max_batch=64, max_wait_ms=1.0,
+                                      rate_limit=rate, rate_burst=burst,
+                                      **kw),
+                     clock=clock)
+    return q, srv
+
+
+def test_rate_limit_sheds_deterministically():
+    clock = _FakeClock()
+    q, _ = _limited_queue(clock)
+    try:
+        futs = [q.submit([_tagged_row(0)], client="a") for _ in range(5)]
+        # burst of 5 spent at t=0: the 6th is shed, typed
+        with pytest.raises(RateLimited):
+            q.submit([_tagged_row(0)], client="a")
+        # refill is exactly rate * elapsed virtual time
+        clock.t = 0.1                     # 10 rows/s * 0.1s = 1 token
+        futs.append(q.submit([_tagged_row(0)], client="a"))
+        with pytest.raises(RateLimited):
+            q.submit([_tagged_row(0)], client="a")
+        # a multi-row request costs its row count
+        clock.t = 0.4                     # +3 tokens
+        with pytest.raises(RateLimited):
+            q.submit([_tagged_row(0)] * 4, client="a")
+        futs.append(q.submit([_tagged_row(0)] * 3, client="a"))
+        for f in futs:
+            f.result(timeout=10)
+        h = q.health()
+        assert h["rate_limited"] == 3
+        assert h["clients"]["a"]["shed"] == 3
+        assert h["clients"]["a"]["served"] == 7
+    finally:
+        q.close(timeout=10)
+
+
+def test_rate_limit_is_per_client():
+    clock = _FakeClock()
+    q, _ = _limited_queue(clock)
+    try:
+        for _ in range(5):
+            q.submit([_tagged_row(0)], client="a")
+        with pytest.raises(RateLimited):
+            q.submit([_tagged_row(0)], client="a")
+        # client b has its own untouched bucket
+        fut = q.submit([_tagged_row(1)], client="b")
+        fut.result(timeout=10)
+        h = q.health()
+        assert h["clients"]["b"]["shed"] == 0
+        assert h["clients"]["a"]["shed"] == 1
+    finally:
+        q.close(timeout=10)
+
+
+def test_rate_limit_disabled_by_default():
+    srv = _StubServer()
+    with ServingQueue(srv, QueueConfig(max_batch=64, max_wait_ms=1.0)) as q:
+        futs = [q.submit([_tagged_row(0)], client="a") for _ in range(200)]
+        for f in futs:
+            f.result(timeout=10)
+    assert q.health()["rate_limited"] == 0
+
+
+# ---------------------------------------------------------------------------
+# LSH answer cache
+# ---------------------------------------------------------------------------
+
+
+def _cached_queue(std_max=100.0, tol=0.0, threshold=1e9, **kw):
+    server, eng = _server(threshold=threshold)
+    cache = LSHAnswerCache(256, std_max=std_max, tol=tol)
+    q = ServingQueue(server, QueueConfig(max_batch=16, max_wait_ms=2.0,
+                                         **kw),
+                     cache=cache)
+    return q, server, eng, cache
+
+
+def test_cache_hit_bit_identical_to_fresh_dispatch():
+    q, server, eng, cache = _cached_queue()
+    try:
+        rows = _rows(4, seed=30)
+        fresh_mean, fresh_uq = q.predict(rows)
+        d0 = q.dispatches
+        hit_mean, hit_uq = q.predict(rows)          # full cache hit
+        assert q.dispatches == d0                   # no device dispatch
+        np.testing.assert_array_equal(hit_mean, fresh_mean)
+        np.testing.assert_array_equal(hit_uq.scalar_std, fresh_uq.scalar_std)
+        np.testing.assert_array_equal(hit_uq.component_std,
+                                      fresh_uq.component_std)
+        np.testing.assert_array_equal(hit_uq.mask, fresh_uq.mask)
+        np.testing.assert_array_equal(hit_uq.finite_members,
+                                      fresh_uq.finite_members)
+        s = cache.stats()
+        assert s["hits"] == 4 and s["insertions"] == 4
+        assert q.health()["cache_hit_requests"] == 1
+    finally:
+        q.close(timeout=10)
+
+
+def test_cache_invalidated_on_weight_refresh():
+    q, server, eng, cache = _cached_queue()
+    try:
+        rows = _rows(3, seed=31)
+        mean_old, _ = q.predict(rows)
+        assert q.predict(rows)[0] is not None and q.dispatches == 1
+        # a device-resident weight refresh moves the generation
+        new_params = jnp.asarray(np.asarray(eng.cparams["w"]) * 2.0)
+        eng.refresh_from_device({"w": new_params})
+        mean_new, _ = q.predict(rows)               # MUST re-dispatch
+        assert q.dispatches == 2
+        assert cache.stats()["invalidations"] >= 1
+        assert not np.array_equal(mean_new, mean_old)
+        np.testing.assert_allclose(mean_new, mean_old * 2.0, rtol=1e-6)
+    finally:
+        q.close(timeout=10)
+
+
+def test_cache_never_serves_uncertain_rows():
+    # threshold 0 -> every row is rule-selected (mask=True) -> never cached
+    q, server, eng, cache = _cached_queue(threshold=0.0)
+    try:
+        rows = _rows(3, seed=32, scale=2.0)
+        q.predict(rows)
+        q.predict(rows)
+        assert q.dispatches == 2                    # both hit the device
+        assert cache.stats()["insertions"] == 0
+    finally:
+        q.close(timeout=10)
+
+
+def test_cache_partial_hit_dispatches_whole_request():
+    q, server, eng, cache = _cached_queue()
+    try:
+        rows = _rows(2, seed=33)
+        q.predict(rows)                             # seeds the cache
+        mixed = [rows[0], _rows(1, seed=34)[0]]     # one hit + one miss
+        q.predict(mixed)
+        assert q.dispatches == 2                    # request went fresh
+        s = cache.stats()
+        assert s["bypass"] == 1                     # the unusable hit
+    finally:
+        q.close(timeout=10)
+
+
+def test_cache_opt_out_counts_bypass():
+    q, server, eng, cache = _cached_queue()
+    try:
+        rows = _rows(2, seed=35)
+        q.predict(rows)
+        q.submit(rows, use_cache=False).result(timeout=10)
+        assert q.dispatches == 2
+        assert cache.stats()["bypass"] == 2
+    finally:
+        q.close(timeout=10)
+
+
+def test_cache_std_gate_and_lru_depth():
+    cache = LSHAnswerCache(8, std_max=0.5, depth=2)
+    n = 6
+    rows = _rows(n, seed=36)
+    mean = np.arange(n * OUT_DIM, dtype=np.float32).reshape(n, OUT_DIM)
+    sstd = np.array([0.1, 0.9, 0.2, 0.1, 0.1, 0.1], np.float32)
+    mask = np.array([False, False, True, False, False, False])
+    uq = acq.UQResult(mean, sstd, np.zeros((n, OUT_DIM), np.float32),
+                      mask, np.full(n, K, np.int32))
+    cache.fill(rows, uq, (0, 0))
+    # row 1 (std too high) and row 2 (rule-selected) were skipped
+    assert cache.stats()["insertions"] == 4
+    got = cache.lookup(rows)
+    assert got[1] is None and got[2] is None
+    for i in (0, 3, 4, 5):
+        if got[i] is not None:            # depth may have evicted some
+            np.testing.assert_array_equal(got[i].mean, mean[i])
+    assert len(cache) <= 8 * 2            # n_buckets * depth bound
+
+
+def test_cache_served_while_circuit_open():
+    """Cached confident answers keep flowing while the breaker is open —
+    the device is what is broken, not the cache."""
+    q, server, eng, cache = _cached_queue(breaker_failures=1,
+                                          breaker_reset_s=60.0)
+    try:
+        rows = _rows(2, seed=37)
+        q.predict(rows)                             # seeds the cache
+        server.predict = lambda r: (_ for _ in ()).throw(
+            RuntimeError("device down"))
+        with pytest.raises(RuntimeError, match="device down"):
+            q.predict(_rows(1, seed=38))            # opens the breaker
+        assert q.health()["breaker_state"] == "open"
+        with pytest.raises(CircuitOpen):
+            q.predict(_rows(1, seed=39))
+        mean, uq = q.predict(rows)                  # full hit: still served
+        assert mean.shape == (2, OUT_DIM)
+    finally:
+        q.close(timeout=10)
+
+
+# ---------------------------------------------------------------------------
+# adaptive deadline: LatencyController convergence + live wiring
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("init_ms", [40.0, 0.1],
+                         ids=["overshoot", "undershoot"])
+def test_latency_controller_converges_within_25pct(init_ms):
+    """Closed loop on a synthetic plant p99(wait) = floor + wait: from a
+    40 ms overshoot AND a 0.1 ms undershoot the controller pulls p99 to
+    the 6 ms target within the 25% acceptance band, and stays there."""
+    lc = bud.LatencyController(target_ms=6.0, wait_min_ms=0.05,
+                               wait_max_ms=50.0)
+    st = lc.init_state(init_ms)
+    floor = 1.0
+    p99s = []
+    for _ in range(40):
+        wait = lc.wait_ms(st)
+        p99 = floor + wait                # plant: deadline-dominated p99
+        st = lc.update(st, p99)
+        p99s.append(p99)
+    tail = p99s[-10:]
+    assert all(abs(p - 6.0) / 6.0 <= 0.25 for p in tail), tail
+    # and the steered deadline respected its authority bounds throughout
+    assert 0.05 <= lc.wait_ms(st) <= 50.0
+
+
+def test_latency_controller_respects_bounds():
+    lc = bud.LatencyController(target_ms=1e9, wait_min_ms=0.5,
+                               wait_max_ms=4.0)
+    st = lc.init_state(1.0)
+    for _ in range(60):                   # p99 far below target: wait grows
+        st = lc.update(st, 0.001)
+    assert lc.wait_ms(st) == pytest.approx(4.0)
+    lc2 = bud.LatencyController(target_ms=1e-6, wait_min_ms=0.5,
+                                wait_max_ms=4.0)
+    st2 = lc2.init_state(1.0)
+    for _ in range(60):                   # p99 far above target: wait shrinks
+        st2 = lc2.update(st2, 1e3)
+    assert lc2.wait_ms(st2) == pytest.approx(0.5)
+
+
+@pytest.mark.parametrize("init_ms,expect", [(30.0, "down"), (0.05, "up")],
+                         ids=["overshoot", "undershoot"])
+def test_queue_adapts_effective_wait(init_ms, expect):
+    """Live queue: with a p99 target, the effective deadline moves in the
+    correct direction from both sides of the target."""
+    srv = _StubServer()
+    q = ServingQueue(srv, QueueConfig(
+        max_batch=256, max_wait_ms=init_ms, latency_target_ms=8.0,
+        wait_min_ms=0.05, wait_max_ms=50.0, latency_window=8))
+    try:
+        assert q.health()["effective_wait_ms"] == pytest.approx(
+            np.clip(init_ms, 0.05, 50.0))
+        for i in range(48):               # sequential: latency ~ deadline
+            q.predict([_tagged_row(0)])
+        h = q.health()
+        assert h["p99_ms"] is not None
+        if expect == "down":
+            assert h["effective_wait_ms"] < init_ms
+        else:
+            assert h["effective_wait_ms"] > init_ms
+    finally:
+        q.close(timeout=10)
+
+
+# ---------------------------------------------------------------------------
+# observability: atomic health snapshot + supervisor component
+# ---------------------------------------------------------------------------
+
+
+def test_health_snapshot_has_all_keys():
+    srv = _StubServer()
+    with ServingQueue(srv, QueueConfig(max_batch=8, max_wait_ms=1.0)) as q:
+        q.predict([_tagged_row(0)], client="a")
+        h = q.health()
+    for key in ("breaker_state", "consecutive_failures", "breaker_opens",
+                "dispatch_failures", "shed_requests", "rate_limited",
+                "cache_hit_requests", "pending_rows", "dispatches",
+                "batched_requests", "effective_wait_ms", "p99_ms",
+                "clients"):
+        assert key in h, key
+    assert h["clients"]["a"] == {"served": 1, "shed": 0, "cache_hits": 0}
+
+
+def test_supervisor_reports_registered_component_health():
+    from repro.core.supervisor import Supervisor
+
+    sup = Supervisor(None, lambda n, r: None, threading.Event())
+    sup.register_health("serve_queue", lambda: {"breaker_state": "closed"})
+    sup.register_health("broken", lambda: 1 / 0)
+    snap = sup.snapshot()
+    assert snap["components"]["serve_queue"]["breaker_state"] == "closed"
+    assert "error" in snap["components"]["broken"]   # probe errors contained
+
+
+def test_pal_wires_tier_knobs_and_reports_consistently():
+    import tempfile
+
+    from repro.configs.pal_potential import PALRunConfig
+    from repro.core import PAL, UserGene, UserModel, UserOracle
+
+    class _Gene(UserGene):
+        def __init__(self, rank, rd):
+            super().__init__(rank, rd)
+            self.rng = np.random.RandomState(rank)
+
+        def generate_new_data(self, data_to_gene):
+            return False, self.rng.randn(IN_DIM).astype(np.float32)
+
+    class _Model(UserModel):
+        def predict(self, xs):
+            return [np.zeros(OUT_DIM) for _ in xs]
+
+        def update(self, warr):
+            pass
+
+        def get_weight(self):
+            return np.zeros(IN_DIM * OUT_DIM, np.float32)
+
+        def get_weight_size(self):
+            return IN_DIM * OUT_DIM
+
+        def add_trainingset(self, dps):
+            pass
+
+        def retrain(self, req):
+            return False
+
+    class _Oracle(UserOracle):
+        def run_calc(self, inp):
+            return inp, np.zeros(OUT_DIM, np.float32)
+
+    _, cparams, apply_fn = _committee(seed=16)
+    cfg = PALRunConfig(
+        result_dir=tempfile.mkdtemp(), gene_process=2, orcl_process=0,
+        pred_process=1, ml_process=1, std_threshold=1e9,
+        serve_uq=True, serve_max_batch=8,
+        serve_rate_limit=1e6, serve_rate_burst=1e6,
+        serve_latency_target_ms=5.0, serve_wait_min_ms=0.1,
+        serve_wait_max_ms=20.0, serve_latency_window=16,
+        serve_cache_buckets=128, serve_cache_std_max=100.0)
+    pal = PAL(cfg, make_generator=_Gene, make_model=_Model,
+              make_oracle=_Oracle,
+              committee=acq.CommitteeSpec(apply_fn, cparams))
+    try:
+        qcfg = pal.serve_queue.cfg
+        assert qcfg.rate_limit == 1e6 and qcfg.latency_target_ms == 5.0
+        assert qcfg.wait_min_ms == 0.1 and qcfg.wait_max_ms == 20.0
+        assert pal.serve_queue.cache is not None
+        assert pal.serve_queue.cache.std_max == 100.0
+        rows = _rows(4, seed=60)
+        pal.serve_queue.submit(rows, client="tenant-a").result(timeout=10)
+        pal.serve_queue.submit(rows, client="tenant-a").result(timeout=10)
+        rep = pal.report()
+        qh = rep["serve_queue_health"]
+        # report()'s dispatch keys come from the SAME atomic snapshot
+        assert rep["serve_queue_dispatches"] == qh["dispatches"]
+        assert rep["serve_queue_batched_requests"] == qh["batched_requests"]
+        assert qh["clients"]["tenant-a"]["served"] == 2
+        assert qh["clients"]["tenant-a"]["cache_hits"] == 1
+        assert qh["cache"]["hits"] == 4
+        # the supervisor snapshot carries the queue as a component, and
+        # report() exposes the whole snapshot
+        assert (pal.supervisor.snapshot()["components"]["serve_queue"]
+                ["breaker_state"] == "closed")
+        assert (rep["supervisor"]["components"]["serve_queue"]
+                ["breaker_state"] == "closed")
+    finally:
+        pal.shutdown()

@@ -92,6 +92,15 @@ HEADLINE = {
         ("estimate_matches_measured", "flag", None),
         ("all_losses_finite", "flag", None),
     ),
+    "BENCH_serving_tier.json": (
+        # cache-hit-rate and scheduling dependent -> wide band; the ISSUE
+        # acceptance floor (tier serves >= the PR-4 queue) is absolute
+        ("requests_per_s_ratio_vs_pr4", "ratio_min", 0.50),
+        # worst-tenant >= 0.5x best-tenant under Zipf demand (DRR bound)
+        ("fairness_bound_ok", "flag", None),
+        # the p99 controller must hold its target within 25%
+        ("p99_target_rel_error", "abs_max", 0.25),
+    ),
     "BENCH_exploration_fleet.json": (
         # python-call-count dominated, but still wall-clock -> wide band;
         # the >= 5x acceptance floor below is absolute
@@ -109,6 +118,7 @@ FLOORS = {
     ("BENCH_committee_uq.json", "speedup_wallclock"): 2.0,
     ("BENCH_committee_train.json", "speedup_fused_retrain"): 3.0,
     ("BENCH_exploration_fleet.json", "speedup_proposals_per_s"): 5.0,
+    ("BENCH_serving_tier.json", "requests_per_s_ratio_vs_pr4"): 1.0,
 }
 
 
