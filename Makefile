@@ -30,6 +30,7 @@ bench-smoke:
 	$(PY) -m benchmarks.run --only memory --smoke
 	$(PY) benchmarks/fault_recovery.py --quick
 	$(PY) benchmarks/exploration_fleet.py --smoke
+	$(PY) benchmarks/mesh_scaleout.py --quick
 	$(PY) examples/quickstart.py --timeout 20
 
 # regression gate: headline BENCH_*.json metrics vs the committed

@@ -39,6 +39,12 @@ from repro.core import acquisition as acq
 from repro.core import budget as bud
 from repro.core import committee as cmte
 
+try:
+    from benchmarks.run import bench_meta
+except ImportError:          # running as a script from benchmarks/
+    from run import bench_meta
+
+
 try:        # `python -m benchmarks.run` (package) vs direct script run
     from benchmarks.committee_uq import (
         K, N_GEN, IN_DIM, HIDDEN, OUT_DIM, _inputs, _make_members,
@@ -150,6 +156,7 @@ def main(argv=None):
         float, jax.tree.map(np.asarray, engines["budgeted"].rule_state))
 
     report = {
+        "meta": bench_meta(),
         "config": {"K": K, "n_gen": N_GEN, "in_dim": IN_DIM,
                    "hidden": HIDDEN, "out_dim": OUT_DIM,
                    "target_rate": TARGET, "horizon": HORIZON,

@@ -42,6 +42,12 @@ from repro.core import committee as cmte
 from repro.optim.memory_policy import MemoryPolicy, stacked_state_nbytes
 from repro.training.committee_trainer import CommitteeTrainer
 
+try:
+    from benchmarks.run import bench_meta
+except ImportError:          # running as a script from benchmarks/
+    from run import bench_meta
+
+
 K_LIST = (8, 32, 64)
 POLICIES = ("fp32", "bf16", "int8")
 IN_DIM = 16
@@ -167,6 +173,7 @@ def main(argv=None):
     backends = score_all_backends(trainers[(kmax, "int8")], xs_h)
 
     report = {
+        "meta": bench_meta(),
         "config": {"K_list": list(K_LIST), "policies": list(POLICIES),
                    "in_dim": IN_DIM, "hidden": HIDDEN, "out_dim": OUT_DIM,
                    "n_data": N_DATA, "batch": BATCH,

@@ -43,6 +43,12 @@ from repro.training.committee_trainer import (
 )
 from repro.training.train_step import make_train_state, make_train_step
 
+try:
+    from benchmarks.run import bench_meta
+except ImportError:          # running as a script from benchmarks/
+    from run import bench_meta
+
+
 K = 8               # committee members (acceptance: >=3x at K=8, CPU)
 IN_DIM = 16
 HIDDEN = 64
@@ -167,6 +173,7 @@ def main(argv=None):
         store.pull_packed(i)[0].nbytes for i in range(K))
 
     report = {
+        "meta": bench_meta(),
         "config": {"K": K, "in_dim": IN_DIM, "hidden": HIDDEN,
                    "out_dim": OUT_DIM, "n_data": N_DATA, "batch": BATCH,
                    "steps_per_round": steps, "rounds": rounds,

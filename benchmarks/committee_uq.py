@@ -40,6 +40,12 @@ from repro.core import acquisition as acq
 from repro.core import committee as cmte
 from repro.core import selection as sel
 
+try:
+    from benchmarks.run import bench_meta
+except ImportError:          # running as a script from benchmarks/
+    from run import bench_meta
+
+
 K = 8               # committee members (acceptance: >=2x at K=8, n_gen=64)
 N_GEN = 64
 IN_DIM = 16
@@ -159,6 +165,7 @@ def main(argv=None):
     seq_bytes = sq_up + sq_down + sq_host
     fus_bytes = fu_up + fu_down
     report = {
+        "meta": bench_meta(),
         "config": {"K": K, "n_gen": N_GEN, "in_dim": IN_DIM,
                    "hidden": HIDDEN, "out_dim": OUT_DIM,
                    "threshold": THRESHOLD, "iters": iters,

@@ -45,6 +45,12 @@ from repro.core.buffers import OracleInputBuffer
 from repro.core.controller import Exchange, ExchangeConfig, PredictionPool
 from repro.exploration.fleet import FleetConfig, WalkerFleet
 
+try:
+    from benchmarks.run import bench_meta
+except ImportError:          # running as a script from benchmarks/
+    from run import bench_meta
+
+
 D = 24              # walker dimension (8 atoms x 3, flattened)
 K = 4               # committee members (paper §3.1)
 HIDDEN = 64
@@ -157,6 +163,7 @@ def main(argv=None):
     host_pps = n * iters / host_s
     fleet_pps = n * iters / fleet_s
     report = {
+        "meta": bench_meta(),
         "config": {"walkers": n, "dim": D, "K": K, "hidden": HIDDEN,
                    "iters": iters, "rounds": rounds,
                    "backend": jax.default_backend()},

@@ -40,6 +40,12 @@ from repro.configs.pal_potential import PALRunConfig
 from repro.core import PAL, UserGene, UserModel, UserOracle
 from repro.core.chaos import ChaosInjector, FaultEvent, FaultPlan
 
+try:
+    from benchmarks.run import bench_meta
+except ImportError:          # running as a script from benchmarks/
+    from run import bench_meta
+
+
 STANDARD_PLAN = FaultPlan(events=(
     FaultEvent("oracle.task", 2, "raise", rank="oracle0"),
     FaultEvent("oracle.task", 4, "raise", rank="oracle1"),
@@ -169,6 +175,7 @@ def main(argv=None):
     #                                            not a fault-raised StopToken
 
     report = {
+        "meta": bench_meta(),
         "config": {"window_s": window, "orcl_process": 3, "gene_process": 4,
                    "ml_process": 2, "plan_events": len(STANDARD_PLAN.events)},
         "baseline": {"labeled": base_labeled, "labels_per_s": base_rate},

@@ -16,17 +16,41 @@
                  standard chaos FaultPlan (supervised runtime)
   fleet        — device-resident exploration fleet (one fused
                  advance+score+select dispatch) vs N host generators
+  mesh         — production-mesh scale-out: fused score on a real 8-device
+                 emulated mesh vs the sequential legacy path, weak-scaling
+                 curves, and bit-identity parity flags (subprocess: the
+                 device count must be set before jax initializes)
   kernels      — Pallas-path microbenchmarks (XLA schedule, host timing)
 
 ``python -m benchmarks.run`` runs everything; ``--only <name>`` filters.
 The roofline/dry-run tables (launch/roofline.py) are separate because they
 need the 512-device XLA_FLAGS subprocess.
+
+``bench_meta()`` is the shared provenance stamp: every BENCH_*.json
+writer records the resolved platform / device kind / device count /
+process info under a ``"meta"`` key, so a report is interpretable after
+the machine that produced it is gone.
 """
 from __future__ import annotations
 
 import argparse
+import os
+import subprocess
 import sys
 import time
+
+
+def bench_meta(**extra):
+    """Provenance block for BENCH_*.json reports (platform, device kind,
+    device/process counts, emulated-device request) plus any benchmark-
+    specific extras such as ``mesh_shape``.  Initializes the jax backend —
+    writers call it at report time, never at module import."""
+    from repro.launch import platform as _platform
+
+    meta = _platform.describe()
+    meta["mesh_shape"] = str(extra.pop("mesh_shape", ""))
+    meta.update(extra)
+    return meta
 
 
 def _section(title: str):
@@ -94,6 +118,18 @@ def bench_fleet(smoke: bool):
     exploration_fleet.main(["--smoke"] if smoke else [])
 
 
+def bench_mesh(smoke: bool):
+    _section("Production-mesh scale-out (8 emulated devices, subprocess)")
+    # the emulated-device count locks on first jax backend init, and any
+    # section above may already have initialized it — so the mesh
+    # benchmark always runs in a fresh interpreter (same pattern as the
+    # roofline's 512-device tables)
+    script = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                          "mesh_scaleout.py")
+    subprocess.run([sys.executable, script]
+                   + (["--smoke"] if smoke else []), check=True)
+
+
 def bench_kernels():
     _section("Kernel microbenchmarks (XLA schedule on host)")
     import jax
@@ -143,7 +179,7 @@ def main():
     ap.add_argument("--only", default=None,
                     choices=["speedup", "overhead", "scaling", "kernels",
                              "committee_uq", "budget", "serving", "train",
-                             "memory", "fault", "fleet"])
+                             "memory", "fault", "fleet", "mesh"])
     ap.add_argument("--simulate", action="store_true",
                     help="run the measured PAL-runtime speedup simulation")
     ap.add_argument("--smoke", action="store_true",
@@ -171,6 +207,8 @@ def main():
         bench_fault(args.smoke)
     if args.only in (None, "fleet"):
         bench_fleet(args.smoke)
+    if args.only in (None, "mesh"):
+        bench_mesh(args.smoke)
     if args.only in (None, "kernels"):
         bench_kernels()
     print(f"\n# total benchmark wall time: {time.time() - t0:.1f}s")

@@ -38,6 +38,12 @@ from repro.core import committee as cmte
 from repro.launch.mesh import make_host_mesh
 from repro.serving import CommitteeServer, QueueConfig, ServingQueue
 
+try:
+    from benchmarks.run import bench_meta
+except ImportError:          # running as a script from benchmarks/
+    from run import bench_meta
+
+
 try:        # `python -m benchmarks.run` (package) vs direct script run
     from benchmarks.committee_uq import (
         K, N_GEN, IN_DIM, HIDDEN, OUT_DIM, THRESHOLD, _inputs, _make_members,
@@ -162,6 +168,7 @@ def main(argv=None):
     traces_ok = all(c == 1 for c in eng_mesh.trace_counts.values())
 
     report = {
+        "meta": bench_meta(),
         "config": {"K": K, "in_dim": IN_DIM, "hidden": HIDDEN,
                    "out_dim": OUT_DIM, "threshold": THRESHOLD,
                    "n_requests": n_requests, "request_size": 1,

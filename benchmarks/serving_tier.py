@@ -53,6 +53,12 @@ from repro.serving import (
     CommitteeServer, LSHAnswerCache, QueueConfig, ServingQueue,
 )
 
+try:
+    from benchmarks.run import bench_meta
+except ImportError:          # running as a script from benchmarks/
+    from run import bench_meta
+
+
 TENANTS = 8
 ZIPF_S = 1.1
 MAX_BATCH = 64          # = one engine shape bucket
@@ -281,6 +287,7 @@ def main(argv=None):
     rel_err = abs(ctl_p99 - LATENCY_TARGET_MS) / LATENCY_TARGET_MS
 
     report = {
+        "meta": bench_meta(),
         "config": {"K": K, "in_dim": IN_DIM, "hidden": HIDDEN,
                    "out_dim": OUT_DIM, "tenants": TENANTS,
                    "zipf_s": ZIPF_S, "windows": windows,

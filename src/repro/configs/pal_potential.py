@@ -90,11 +90,13 @@ class PALRunConfig:
     uq_bucket: int = 8               # min power-of-two n_gen jit bucket
     uq_mesh: str = ""                # '' (single device) | 'host'
                                      # (degenerate 1x1 mesh, CI parity) |
-                                     # 'production' (16x16 data x model):
-                                     # mesh-parallel fused dispatch —
-                                     # committee over 'model' via the
-                                     # COMMITTEE sharding rules, request
-                                     # batch over 'data'
+                                     # 'scaleout' (all visible devices on
+                                     # 'data') | 'DxM' (e.g. '4x2' explicit
+                                     # data x model grid) | 'production'
+                                     # (16x16 data x model): mesh-parallel
+                                     # fused dispatch — committee over
+                                     # 'model' via the COMMITTEE sharding
+                                     # rules, request batch over 'data'
     # --- cross-round budgeted acquisition (core/budget.py) ---------------
     oracle_budget: float = 0.0       # >0: target oracle-selected fraction
                                      # per exchange round — installs the
@@ -214,6 +216,30 @@ class PALRunConfig:
     fleet_friction: float = 0.1      # 'langevin' velocity damping
     fleet_max_steps: int = 0         # stop the exchange after N fleet steps
                                      # (0 = run until another stop source)
+    # --- platform / multi-process launch (launch/platform.py,
+    # launch/distributed.py) ----------------------------------------------
+    # Process-level runtime knobs: launch scripts call
+    # `platform.configure(...)` / `distributed.initialize_from_config(cfg)`
+    # BEFORE building engines, so one config describes the whole launch.
+    platform: str = ""               # '' (auto) | 'cpu' | 'gpu' | 'tpu' —
+                                     # pinned before backend init
+    host_devices: int = 0            # >0: emulated host devices
+                                     # (--xla_force_host_platform_device_
+                                     # count=N, set before jax import) —
+                                     # how CI runs a real 8-device mesh
+                                     # on one CPU host
+    enable_x64: bool = False         # double-precision jax (oracle-side
+                                     # reference computations)
+    gpu_autotune: bool = False       # append the XLA GPU autotune flag set
+    dist_coordinator: str = ""       # 'host:port' of process 0 enables the
+                                     # jax.distributed multi-process launch
+                                     # (one jit program spanning hosts)
+    dist_processes: int = 0          # total process count in the launch
+    dist_process_id: int = -1        # this process's id (0-based); -1 reads
+                                     # JAX_PROCESS_ID / PAL_PROCESS_ID env
+    dist_cpu_collectives: str = "gloo"  # CPU cross-process collectives
+                                     # backend ('gloo' | 'mpi'); ignored
+                                     # off-CPU
 
 
 DEFAULT = PotentialConfig()

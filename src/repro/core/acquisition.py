@@ -40,6 +40,7 @@ from __future__ import annotations
 import contextlib
 import dataclasses
 import logging
+import re
 import threading
 from typing import Any, Callable, Dict, Optional, Sequence, Tuple
 
@@ -406,11 +407,15 @@ class FusedEngine(UQEngine):
         self._mesh_rules = None
         self._x_shardings: Dict[int, Any] = {}
         if mesh is not None:
-            from repro.sharding.rules import MeshRules
+            from repro.sharding.rules import MeshRules, warn_fallbacks
 
             self._mesh_rules = MeshRules(mesh, sharding_rules)
             cparams = jax.device_put(
                 cparams, self._cparams_shardings(cparams))
+            # surface divisibility fallbacks (e.g. K=3 on an 8-way model
+            # axis degrading to replicated) once, with the chosen layout
+            self._fallback_mark = warn_fallbacks(
+                self._mesh_rules, "FusedEngine")
         self.cparams = cparams
         self.threshold = float(threshold)
         self.rules = tuple(rules) if rules is not None \
@@ -419,6 +424,7 @@ class FusedEngine(UQEngine):
         # re-weighting), device-resident between rounds — an input/output
         # of the compiled dispatch, never a host round trip
         self._init_rule_state()
+        self.rule_state = self._place_replicated(self.rule_state)
         self.impl = impl
         self.min_bucket = min_bucket
         self.donate = donate
@@ -484,6 +490,82 @@ class FusedEngine(UQEngine):
             self._x_shardings[nb] = sh
         return sh
 
+    def _place_replicated(self, tree):
+        """Explicitly replicate a pytree over the mesh (no-op unsharded).
+
+        Rule state and other small carried pytrees are created on the
+        default device; at >= 2 devices, mixing a single-device-committed
+        leaf into a mesh-sharded dispatch either fails to place or pays a
+        reshard in the program prologue every round — placing once at
+        init/restore keeps the hot loop transfer-free."""
+        if self._mesh_rules is None:
+            return tree
+        from jax.sharding import NamedSharding
+        from jax.sharding import PartitionSpec as P
+
+        rep = NamedSharding(self._mesh_rules.mesh, P())
+        return jax.tree.map(lambda a: jax.device_put(jnp.asarray(a), rep),
+                            tree)
+
+    def place_carry(self, carry, nb: int):
+        """Lay a ``score_after`` carry out over the mesh: leaves whose
+        leading dimension equals the padded bucket ``nb`` (per-walker
+        state — positions, velocities, RNG keys, patience counters) shard
+        rows over the BATCH mesh axes alongside the proposal batch;
+        everything else replicates.  The exploration fleet calls this at
+        construction and checkpoint restore so the fused step+score
+        dispatch never resharding-copies the fleet each iteration.
+        No-op without a mesh."""
+        if self._mesh_rules is None:
+            return carry
+        from jax.sharding import NamedSharding
+        from jax.sharding import PartitionSpec as P
+
+        mesh = self._mesh_rules.mesh
+        rep = NamedSharding(mesh, P())
+        row_axes = self._batch_sharding(nb).spec[0] \
+            if len(self._batch_sharding(nb).spec) else None
+
+        def leaf(a):
+            a = jnp.asarray(a)
+            if a.ndim and int(a.shape[0]) == nb:
+                spec = P(row_axes, *([None] * (a.ndim - 1)))
+                return jax.device_put(a, NamedSharding(mesh, spec))
+            return jax.device_put(a, rep)
+
+        return jax.tree.map(leaf, carry)
+
+    def _constrain_preds(self, preds, nb: int):
+        """Pin the (K, nb, d) prediction tensor's in-program layout: K
+        gathered (unsharded), rows kept on the batch sharding.
+
+        The Welford committee-UQ reduction runs over K; leaving K sharded
+        over 'model' makes XLA reduce local partials then all-reduce,
+        changing the fp32 summation ORDER and costing 1-2 ULP vs the
+        unsharded program.  Gathering K before the reduction restores the
+        sequential order bit-for-bit.  Row reductions downstream (rule
+        sums/maxes over selected rows) are integer/max arithmetic — exact
+        under any row partitioning — so rows spread over EVERY free mesh
+        axis ('data' AND 'model', greedy divisibility like rules.pspec):
+        on a committee-axis mesh the gathered tensor's UQ work is then
+        row-split across the devices instead of redundantly replicated.
+        No-op without a mesh."""
+        if self._mesh_rules is None:
+            return preds
+        from jax.sharding import NamedSharding
+        from jax.sharding import PartitionSpec as P
+
+        mesh = self._mesh_rules.mesh
+        chosen, prod = [], 1
+        for a in ("data", "model"):
+            sz = mesh.shape.get(a, 1)
+            if a in mesh.shape and nb % (prod * sz) == 0:
+                chosen.append(a)
+                prod *= sz
+        row_axes = tuple(chosen) if chosen else None
+        return jax.lax.with_sharding_constraint(
+            preds, NamedSharding(mesh, P(None, row_axes, None)))
+
     def _jit_shardings(self, nb: int):
         """(in_shardings, out_shardings) for one bucket's compiled dispatch.
         Row-wise outputs inherit the batch's row partitioning; scalars and
@@ -511,7 +593,7 @@ class FusedEngine(UQEngine):
             def fused(cparams, x, n_valid, stream, rstate):
                 # trace-time counter: fires once per (bucket) compilation
                 self.trace_counts[nb] = self.trace_counts.get(nb, 0) + 1
-                preds = self.apply(cparams, x)
+                preds = self._constrain_preds(self.apply(cparams, x), nb)
                 mean, sstd, cstd, _, finite = self._ops.committee_uq(
                     preds, self.threshold, impl=self.impl,
                     block_n=self.block_n)
@@ -547,7 +629,29 @@ class FusedEngine(UQEngine):
         return fn
 
     def _pad_batch(self, list_data: Sequence[np.ndarray]):
-        """Stack generator proposals into one padded (bucket, in_dim) batch."""
+        """Stack generator proposals into one padded (bucket, in_dim) batch.
+
+        Pre-stacked 2-D input (serving microbatches, benchmark drivers)
+        takes a vectorized path — one ``np.asarray`` + block copy instead
+        of a per-row Python loop, which at mesh scale-out batch sizes
+        (hundreds of rows per dispatch) otherwise dominates the host-side
+        cost of ``score``."""
+        if isinstance(list_data, np.ndarray):
+            arr = list_data.astype(np.float32, copy=False)
+        else:
+            try:
+                arr = np.asarray(list_data, dtype=np.float32)
+            except ValueError:          # ragged rows: slow path below
+                arr = np.empty(0, np.float32)
+        if arr.ndim == 2:
+            n = arr.shape[0]
+            nb = shape_bucket(n, self.min_bucket)
+            if nb == n:
+                return np.ascontiguousarray(arr), n, nb
+            x = np.zeros((nb, arr.shape[1]), np.float32)
+            x[:n] = arr
+            return x, n, nb
+        # ragged / object input: normalize row by row
         rows = [np.asarray(x, dtype=np.float32).reshape(-1)
                 for x in list_data]
         n = len(rows)
@@ -608,7 +712,7 @@ class FusedEngine(UQEngine):
                 self.step_trace_counts[key] = \
                     self.step_trace_counts.get(key, 0) + 1
                 x, mid = step_fn(carry)
-                preds = self.apply(cparams, x)
+                preds = self._constrain_preds(self.apply(cparams, x), nb)
                 mean, sstd, cstd, _, finite = self._ops.committee_uq(
                     preds, self.threshold, impl=self.impl,
                     block_n=self.block_n)
@@ -744,6 +848,15 @@ class FusedEngine(UQEngine):
         self.device_refreshes += 1
         return 1
 
+    # ------------------------------------------------------------ snapshot
+    def load_state_dict(self, state: Sequence[Any]):
+        """Restore carried rule state, then re-place it on the mesh: a
+        checkpoint restores to host numpy -> default device, which at
+        >= 2 devices would make every subsequent dispatch reshard the
+        state in its prologue."""
+        super().load_state_dict(state)
+        self.rule_state = self._place_replicated(self.rule_state)
+
 
 class LegacyEngine(UQEngine):
     """Per-member backend for arbitrary ``UserModel`` kernels (the paper's
@@ -861,13 +974,23 @@ def wants_legacy(run_cfg, committee: Optional[CommitteeSpec],
 def resolve_mesh(run_cfg):
     """``PALRunConfig.uq_mesh`` -> a concrete mesh (or None).
 
-    '' (default) — no mesh: single-device dispatch, today's path.
-    'host'       — ``launch.mesh.make_host_mesh()``: the degenerate 1x1
-                   ('data', 'model') mesh; same computation, sharded
-                   construction exercised (CI parity).
-    'production' — ``launch.mesh.make_production_mesh()``: the 16x16
-                   ('data', 'model') pod mesh (committee over 'model',
-                   request batch over 'data').
+    ''  (default) — no mesh: single-device dispatch, today's path.
+    'host'        — ``launch.mesh.make_host_mesh()``: the degenerate 1x1
+                    ('data', 'model') mesh; same computation, sharded
+                    construction exercised (CI parity).
+    'scaleout'    — ``launch.mesh.make_scaleout_mesh()``: all visible
+                    devices on the 'data' axis (committee replicated, rows
+                    scale out) — the CI/emulated-device bring-up layout.
+    'DxM'         — e.g. ``'4x2'``: an explicit ('data', 'model') grid
+                    over the first D*M visible devices.
+    'production'  — ``launch.mesh.make_production_mesh()``: the 16x16
+                    ('data', 'model') pod mesh (committee over 'model',
+                    request batch over 'data').
+
+    Divisibility fallbacks (a committee/batch that does not divide the
+    mapped axes) are NOT silent: ``FusedEngine``/``CommitteeTrainer`` log
+    a WARNING with the chosen fallback layout at construction
+    (``sharding.rules.warn_fallbacks``).
     """
     name = getattr(run_cfg, "uq_mesh", "") or ""
     if not name:
@@ -876,10 +999,15 @@ def resolve_mesh(run_cfg):
 
     if name == "host":
         return mesh_mod.make_host_mesh()
+    if name == "scaleout":
+        return mesh_mod.make_scaleout_mesh()
     if name == "production":
         return mesh_mod.make_production_mesh()
-    raise ValueError(f"uq_mesh={name!r}: expected '', 'host' or "
-                     "'production'")
+    m = re.fullmatch(r"(\d+)x(\d+)", name)
+    if m:
+        return mesh_mod.make_scaleout_mesh(int(m.group(1)), int(m.group(2)))
+    raise ValueError(f"uq_mesh={name!r}: expected '', 'host', 'scaleout', "
+                     "'DxM' (e.g. '4x2') or 'production'")
 
 
 def make_engine(

@@ -45,10 +45,19 @@ class ReplayTrainingBuffer:
     handles a step in flight is about to dispatch with.
     """
 
-    def __init__(self, capacity: int, dtype: str = "float32"):
+    def __init__(self, capacity: int, dtype: str = "float32",
+                 sharding=None):
         assert capacity > 0
         self.capacity = int(capacity)
         self.dtype = str(dtype)         # storage dtype (gathers are fp32)
+        # optional jax.sharding.Sharding for the ring buffers.  Without it,
+        # `_write`'s jit output is COMMITTED to the default device — fine
+        # single-device, but a >= 2-device CommitteeTrainer then feeds a
+        # device-0-committed ring into a mesh-sharded train step and pays
+        # a reshard (or placement error) per step.  The trainer passes its
+        # mesh's replicated sharding so the ring lives mesh-wide from the
+        # first append and every snapshot restore.
+        self._sharding = sharding
         self._x = None                  # (capacity, dx) in storage dtype
         self._y = None                  # (capacity, dy) in storage dtype
         self._cursor = 0
@@ -68,7 +77,16 @@ class ReplayTrainingBuffer:
         def write(buf, block, start):
             return jax.lax.dynamic_update_slice_in_dim(buf, block, start, 0)
 
+        if self._sharding is not None:
+            kw["out_shardings"] = self._sharding
         self._write = jax.jit(write, **kw)
+
+    def _place(self, buf):
+        if self._sharding is None:
+            return buf
+        import jax
+
+        return jax.device_put(buf, self._sharding)
 
     def _storage_dtype(self):
         """numpy-compatible storage dtype (ml_dtypes backs bfloat16)."""
@@ -94,8 +112,10 @@ class ReplayTrainingBuffer:
         with self._lock:
             if self._x is None:
                 self._init_write()
-                self._x = jnp.zeros((self.capacity, xs.shape[1]), dt)
-                self._y = jnp.zeros((self.capacity, ys.shape[1]), dt)
+                self._x = self._place(jnp.zeros((self.capacity,
+                                                 xs.shape[1]), dt))
+                self._y = self._place(jnp.zeros((self.capacity,
+                                                 ys.shape[1]), dt))
             if (xs.shape[1] != self._x.shape[1]
                     or ys.shape[1] != self._y.shape[1]):
                 raise ValueError(
@@ -150,8 +170,10 @@ class ReplayTrainingBuffer:
             self.dtype = str(state.get("dtype",
                                        np.asarray(state["x"]).dtype))
             dt = self._storage_dtype()
-            self._x = jnp.asarray(np.asarray(state["x"]).astype(dt))
-            self._y = jnp.asarray(np.asarray(state["y"]).astype(dt))
+            self._x = self._place(jnp.asarray(np.asarray(state["x"])
+                                              .astype(dt)))
+            self._y = self._place(jnp.asarray(np.asarray(state["y"])
+                                              .astype(dt)))
             self.capacity = int(self._x.shape[0])
             self._cursor = int(state["cursor"])
             self._size = int(state["size"])

@@ -193,6 +193,11 @@ class WalkerFleet:
             "step": jnp.zeros((), jnp.int32),
             "nan_resets": jnp.zeros((), jnp.int32),
         }
+        # on a mesh, per-walker state shards rows over the 'data' axis
+        # alongside the proposal batch (scalars replicate) — without this
+        # the first score_after output commits the carry to device 0 and
+        # subsequent sharded dispatches reshard it every iteration
+        self._carry = engine.place_carry(self._carry, self.nb)
 
     # ------------------------------------------------------------- device fns
     def _step_fn(self, carry):
@@ -293,7 +298,8 @@ class WalkerFleet:
             raise ValueError(
                 f"fleet snapshot keys {sorted(state)} do not match the "
                 f"carry {sorted(self._carry)}")
-        self._carry = {k: jnp.asarray(v) for k, v in state.items()}
+        self._carry = self.engine.place_carry(
+            {k: jnp.asarray(v) for k, v in state.items()}, self.nb)
 
     # ----------------------------------------------------------------- chaos
     def poison_walker(self, i: int):

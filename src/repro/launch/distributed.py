@@ -1,0 +1,169 @@
+"""Multi-process launch path: one PAL run spanning hosts via
+``jax.distributed`` — the paper's MPI deployment story, re-done as
+jit-native collectives.
+
+The paper runs its four kernels as MPI ranks wired by explicit
+send/recv.  Here a *process* is just more devices in the same SPMD
+program: every process calls :func:`initialize` (coordinator address +
+process id/count), after which ``jax.devices()`` spans all hosts and the
+SAME fused dispatches (``FusedEngine.score``, ``CommitteeTrainer`` step)
+lay themselves out over the global mesh — XLA inserts the cross-host
+collectives, no hand-written exchange protocol.
+
+On CPU the cross-process collectives need a backend; jax ships gloo,
+which :func:`initialize` selects by default (``jax_cpu_collectives_
+implementation``) — this is what the 2-process CI smoke test exercises.
+
+Order of operations in a launcher::
+
+    from repro.launch import distributed, platform
+    platform.configure(host_devices=cfg.host_devices)   # XLA_FLAGS first
+    distributed.initialize_from_config(cfg)             # before device use
+    mesh = make_scaleout_mesh()                         # spans all hosts
+
+CLI (one process of a multi-host launch; also the CI smoke worker)::
+
+    python -m repro.launch.distributed --coordinator 127.0.0.1:9911 \
+        --processes 2 --process-id 0 --demo
+"""
+from __future__ import annotations
+
+import argparse
+import logging
+import os
+from typing import Optional
+
+log = logging.getLogger(__name__)
+
+_initialized = False
+
+
+def is_initialized() -> bool:
+    return _initialized
+
+
+def initialize(coordinator: str, num_processes: int, process_id: int,
+               *, cpu_collectives: str = "gloo") -> None:
+    """Join this process to a multi-process jax runtime.
+
+    Must run before any jax device use (backend init binds the device
+    topology).  ``coordinator`` is ``'host:port'`` of process 0 — jax's
+    built-in coordination service, no external launcher needed.
+    Idempotent per process; a second call with a live runtime raises
+    (jax cannot re-initialize a distributed backend).
+    """
+    global _initialized
+    if _initialized:
+        raise RuntimeError("jax.distributed is already initialized in this "
+                           "process")
+    import jax
+
+    if cpu_collectives:
+        # CPU cross-process collectives need an explicit implementation
+        # (gloo is bundled); harmless on GPU/TPU which bring their own
+        jax.config.update("jax_cpu_collectives_implementation",
+                          cpu_collectives)
+    jax.distributed.initialize(
+        coordinator_address=coordinator,
+        num_processes=int(num_processes),
+        process_id=int(process_id),
+    )
+    _initialized = True
+    log.info("jax.distributed up: process %d/%d, %d global / %d local "
+             "device(s)", jax.process_index(), jax.process_count(),
+             jax.device_count(), jax.local_device_count())
+
+
+def _env_process_id() -> int:
+    for var in ("PAL_PROCESS_ID", "JAX_PROCESS_ID"):
+        v = os.environ.get(var, "")
+        if v:
+            return int(v)
+    return -1
+
+
+def initialize_from_config(run_cfg) -> bool:
+    """Initialize the multi-process runtime from ``PALRunConfig`` knobs.
+
+    Returns False (no-op) when ``dist_coordinator`` is empty — the
+    single-process path stays the default and costs nothing.  The process
+    id comes from ``dist_process_id`` or, when that is -1, the
+    ``PAL_PROCESS_ID`` / ``JAX_PROCESS_ID`` env vars (so one config file
+    serves every rank of a launch).
+    """
+    coordinator = getattr(run_cfg, "dist_coordinator", "") or ""
+    if not coordinator:
+        return False
+    nproc = int(getattr(run_cfg, "dist_processes", 0))
+    if nproc <= 0:
+        raise ValueError("dist_coordinator is set but dist_processes is "
+                         f"{nproc}; need the total process count")
+    pid = int(getattr(run_cfg, "dist_process_id", -1))
+    if pid < 0:
+        pid = _env_process_id()
+    if pid < 0:
+        raise ValueError(
+            "dist_process_id is -1 and neither PAL_PROCESS_ID nor "
+            "JAX_PROCESS_ID is set — every rank needs a distinct id")
+    initialize(coordinator, nproc, pid,
+               cpu_collectives=getattr(run_cfg, "dist_cpu_collectives",
+                                       "gloo"))
+    return True
+
+
+def demo(rows_per_process: int = 4) -> float:
+    """Cross-process collective check: shard a global row batch over every
+    device in the launch, reduce it inside one jit, and return the global
+    sum (identical on every process).  The CI smoke test asserts the value
+    so a silently-degraded launch (processes not actually joined) fails
+    loudly rather than computing per-process answers.
+    """
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import Mesh, NamedSharding
+    from jax.sharding import PartitionSpec as P
+
+    devs = jax.devices()                      # GLOBAL device list
+    mesh = Mesh(np.array(devs).reshape(len(devs), 1), ("data", "model"))
+    n = rows_per_process * jax.process_count() * jax.local_device_count()
+    # globally-known input: every process constructs the same array and
+    # jax shards it — rank i's devices hold rows i*chunk:(i+1)*chunk
+    x = jnp.arange(n, dtype=jnp.float32)
+    xs = jax.device_put(x, NamedSharding(mesh, P("data")))
+
+    total = jax.jit(jnp.sum, out_shardings=NamedSharding(mesh, P()))(xs)
+    return float(total)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="one process of a multi-host PAL launch")
+    ap.add_argument("--coordinator", required=True,
+                    help="host:port of process 0")
+    ap.add_argument("--processes", type=int, required=True)
+    ap.add_argument("--process-id", type=int, default=-1,
+                    help="-1: read PAL_PROCESS_ID / JAX_PROCESS_ID")
+    ap.add_argument("--cpu-collectives", default="gloo")
+    ap.add_argument("--demo", action="store_true",
+                    help="run the cross-process collective check and print "
+                         "'DIST_OK <procs> <devices> <sum>'")
+    args = ap.parse_args(argv)
+
+    pid = args.process_id if args.process_id >= 0 else _env_process_id()
+    if pid < 0:
+        ap.error("--process-id not given and PAL_PROCESS_ID/JAX_PROCESS_ID "
+                 "unset")
+    initialize(args.coordinator, args.processes, pid,
+               cpu_collectives=args.cpu_collectives)
+    if args.demo:
+        import jax
+
+        total = demo()
+        print(f"DIST_OK {jax.process_count()} {jax.device_count()} "
+              f"{total:.1f}", flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,10 +1,10 @@
-import os
-os.environ["XLA_FLAGS"] = (
-    "--xla_force_host_platform_device_count=512 "
-    + os.environ.get("XLA_FLAGS", ""))
+from repro.launch.platform import ensure_host_devices
 
-# NOTE: the XLA_FLAGS assignment above MUST precede any jax import (device
-# count locks on first backend init), so this module docstring comes after.
+ensure_host_devices(512)
+
+# NOTE: the emulated-device request above MUST precede any jax import
+# (device count locks on first backend init), so the docstring comes after;
+# launch/platform.py is jax-import-free, keeping that ordering safe.
 """Multi-pod dry-run: lower + compile every (architecture x input shape) on
 the production meshes, with memory / cost / collective analysis.
 
@@ -24,6 +24,7 @@ Usage:
 """
 import argparse
 import json
+import os
 import re
 import time
 import traceback

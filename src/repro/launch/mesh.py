@@ -7,6 +7,7 @@ see the real single device).
 from __future__ import annotations
 
 import jax
+import numpy as np
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -23,3 +24,29 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_host_mesh():
     """Degenerate 1x1 mesh on the real host device (smoke tests)."""
     return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def make_scaleout_mesh(data: int = 0, model: int = 1):
+    """('data', 'model') mesh over the first ``data*model`` visible devices.
+
+    Unlike ``jax.make_mesh`` this accepts a SUBSET of the device pool, which
+    is what scaling curves need: the same process measures 1-, 2-, 4- and
+    8-device meshes out of 8 emulated host devices without re-launching.
+    ``data=0`` means "all devices on the data axis" — the default production
+    scale-out for fused scoring, where rows shard over ``data`` and the
+    committee replicates (see docs/scaling.md).
+    """
+    devs = jax.devices()
+    if data <= 0:
+        if len(devs) % model:
+            raise ValueError(
+                f"make_scaleout_mesh: {len(devs)} devices not divisible by "
+                f"model={model}")
+        data = len(devs) // model
+    need = data * model
+    if need > len(devs):
+        raise ValueError(
+            f"make_scaleout_mesh: need {data}x{model}={need} devices, have "
+            f"{len(devs)}")
+    grid = np.array(devs[:need]).reshape(data, model)
+    return jax.sharding.Mesh(grid, ("data", "model"))

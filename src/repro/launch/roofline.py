@@ -1,7 +1,6 @@
-import os
-os.environ["XLA_FLAGS"] = (
-    "--xla_force_host_platform_device_count=512 "
-    + os.environ.get("XLA_FLAGS", ""))
+from repro.launch.platform import ensure_host_devices
+
+ensure_host_devices(512)   # before any jax import: emulate the 512-chip pod
 
 """Three-term roofline analysis from the compiled dry-run (deliverable (g)).
 
@@ -25,6 +24,7 @@ Usage:
 """
 import argparse
 import json
+import os
 import traceback
 from typing import Any, Dict, Optional
 

@@ -60,6 +60,7 @@ class FallbackRecord:
     logical: str
     wanted: Tuple[str, ...]
     reason: str
+    chosen: Tuple[str, ...] = ()   # mesh axes actually kept for this dim
 
 
 class MeshRules:
@@ -116,7 +117,8 @@ class MeshRules:
             if dropped_reasons:
                 self.fallbacks.append(
                     FallbackRecord(name, i, logical or "?", mesh_axes,
-                                   "; ".join(dropped_reasons)))
+                                   "; ".join(dropped_reasons),
+                                   chosen=tuple(chosen)))
             if not chosen:
                 entries.append(None)
                 continue
@@ -187,6 +189,32 @@ def committee_shardings(mesh_rules: "MeshRules", cparams):
         return mesh_rules.sharding(logical, shape, name="cparams")
 
     return jax.tree.map(leaf, cparams)
+
+
+def warn_fallbacks(mesh_rules: Optional["MeshRules"], context: str,
+                   *, start: int = 0) -> int:
+    """Log a WARNING for every divisibility/axis-reuse fallback recorded on
+    ``mesh_rules`` since ``start``, naming the layout actually chosen.
+
+    A fallback is legal (the program still compiles, just with less
+    parallelism than the rules asked for) but silently losing e.g. the
+    committee axis on a K=3 committee over an 8-way mesh is exactly the
+    kind of perf cliff that hides until someone profiles — so mesh
+    consumers (``FusedEngine``, ``CommitteeTrainer``) surface it once at
+    construction.  Returns the new high-water mark into
+    ``mesh_rules.fallbacks`` so repeated calls don't re-warn old records.
+    """
+    if mesh_rules is None:
+        return start
+    recs = mesh_rules.fallbacks[start:]
+    for r in recs:
+        chosen = ",".join(r.chosen) if r.chosen else "replicated"
+        log.warning(
+            "%s: sharding fallback on %s dim %d (logical %s): wanted "
+            "mesh axes (%s) -> using (%s) [%s]",
+            context, r.tensor, r.dim, r.logical, ",".join(r.wanted),
+            chosen, r.reason)
+    return len(mesh_rules.fallbacks)
 
 
 def shard_constraint(x, mesh_rules: Optional["MeshRules"], logical_axes):

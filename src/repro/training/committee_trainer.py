@@ -118,8 +118,19 @@ class CommitteeTrainer:
                 tcfg, opt_moments=policy.moments,
                 quantized_opt_state=(policy.moments == "int8"))
         self.policy = policy
+        # the replay ring must live where the train step runs: on a mesh,
+        # `_write`'s jit output would otherwise commit the ring to device 0
+        # and every mesh-sharded step would reshard it in its prologue
+        # (or fail placement outright at >= 2 devices)
+        ring_sharding = None
+        if mesh is not None:
+            from jax.sharding import NamedSharding
+            from jax.sharding import PartitionSpec as P
+
+            ring_sharding = NamedSharding(mesh, P())
         self.replay = ReplayTrainingBuffer(replay_capacity,
-                                           dtype=policy.replay_dtype)
+                                           dtype=policy.replay_dtype,
+                                           sharding=ring_sharding)
         self._member_step = make_train_step(loss_fn, tcfg)
         if policy.params_dtype != "float32":
             pd = jnp.dtype(policy.params_dtype)
@@ -138,11 +149,13 @@ class CommitteeTrainer:
         self.mesh = mesh
         self._mesh_rules = None
         if mesh is not None:
-            from repro.sharding.rules import MeshRules, committee_shardings
+            from repro.sharding.rules import (MeshRules, committee_shardings,
+                                              warn_fallbacks)
 
             self._mesh_rules = MeshRules(mesh, sharding_rules)
             cstate = jax.device_put(
                 cstate, committee_shardings(self._mesh_rules, cstate))
+            warn_fallbacks(self._mesh_rules, "CommitteeTrainer")
         self.cstate = cstate
 
         # donation keeps steady-state training alloc-free off-CPU; it also

@@ -101,6 +101,22 @@ HEADLINE = {
         # the p99 controller must hold its target within 25%
         ("p99_target_rel_error", "abs_max", 0.25),
     ),
+    "BENCH_mesh_scaleout.json": (
+        # fused 8-device-mesh scoring vs the seed's sequential per-member
+        # path — wall-clock on emulated (time-sliced) devices -> wide
+        # band; the >= 2x acceptance floor below is absolute
+        ("speedup_mesh8_vs_legacy_1dev", "ratio_min", 0.40),
+        # weak scaling on emulated devices is dispatch-overhead bound and
+        # scheduling-noisy (single-core host time-slices all 8 devices):
+        # curve is recorded for real-hardware comparison, gated loosely
+        ("weak_scaling.ratio_8dev", "ratio_min", 0.50),
+        # bit-identity of every fused path on the (8, 1) mesh vs the
+        # unsharded engine — any False is a resharding numerics bug
+        ("parity_score", "flag", None),
+        ("parity_score_after", "flag", None),
+        ("parity_train", "flag", None),
+        ("parity_serving", "flag", None),
+    ),
     "BENCH_exploration_fleet.json": (
         # python-call-count dominated, but still wall-clock -> wide band;
         # the >= 5x acceptance floor below is absolute
@@ -119,6 +135,7 @@ FLOORS = {
     ("BENCH_committee_train.json", "speedup_fused_retrain"): 3.0,
     ("BENCH_exploration_fleet.json", "speedup_proposals_per_s"): 5.0,
     ("BENCH_serving_tier.json", "requests_per_s_ratio_vs_pr4"): 1.0,
+    ("BENCH_mesh_scaleout.json", "speedup_mesh8_vs_legacy_1dev"): 2.0,
 }
 
 
